@@ -1,0 +1,46 @@
+"""Shared benchmark helpers. Every module prints `name,us_per_call,derived`
+CSV rows (benchmarks/run.py drives them all)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import OptimizerConfig, get_config
+from repro.configs.base import InputShape
+from repro.data import make_data
+from repro.models.model import init_params
+
+
+def bench_config(arch="stablelm_1_6b", **over):
+    """BERT-class reduced-but-nontrivial config used by the CPU-run
+    benchmarks (memory/table benchmarks use the dry-run artifacts instead)."""
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, compute_dtype="float32", **over)
+
+
+def timed(fn: Callable, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6        # microseconds
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def train_setup(cfg, b, s, opt: OptimizerConfig, lr_schedule=None, seed=0):
+    from repro.core.accumulation import make_train_step
+    params = init_params(cfg, jax.random.key(seed))
+    step, opt_init = make_train_step(cfg, opt, lr_schedule=lr_schedule)
+    data = make_data(cfg, InputShape("bench", s, b, "train"), seed=seed)
+    return params, opt_init(params), jax.jit(step), data

@@ -1,0 +1,92 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+experiments/dryrun artifacts (the §Perf log is hand-written)."""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from benchmarks.roofline import analyze_record, model_flops
+
+DRYRUN = Path("experiments/dryrun")
+TARGET = Path("EXPERIMENTS.md")
+BEGIN_DR = "<!-- BEGIN AUTOGEN DRYRUN -->"
+END_DR = "<!-- END AUTOGEN DRYRUN -->"
+BEGIN_RL = "<!-- BEGIN AUTOGEN ROOFLINE -->"
+END_RL = "<!-- END AUTOGEN ROOFLINE -->"
+
+
+def load_records():
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(p.read_text())
+        tag = rec.get("tag", p.stem)
+        if "__accum-" in tag or "__pallas" in tag or "__profile-" in tag \
+                or "__engine-" in tag:
+            continue               # variant runs live in §Perf, not the table
+        recs.append(rec)
+    return recs
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | status | peak GiB/dev | HLO flops/dev "
+            "(loop-aware) | collective GiB/dev | lower+compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['tag'].split('__')[0]} "
+                        f"| {r['tag'].split('__')[1]} "
+                        f"| {r['tag'].split('__')[2]} | SKIP — {r['reason']} "
+                        f"| – | – | – | – |")
+            continue
+        c = r["cost"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+            f"| {r['memory']['peak_bytes_per_device']/2**30:.2f} "
+            f"| {c['flops_loop_aware']:.2e} "
+            f"| {r['collectives']['total']/2**30:.1f} "
+            f"| {r.get('lower_s',0)+r.get('compile_s',0):.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s | "
+            "bottleneck | MODEL/HLO flops | peak GiB | fits v5e | "
+            "what moves the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    from benchmarks.roofline import suggestion
+    for r in recs:
+        if r["status"] != "OK":
+            continue
+        a = analyze_record(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {a['compute_s']:.2e} | {a['memory_s']:.2e} "
+            f"| {a['collective_s']:.2e} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.2f} | {a['peak_gib']:.2f} "
+            f"| {'yes' if a['fits_v5e'] else 'NO'} "
+            f"| {suggestion(a['dominant'], r)} |")
+    return "\n".join(rows)
+
+
+def replace_block(text, begin, end, payload):
+    pat = re.compile(re.escape(begin) + ".*?" + re.escape(end), re.S)
+    block = f"{begin}\n{payload}\n{end}"
+    if pat.search(text):
+        return pat.sub(lambda _: block, text)
+    return text + "\n" + block + "\n"
+
+
+def main():
+    recs = load_records()
+    text = TARGET.read_text() if TARGET.exists() else "# EXPERIMENTS\n"
+    text = replace_block(text, BEGIN_DR, END_DR, dryrun_table(recs))
+    text = replace_block(text, BEGIN_RL, END_RL, roofline_table(recs))
+    TARGET.write_text(text)
+    ok = sum(1 for r in recs if r["status"] == "OK")
+    sk = sum(1 for r in recs if r["status"] == "SKIP")
+    print(f"# EXPERIMENTS.md updated: {ok} OK, {sk} SKIP records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Fig. 5 analog: training-step memory, gradient accumulation vs AdamA vs
+AdamA-layerwise, BERT-Large, mini-batch 256 seq 128, N in {2,4,8,16}.
+
+Paper claim: AdamA saves a model-gradient-sized block (~1.6 GB on BERT-Large)
+vs gradient accumulation, independent of the accumulation step count."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from benchmarks.memlib import train_step_memory
+from repro.configs import OptimizerConfig, get_config
+
+B, S = 256, 128
+
+
+def main():
+    cfg = get_config("bert_large")
+    grad_bytes = 4 * sum(
+        p.size for p in __import__("jax").tree.leaves(
+            __import__("repro.models.model", fromlist=["abstract_params"])
+            .abstract_params(cfg)))
+    for n in (2, 4, 8, 16):
+        t0 = time.perf_counter()
+        mems = {}
+        for accum in ("ga", "adama", "adama_layerwise"):
+            opt = OptimizerConfig(name="adama" if accum != "ga" else "adam",
+                                  accumulation=accum, micro_batches=n)
+            mems[accum] = train_step_memory(cfg, B, S, opt)["peak"]
+        us = (time.perf_counter() - t0) * 1e6
+        saved = mems["ga"] - mems["adama"]
+        saved_lw = mems["ga"] - mems["adama_layerwise"]
+        row(f"fig5/bert_large_n{n}", us,
+            f"ga_gib={mems['ga']/2**30:.2f};adama_gib={mems['adama']/2**30:.2f};"
+            f"layerwise_gib={mems['adama_layerwise']/2**30:.2f};"
+            f"saved_gib={saved/2**30:.2f};saved_layerwise_gib={saved_lw/2**30:.2f};"
+            f"grad_buffer_gib={grad_bytes/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Kernel micro-bench: fused AdamA accumulate / Adam apply vs unfused jnp
+reference. On CPU the Pallas kernels run in interpret mode (correctness
+instrument); the derived column reports the HBM-traffic model for TPU:
+fused accumulate = 3 reads + 2 writes vs 5 reads + 2 writes unfused."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.kernels import ops, ref
+
+N = 1 << 20     # 1M params
+
+
+def main():
+    m = jnp.zeros((N,), jnp.float32)
+    v = jnp.zeros((N,), jnp.float32)
+    g = jnp.ones((N,), jnp.bfloat16)
+    p = jnp.ones((N,), jnp.bfloat16)
+
+    jref = jax.jit(lambda m, v, g: ref.adama_accum_ref(
+        m, v, g, beta1=0.9, beta2=0.999, scale=0.125))
+    _, us_ref = timed(jref, m, v, g)
+    row("kernels/adama_accum_jnp_ref", us_ref,
+        f"bytes_model={7*4*N};n={N}")
+
+    jker = jax.jit(lambda m, v, g: ops.adama_accumulate(
+        m, v, g, beta1=0.9, beta2=0.999, scale=0.125))
+    _, us_k = timed(jker, m, v, g)
+    row("kernels/adama_accum_pallas_interp", us_k,
+        f"fused_bytes_model={5*4*N};traffic_cut=28%")
+
+    jrefa = jax.jit(lambda p, m, v: ref.adam_apply_ref(
+        p, m, v, lr=1e-3, bc1=0.9, bc2=0.99))
+    _, us_ra = timed(jrefa, p, m, v)
+    row("kernels/adam_apply_jnp_ref", us_ra, f"n={N}")
+
+    jka = jax.jit(lambda p, m, v: ops.adam_apply(
+        p, m, v, lr=1e-3, bc1=0.9, bc2=0.99))
+    _, us_ka = timed(jka, p, m, v)
+    row("kernels/adam_apply_pallas_interp", us_ka, "single-pass p,m,v read")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Memory measurement via XLA buffer assignment (the CPU-container analogue
+of torch.cuda.max_memory_allocated): lower + compile the train step on the
+single host device and read memory_analysis(). No arrays are allocated."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import OptimizerConfig
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.accumulation import make_train_step
+from repro.launch.specs import train_specs
+from repro.models.model import abstract_params
+
+
+def train_step_memory(cfg: ModelConfig, b: int, s: int,
+                      opt: OptimizerConfig, *, remat: bool = True) -> Dict:
+    step, opt_init = make_train_step(cfg, opt, remat=remat)
+    aparams = abstract_params(cfg)
+    aopt = jax.eval_shape(opt_init, aparams)
+    shape = InputShape("mem", s, b, "train")
+    batch = train_specs(cfg, shape)
+    comp = jax.jit(step, donate_argnums=(0, 1)).lower(
+        aparams, aopt, batch).compile()
+    ma = comp.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+            ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return {"peak": peak, "temp": ma.temp_size_in_bytes,
+            "args": ma.argument_size_in_bytes,
+            "alias": ma.alias_size_in_bytes}
+
+
+def bert_scaled(n_params_target: float) -> ModelConfig:
+    """BERT family scaled GPT-3-style (~12*L*H^2 params) to the target."""
+    from repro.configs import get_config
+    import math
+    base = get_config("bert_large")
+    l = 48 if n_params_target >= 2e9 else 32
+    h = int(math.sqrt(n_params_target / (12 * l)) // 64 * 64)
+    h = max(h, 256)
+    return dataclasses.replace(base, num_layers=l, d_model=h,
+                               n_heads=max(4, h // 64),
+                               n_kv_heads=max(4, h // 64), d_ff=4 * h)

@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus '#' comment lines).
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run fig5 table2  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig2", "benchmarks.fig2_convergence"),
+    ("fig4", "benchmarks.fig4_coefficient"),
+    ("fig5", "benchmarks.fig5_memory_bert"),
+    ("fig6", "benchmarks.fig6_memory_4b"),
+    ("table2", "benchmarks.table2_optimizers"),
+    ("table3", "benchmarks.table3_maxmodel"),
+    ("fig7", "benchmarks.fig7_comm"),
+    ("roofline", "benchmarks.roofline"),
+    ("kernels", "benchmarks.kernel_bench"),
+]
+
+
+def main() -> None:
+    sel = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, module in MODULES:
+        if sel and tag not in sel:
+            continue
+        print(f"# === {tag} ({module}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+        except Exception as e:            # keep the harness going
+            traceback.print_exc()
+            failures.append((tag, repr(e)))
+            print(f"{tag}/FAILED,0,{type(e).__name__}")
+        print(f"# === {tag} done in {time.time()-t0:.0f}s ===", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == '__main__':
+    main()

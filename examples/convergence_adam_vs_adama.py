@@ -1,0 +1,53 @@
+"""Fig. 2 at your desk: train the same model with Adam and with AdamA
+(N=1,2,4) from identical init/data and print the loss curves side by side.
+
+  PYTHONPATH=src python examples/convergence_adam_vs_adama.py [--steps 40]
+"""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # benchmarks/
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import OptimizerConfig, get_config
+from repro.configs.base import InputShape
+from benchmarks.common import train_setup
+
+
+def run(cfg, opt, steps):
+    params, opt_state, jstep, data = train_setup(cfg, 16, 64, opt)
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt_state, m = jstep(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    cfg = dataclasses.replace(get_config("bert_large").reduced(),
+                              compute_dtype="float32")
+    curves = {"adam": run(cfg, OptimizerConfig(
+        name="adam", accumulation="ga", micro_batches=1, lr=1e-3), args.steps)}
+    for n in (1, 2, 4):
+        curves[f"adama_n{n}"] = run(cfg, OptimizerConfig(
+            name="adama", accumulation="adama", micro_batches=n, lr=1e-3),
+            args.steps)
+    print(f"{'step':>4} " + " ".join(f"{k:>10}" for k in curves))
+    for i in range(args.steps):
+        print(f"{i:4d} " + " ".join(f"{curves[k][i]:10.4f}" for k in curves))
+    adam = np.asarray(curves["adam"])
+    for k, v in curves.items():
+        if k == "adam":
+            continue
+        print(f"max |{k} - adam| = {np.max(np.abs(np.asarray(v)-adam)):.4f}")
+
+
+if __name__ == "__main__":
+    main()

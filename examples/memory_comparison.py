@@ -1,0 +1,42 @@
+"""Fig. 5/6/Table 3 at your desk: XLA-measured peak training memory across
+engines and optimizers on BERT-Large (the paper's workload).
+
+  PYTHONPATH=src python examples/memory_comparison.py [--batch 64]
+"""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # benchmarks/
+import argparse
+
+from benchmarks.memlib import train_step_memory
+from repro.configs import OptimizerConfig, get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    cfg = get_config("bert_large")
+    print(f"BERT-Large, global batch {args.batch}, seq {args.seq}")
+    rows = [
+        ("Adam (no accumulation)", OptimizerConfig(
+            name="adam", accumulation="ga", micro_batches=1)),
+        ("Adam + grad accumulation N=8", OptimizerConfig(
+            name="adam", accumulation="ga", micro_batches=8)),
+        ("AdamA N=8 (Algorithm 1)", OptimizerConfig(
+            name="adama", accumulation="adama", micro_batches=8)),
+        ("AdamA layer-wise N=8 (Algorithm 2)", OptimizerConfig(
+            name="adama", accumulation="adama_layerwise", micro_batches=8)),
+        ("Adafactor", OptimizerConfig(
+            name="adafactor", accumulation="ga", micro_batches=1)),
+        ("SM3", OptimizerConfig(
+            name="sm3", accumulation="ga", micro_batches=1)),
+    ]
+    for name, opt in rows:
+        mem = train_step_memory(cfg, args.batch, args.seq, opt)
+        print(f"  {name:38s} {mem['peak']/2**30:6.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: train a reduced StableLM-family model with AdamA and see the
+memory ordering GA > AdamA > AdamA-layerwise on your own machine.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # benchmarks/
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import OptimizerConfig, RunConfig, get_config
+from repro.configs.base import InputShape
+from repro.train.loop import train
+
+
+def main():
+    cfg = get_config("stablelm-1.6b").reduced()
+    print(f"model: {cfg.name} ({cfg.num_layers}L d={cfg.d_model})")
+
+    run = RunConfig(
+        model=cfg,
+        optimizer=OptimizerConfig(name="adama", accumulation="adama",
+                                  micro_batches=4, lr=2e-3),
+        shape=InputShape("quickstart", 64, 8, "train"),
+        steps=20, log_every=5)
+    out = train(run)
+    print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+    # memory: the three engines on the same model/batch (XLA buffer bytes)
+    from benchmarks.memlib import train_step_memory
+    for accum in ("ga", "adama", "adama_layerwise"):
+        opt = OptimizerConfig(name="adama" if accum != "ga" else "adam",
+                              accumulation=accum, micro_batches=4)
+        mem = train_step_memory(cfg, 8, 64, opt)
+        print(f"{accum:18s} peak = {mem['peak']/2**20:8.1f} MiB")
+
+
+if __name__ == "__main__":
+    main()

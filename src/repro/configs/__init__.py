@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    RunConfig,
+    SSMConfig,
+    all_configs,
+    get_config,
+    shape_supported,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "InputShape", "ModelConfig", "MoEConfig",
+    "OptimizerConfig", "RunConfig", "SSMConfig", "all_configs", "get_config",
+    "shape_supported",
+]

@@ -1,0 +1,265 @@
+"""Config system: model configs, input shapes, training/run configs.
+
+Every assigned architecture is a `ModelConfig` instance in its own module
+(one file per arch, exact numbers from the assignment table, source cited).
+`reduced()` derives the CPU-smoke variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0           # routed experts
+    n_shared: int = 0            # shared (always-on) experts
+    top_k: int = 2
+    d_expert: int = 0            # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+    # layers [0, dense_prefix) use a dense FFN instead of MoE (DeepSeek-V2
+    # keeps the first block dense).
+    dense_prefix: int = 1
+    router_aux_weight: float = 0.001
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16            # recurrent state per channel (Mamba) / head
+    d_conv: int = 4              # depthwise conv width (Mamba)
+    expand: int = 2              # inner expansion for Mamba
+    head_dim: int = 64           # RWKV6 head size
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str               # dense | moe | ssm | hybrid | audio | vlm | encoder
+    source: str                  # citation for the numbers
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None       # default d_model // n_heads
+    max_seq_len: int = 8192
+
+    # attention flavour: gqa | mla | swa | none (attention-free)
+    attention: str = "gqa"
+    window: Optional[int] = None         # sliding-window size for swa
+
+    # MLA (DeepSeek-V2 / MiniCPM3)
+    q_lora_rank: Optional[int] = None
+    kv_lora_rank: Optional[int] = None
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: Optional[int] = None
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # MLA decode in the compressed latent space (absorb wkv_b into q / out):
+    # never expands per-head K/V over the cache — ~200x less decode compute
+    # at 32k context (beyond-paper; EXPERIMENTS.md §Perf pair 2-serving)
+    mla_absorbed_decode: bool = True
+
+    # encoder-decoder (whisper): num_layers = decoder layers
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500          # whisper frames after conv stub
+    # VLM: number of stub patch embeddings prepended to text
+    n_patch_tokens: int = 0
+
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    act: str = "silu"                    # silu | gelu
+    pos_emb: str = "rope"                # rope | sinusoidal (abs, added at embed)
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+
+    # which input shapes this arch supports (see DESIGN.md §4 for skips)
+    supports_decode: bool = True
+    supports_long: bool = False          # sub-quadratic decode at 500k
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def resolved_v_head_dim(self) -> int:
+        if self.v_head_dim is not None:
+            return self.v_head_dim
+        return self.resolved_head_dim
+
+    def padded_vocab(self, tp: int = 1) -> int:
+        mult = 128 * max(tp, 1)
+        return ((self.vocab_size + mult - 1) // mult) * mult
+
+    def padded_q_heads(self, tp: int = 1) -> int:
+        """Physical head count for MLA projections: padded to a TP multiple
+        with zero-weight heads (mathematically inert for paired q/kv heads —
+        zero q and zero k give zero scores, and wo's zero rows drop the
+        padded heads' outputs). Avoids GSPMD choosing a pathological sharding
+        for indivisible head counts (observed 14.8 TiB/step of score
+        all-reduces on minicpm3-4b at tp=16)."""
+        h = self.n_heads
+        if self.attention != "mla" or tp <= 1 or h % tp == 0:
+            return h
+        return ((h + tp - 1) // tp) * tp
+
+    # ------------------------------------------------------------------
+    def n_params(self) -> int:
+        """Analytic parameter count (matches init_params leaf sizes, un-padded
+        vocab; used for MODEL_FLOPS=6ND and Table-3 style analytics)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+    def reduced(self) -> "ModelConfig":
+        """CPU-smoke variant of the same family (<=2 layers, d_model<=256,
+        <=4 experts)."""
+        d_model = min(self.d_model, 256)
+        n_heads = max(2, min(self.n_heads, 4))
+        ratio = max(1, self.n_heads // max(self.n_kv_heads, 1))
+        n_kv = max(1, n_heads // min(ratio, n_heads))
+        hd = 32
+        kw = dict(
+            num_layers=min(self.num_layers, 2),
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 448),
+            vocab_size=min(self.vocab_size, 512),
+            max_seq_len=min(self.max_seq_len, 256),
+            name=self.name + "-reduced",
+        )
+        if self.attention == "mla":
+            kw.update(q_lora_rank=None, kv_lora_rank=64,
+                      qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32)
+        if self.window is not None:
+            kw.update(window=64)
+        if self.moe is not None:
+            kw["moe"] = replace(self.moe, n_experts=4, n_shared=min(self.moe.n_shared, 1),
+                                top_k=2, d_expert=128, dense_prefix=min(self.moe.dense_prefix, 1))
+        if self.encoder_layers:
+            kw.update(encoder_layers=1, num_layers=1, encoder_seq_len=64)
+        if self.n_patch_tokens:
+            kw.update(n_patch_tokens=16)
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether this (arch, shape) pair runs; reason recorded in DESIGN.md."""
+    if shape.kind == "decode":
+        if not cfg.supports_decode:
+            return False, "encoder-only / enc-dec-short arch has no decode step"
+        if shape.seq_len > 100_000 and not cfg.supports_long:
+            return False, "full-attention arch without sub-quadratic variant"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Training / run config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adama"          # adam | adama | adafactor | sm3
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # accumulation engine: ga | adama | adama_layerwise
+    accumulation: str = "adama"
+    micro_batches: int = 8
+    zero_stage: int = 0          # 0 | 1 (P_os over data axis)
+    use_pallas: bool = False     # fused kernels for accumulate/apply
+    grad_clip: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    shape: InputShape = INPUT_SHAPES["train_4k"]
+    seed: int = 0
+    steps: int = 100
+    log_every: int = 10
+    # mesh: axis sizes; () = single device
+    mesh_shape: Tuple[int, ...] = ()
+    mesh_axes: Tuple[str, ...] = ()
+    fsdp: bool = False           # shard params over data axis too
+    remat: bool = False          # activation checkpointing per layer
+    engine: str = "pjit"         # pjit | shardmap
+    checkpoint_dir: Optional[str] = None
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "stablelm_1_6b",
+    "minicpm3_4b",
+    "deepseek_v2_236b",
+    "rwkv6_7b",
+    "deepseek_v2_lite_16b",
+    "mistral_nemo_12b",
+    "hymba_1_5b",
+    "yi_9b",
+    "whisper_base",
+    "internvl2_26b",
+    "bert_large",                # the paper's own workload
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,27 @@
+"""BERT-Large (paper's own workload, Devlin et al. 2018).
+
+Encoder-only: 24L d_model=1024 16H d_ff=4096 vocab=30522. Pre-training
+objective here is MLM-style CE on synthetic data (offline container);
+convergence experiments compare Adam vs AdamA parity on it (Fig. 2 analog).
+Encoder-only -> no decode shapes (recorded in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="bert-large",
+    arch_type="encoder",
+    source="paper §4.1 / arXiv:1810.04805",
+    num_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=30522,
+    attention="gqa",         # bidirectional flag handled by arch_type
+    norm="layernorm",
+    act="gelu",
+    pos_emb="sinusoidal",
+    max_seq_len=512,
+    supports_decode=False,
+    supports_long=False,
+)

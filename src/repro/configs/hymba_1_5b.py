@@ -1,0 +1,29 @@
+"""Hymba-1.5B [arXiv:2411.13676].
+
+Hybrid-head decoder: each block runs attention heads and Mamba (SSM) heads in
+parallel on the same input and fuses (mean of the two paths after per-path
+norm, as in the paper). 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16. Attention heads use a sliding window (Hymba uses
+SWA in all but 3 layers; we use SWA everywhere for sub-quadratic long decode,
+noted in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    source="arXiv:2411.13676",
+    num_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attention="swa",
+    window=1024,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    max_seq_len=8192,
+    supports_decode=True,
+    supports_long=True,     # SWA window + O(1) SSM state
+)

@@ -1,0 +1,26 @@
+"""InternVL2-26B [arXiv:2404.16821].
+
+VLM: InternViT-6B vision encoder (STUB — input_specs() provides projected
+patch embeddings) + InternLM2-20B language backbone: 48L d_model=6144 48H
+(GQA kv=8) d_ff=16384 vocab=92553. We implement the language backbone that
+consumes [patch; text] embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    arch_type="vlm",
+    source="arXiv:2404.16821",
+    num_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    attention="gqa",
+    n_patch_tokens=256,      # one tile of 448x448 / 14 patch, pixel-shuffled
+    max_seq_len=32768,
+    supports_decode=True,
+    supports_long=False,
+)

@@ -1,0 +1,30 @@
+"""Whisper-base [arXiv:2212.04356].
+
+Encoder-decoder audio model: 6L enc + 6L dec, d_model=512 8H d_ff=2048
+vocab=51865. The mel-spectrogram + conv frontend is a STUB per the
+assignment carve-out: input_specs() provides precomputed frame embeddings
+(batch, 1500, 512).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="audio",
+    source="arXiv:2212.04356",
+    num_layers=6,            # decoder layers
+    encoder_layers=6,
+    encoder_seq_len=1500,    # 30s audio after conv stub
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    attention="gqa",
+    norm="layernorm",
+    act="gelu",
+    pos_emb="sinusoidal",
+    max_seq_len=448,
+    supports_decode=True,    # decoder decodes; 32k cache shape exercised
+                             # mechanically (see DESIGN.md)
+    supports_long=False,     # enc-dec, decoder ctx <=448 by construction
+)

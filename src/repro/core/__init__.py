@@ -1,0 +1,5 @@
+"""The paper's primary contribution: AdamA optimizer accumulation."""
+from repro.core import accumulation, adama
+from repro.core.accumulation import make_train_step
+
+__all__ = ["adama", "accumulation", "make_train_step"]

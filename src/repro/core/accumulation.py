@@ -1,0 +1,179 @@
+"""Micro-batch accumulation engines — where AdamA meets the training loop.
+
+Three engines, selected by OptimizerConfig.accumulation:
+
+  ga              — baseline gradient accumulation: lax.scan over micro-batches
+                    carrying a PARAM-SIZED fp32 gradient accumulator, then one
+                    optimizer update. This is the paper's comparison point.
+  adama           — optimizer accumulation (Algorithm 1): the scan carries
+                    (m, v) instead; each micro-batch's gradient tree is folded
+                    immediately and becomes dead inside the scan body. No
+                    param-sized accumulator exists in the carry.
+  adama_layerwise — Algorithm 2: additionally interleaves the fold with the
+                    per-layer backward so at most ONE layer's gradient is live
+                    (see core/layerwise.py).
+
+All engines consume a global batch of shape (GB, ...) and reshape it to
+(N, GB/N, ...) micro-batches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.core import adama
+from repro.models.model import loss_fn as model_loss_fn
+from repro.optim import adafactor, adam, sm3
+
+OPTIMIZERS = {"adam": adam, "adafactor": adafactor, "sm3": sm3}
+
+
+def _split_micro(batch: Dict[str, Any], n: int):
+    def r(x):
+        gb = x.shape[0]
+        assert gb % n == 0, f"global batch {gb} not divisible by micro {n}"
+        return x.reshape((n, gb // n) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_loss(cfg: ModelConfig, *, remat: bool = False) -> Callable:
+    return functools.partial(model_loss_fn, cfg, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# Engine: ga (baseline)
+# ---------------------------------------------------------------------------
+
+
+def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
+                 lr_schedule=None):
+    loss = make_loss(cfg, remat=remat)
+    n = opt.micro_batches
+    opt_mod = OPTIMIZERS[opt.name if opt.name != "adama" else "adam"]
+
+    def step(params, opt_state, batch):
+        micro = _split_micro(batch, n)
+
+        def body(carry, mb):
+            acc, lsum = carry
+            l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+            acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32) / n,
+                               acc, g)
+            return (acc, lsum + l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        (grads, lsum), _ = lax.scan(body, (zeros, 0.0), micro)
+        if opt.grad_clip:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, opt.grad_clip / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = lr_schedule(opt_state["step"]) if lr_schedule else opt.lr
+        kw = dict(lr=lr, weight_decay=opt.weight_decay)
+        if opt_mod is adam:
+            kw.update(beta1=opt.beta1, beta2=opt.beta2, eps=opt.eps)
+        params, opt_state = opt_mod.update(grads, opt_state, params, **kw)
+        return params, opt_state, {"loss": lsum / n}
+
+    def init(params):
+        return opt_mod.init(params)
+
+    return step, init
+
+
+# ---------------------------------------------------------------------------
+# Engine: adama (Algorithm 1 — fold whole-model grads per micro-batch)
+# ---------------------------------------------------------------------------
+
+
+def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
+                    lr_schedule=None, m_devices: int = 1, axis_names=()):
+    """m_devices/axis_names are used by the shard_map DP engine (Eqs. 5-8);
+    in the pjit engine they stay (1, ()) and gradients arrive pre-reduced."""
+    loss = make_loss(cfg, remat=remat)
+    n = opt.micro_batches
+    b1, b2 = opt.beta1, opt.beta2
+
+    def step(params, opt_state, batch):
+        micro = _split_micro(batch, n)
+        state = adama.begin_minibatch(opt_state, b1, b2, m_devices)
+
+        def body(carry, mb):
+            st, lsum = carry
+            l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+            g = jax.tree.map(lambda x: x / n, g)        # Alg.1 line 6: g/N
+            st = adama.accumulate(st, g, b1, b2, use_pallas=opt.use_pallas)
+            return (st, lsum + l), None
+
+        (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
+        if axis_names:
+            state = adama.allreduce_states(state, axis_names, m_devices)
+        lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
+        params, state = adama.finalize(params, state, lr=lr, beta1=b1,
+                                       beta2=b2, eps=opt.eps,
+                                       weight_decay=opt.weight_decay,
+                                       use_pallas=opt.use_pallas)
+        if axis_names:
+            lsum = lax.pmean(lsum, axis_names)
+        return params, state, {"loss": lsum / n}
+
+    return step, adama.init
+
+
+# ---------------------------------------------------------------------------
+# Engine: adama_layerwise (Algorithm 2 — fold per LAYER inside backward)
+# ---------------------------------------------------------------------------
+
+
+def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
+                              remat=False, lr_schedule=None,
+                              m_devices: int = 1, axis_names=()):
+    from repro.core.layerwise import layerwise_loss_and_fold
+    n = opt.micro_batches
+    b1, b2 = opt.beta1, opt.beta2
+
+    def step(params, opt_state, batch):
+        micro = _split_micro(batch, n)
+        state = adama.begin_minibatch(opt_state, b1, b2, m_devices)
+
+        def body(carry, mb):
+            st, lsum = carry
+            l, st = layerwise_loss_and_fold(
+                cfg, params, mb, st, beta1=b1, beta2=b2, scale=1.0 / n,
+                use_pallas=opt.use_pallas)
+            return (st, lsum + l), None
+
+        (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
+        if axis_names:
+            state = adama.allreduce_states(state, axis_names, m_devices)
+        lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
+        params, state = adama.finalize(params, state, lr=lr, beta1=b1,
+                                       beta2=b2, eps=opt.eps,
+                                       weight_decay=opt.weight_decay,
+                                       use_pallas=opt.use_pallas)
+        if axis_names:
+            lsum = lax.pmean(lsum, axis_names)
+        return params, state, {"loss": lsum / n}
+
+    return step, adama.init
+
+
+ENGINES = {
+    "ga": make_ga_step,
+    "adama": make_adama_step,
+    "adama_layerwise": make_adama_layerwise_step,
+}
+
+
+def make_train_step(cfg: ModelConfig, opt: OptimizerConfig, **kw):
+    """Returns (step_fn, opt_init_fn) for the configured engine."""
+    eng = ENGINES[opt.accumulation]
+    if opt.accumulation == "ga":
+        kw.pop("m_devices", None)
+        kw.pop("axis_names", None)
+    return eng(cfg, opt, **kw)

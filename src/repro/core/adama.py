@@ -1,0 +1,104 @@
+"""AdamA — Adam Accumulation (the paper's contribution), as composable
+pure-function pieces.
+
+The mini-batch lifecycle (Algorithm 1/2):
+
+    state = init(params)
+    state = begin_minibatch(state, beta1, beta2, m_devices=M)   # m*=b1, v*=M*b2*v
+    for each micro-batch i:                                     # grads released
+        state = accumulate(state, grads_i, beta1, beta2)        #   right after
+    state = allreduce_states(state, axis_names, M)              # DP only, Eq.7/8
+    params, state = finalize(params, state, lr=..., ...)        # bias-corr apply
+
+`accumulate` is where gradients die: m += (1-b1)*g, v += (1-b2)*g^2 — after
+this the gradient buffer has no further reader, which is exactly the paper's
+"release memory for g" (XLA buffer liveness performs the release).
+
+The caller is responsible for pre-scaling gradients by 1/N (or 1/(N*M) in DP)
+via the loss, matching Algorithm 1 line 6.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+State = Dict[str, Any]
+
+
+def init(params) -> State:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def begin_minibatch(state: State, beta1: float, beta2: float,
+                    m_devices: int = 1) -> State:
+    """m <- b1*m ; v <- M*b2*v (Eq. 6's M*beta2 pre-scale; M=1 single device)."""
+    return {
+        "m": jax.tree.map(lambda m: beta1 * m, state["m"]),
+        "v": jax.tree.map(lambda v: (m_devices * beta2) * v, state["v"]),
+        "step": state["step"] + 1,
+    }
+
+
+def accumulate(state: State, grads, beta1: float, beta2: float,
+               use_pallas: bool = False) -> State:
+    """Fold one micro-batch's gradients into (m, v); Algorithm 2 inner loop."""
+    if use_pallas:
+        from repro.kernels.ops import adama_accumulate_tree
+        m, v = adama_accumulate_tree(state["m"], state["v"], grads,
+                                     beta1=beta1, beta2=beta2)
+        return {"m": m, "v": v, "step": state["step"]}
+    m = jax.tree.map(lambda m_, g: m_ + (1 - beta1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: v_ + (1 - beta2) *
+                     jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    return {"m": m, "v": v, "step": state["step"]}
+
+
+def accumulate_leaf(m, v, g, beta1: float, beta2: float, use_pallas=False):
+    """Single-leaf fold (used by the layer-wise backward, Algorithm 2)."""
+    if use_pallas:
+        from repro.kernels.ops import adama_accumulate
+        return adama_accumulate(m, v, g, beta1=beta1, beta2=beta2)
+    g = g.astype(jnp.float32)
+    return m + (1 - beta1) * g, v + (1 - beta2) * jnp.square(g)
+
+
+def allreduce_states(state: State, axis_names: Sequence[str],
+                     m_devices: int) -> State:
+    """Distributed sync (Eqs. 7-8): mean(m), sum(v)/M^2 — inside shard_map."""
+    m = jax.tree.map(lambda x: jax.lax.psum(x, axis_names) / m_devices,
+                     state["m"])
+    v = jax.tree.map(lambda x: jax.lax.psum(x, axis_names) / (m_devices ** 2),
+                     state["v"])
+    return {"m": m, "v": v, "step": state["step"]}
+
+
+def finalize(params, state: State, *, lr, beta1: float, beta2: float,
+             eps: float = 1e-8, weight_decay: float = 0.0,
+             use_pallas: bool = False):
+    """Bias-correct and apply (Algorithm 1 'Update' line). `state['step']` must
+    already count this mini-batch (begin_minibatch increments it)."""
+    t = state["step"].astype(jnp.float32)
+    bc1 = 1 - beta1 ** t
+    bc2 = 1 - beta2 ** t
+    if use_pallas:
+        from repro.kernels.ops import adam_apply_tree
+        new_params = adam_apply_tree(params, state["m"], state["v"],
+                                     lr=lr, bc1=bc1, bc2=bc2, eps=eps,
+                                     weight_decay=weight_decay)
+        return new_params, state
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        u = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    return jax.tree.map(upd, params, state["m"], state["v"]), state

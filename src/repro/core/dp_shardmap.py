@@ -1,0 +1,113 @@
+"""Faithful §3.3 data-parallel communication schedule, via jax.shard_map.
+
+Three DP variants (benchmarks/fig7_comm.py measures their collective bytes):
+
+  ga     — accumulate local grads over N micro-batches, ONE psum(grads) at
+           mini-batch end, then Adam. Comm volume = P per mini-batch.
+  naive  — psum each micro-batch's grads before folding into (m, v).
+           Comm volume = N*P per mini-batch — the strawman the paper rejects.
+  adama  — the paper's schedule: fold LOCAL grads into LOCAL (m, v) each
+           micro-batch, pre-scale v by M*beta2 (Eq. 6), one psum of m (/M)
+           and v (/M^2) at mini-batch end (Eqs. 7-8). Comm volume = 2*P,
+           constant in N, and bit-consistent with single-device AdamA(N*M).
+
+Manual axes = the DP axes ("data", and "pod" when multi-pod); the "model"
+axis (if present in the mesh) is left to GSPMD (auto) so tensor-parallel
+sharding composes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.core import adama
+from repro.core.accumulation import _split_micro, make_loss
+from repro.optim import adam
+
+
+def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
+                       dp_axes: Tuple[str, ...] = ("data",),
+                       variant: str = "adama", *, remat=False,
+                       lr_schedule=None):
+    """Returns (step_fn, opt_init_fn). step_fn(params, opt_state, batch) with
+    batch globally (GB, ...) sharded over dp_axes; params/opt replicated over
+    dp_axes (tensor sharding over remaining mesh axes passes through)."""
+    m_dev = int(math.prod(mesh.shape[a] for a in dp_axes))
+    loss = make_loss(cfg, remat=remat)
+    n = opt.micro_batches
+    b1, b2 = opt.beta1, opt.beta2
+
+    def local_step(params, opt_state, batch):
+        micro = _split_micro(batch, n)
+
+        if variant == "ga":
+            def body(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / n, acc, g)
+                return (acc, lsum + l), None
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+            (grads, lsum), _ = lax.scan(body, (zeros, 0.0), micro)
+            grads = jax.tree.map(                    # ONE all-reduce of grads
+                lambda g: lax.psum(g, dp_axes) / m_dev, grads)
+            lr = lr_schedule(opt_state["step"]) if lr_schedule else opt.lr
+            params, opt_state = adam.update(grads, opt_state, params, lr=lr,
+                                            beta1=b1, beta2=b2, eps=opt.eps,
+                                            weight_decay=opt.weight_decay)
+            return params, opt_state, {"loss": lax.pmean(lsum / n, dp_axes)}
+
+        if variant == "naive":
+            state = adama.begin_minibatch(opt_state, b1, b2, m_devices=1)
+
+            def body(carry, mb):
+                st, lsum = carry
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                g = jax.tree.map(                    # psum EVERY micro-batch
+                    lambda x: lax.psum(x, dp_axes) / (n * m_dev), g)
+                st = adama.accumulate(st, g, b1, b2)
+                return (st, lsum + l), None
+            (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
+        else:                                        # paper's schedule
+            state = adama.begin_minibatch(opt_state, b1, b2, m_devices=m_dev)
+
+            def body(carry, mb):
+                st, lsum = carry
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                g = jax.tree.map(lambda x: x / n, g)  # local scale 1/N (Eq.5)
+                st = adama.accumulate(st, g, b1, b2,
+                                      use_pallas=opt.use_pallas)
+                return (st, lsum + l), None
+            (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
+            state = adama.allreduce_states(state, dp_axes, m_dev)  # Eqs. 7-8
+
+        lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
+        params, state = adama.finalize(params, state, lr=lr, beta1=b1,
+                                       beta2=b2, eps=opt.eps,
+                                       weight_decay=opt.weight_decay,
+                                       use_pallas=opt.use_pallas)
+        return params, state, {"loss": lax.pmean(lsum / n, dp_axes)}
+
+    rep = P()
+    bspec = P(dp_axes)
+
+    def step(params, opt_state, batch):
+        f = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(rep, rep, bspec),
+            out_specs=(rep, rep, rep),
+            axis_names=set(dp_axes), check_vma=False)
+        return f(params, opt_state, batch)
+
+    def init(params):
+        return adam.init(params) if variant == "ga" else adama.init(params)
+
+    return step, init

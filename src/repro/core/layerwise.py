@@ -1,0 +1,277 @@
+"""Algorithm 2: interleave the per-LAYER backward with the AdamA fold.
+
+PyTorch does this with backward hooks; XLA has no hooks, so we express the
+schedule structurally: a reverse `lax.scan` over the stacked layer params
+computes each layer's VJP and immediately folds the layer gradient into the
+layer's slice of (m, v). The gradient tensor `dlp` is a scan-body temp — its
+buffer dies inside the iteration, so peak gradient memory is ONE layer, which
+is the paper's 1/M claim.
+
+Non-stacked leaves (embedding, head, final norms — and for whisper the
+encoder handled as its own stacked stage) are folded at the boundaries, as in
+the paper where the hook granularity is also per-parameter-group.
+
+Note: each layer's forward is recomputed inside its VJP (we saved only the
+layer INPUTS), so this engine is simultaneously activation checkpointing —
+matching how gradient accumulation baselines are run in the paper's setting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.adama import accumulate_leaf
+from repro.models import modules as md
+from repro.models.model import (apply_block, cross_entropy, embed_tokens,
+                                main_stack_kind, _cdt)
+
+STACK_KEYS = ("blocks", "dense_blocks", "enc_blocks")
+
+
+def _fold_tree(m, v, g, beta1, beta2, use_pallas):
+    fold = functools.partial(accumulate_leaf, beta1=beta1, beta2=beta2,
+                             use_pallas=use_pallas)
+    folded = jax.tree.map(fold, m, v, g)
+    new_m = jax.tree.map(lambda x: x[0], folded,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[1], folded,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_m, new_v
+
+
+def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
+                            beta1: float, beta2: float, scale: float,
+                            use_pallas: bool = False):
+    """One micro-batch: forward, then layer-by-layer backward folding grads
+    into (m, v). Returns (loss, new_state). Gradients are scaled by `scale`
+    (= 1/N), matching Algorithm 1 line 6."""
+    if cfg.arch_type == "audio":
+        return _layerwise_audio(cfg, params, batch, state, beta1=beta1,
+                                beta2=beta2, scale=scale,
+                                use_pallas=use_pallas)
+
+    kind = main_stack_kind(cfg)
+    causal = cfg.arch_type != "encoder"
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    rest = {k: v for k, v in params.items() if k not in STACK_KEYS}
+    scale = jnp.asarray(scale, jnp.float32)
+
+    if cfg.arch_type == "vlm":
+        patches = batch["patches"].astype(_cdt(cfg))
+        p_ = patches.shape[1]
+        total = p_ + s
+        positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32),
+                                     (b, total))
+
+        def pre(rest_):
+            xt = embed_tokens(cfg, rest_, tokens, positions[:, p_:])
+            return jnp.concatenate([patches, xt], axis=1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def pre(rest_):
+            return embed_tokens(cfg, rest_, tokens, positions)
+
+    # ---- forward, saving layer inputs ----
+    x0, pre_vjp = jax.vjp(pre, rest)
+
+    stages = []
+    if "dense_blocks" in params:
+        stages.append(("dense_blocks", "dense"))
+    stages.append(("blocks", kind))
+
+    from repro.sharding.ctx import maybe_shard
+
+    def fwd_stack(stack, x, knd):
+        def f(carry, lp):
+            h, auxs = carry
+            y, a = apply_block(cfg, lp, h, positions, kind=knd, causal=causal)
+            # 2D-shard the carry so the saved-input stack (the ys below) is
+            # sharded over batch x d_model, not one axis (see model.scan_blocks)
+            y = maybe_shard(y, "dp", None, "model")
+            return (y, auxs + a), h                       # emit layer INPUT
+        x = maybe_shard(x, "dp", None, "model")
+        (y, auxs), saved = lax.scan(f, (x, jnp.zeros((), jnp.float32)), stack)
+        return y, auxs, saved
+
+    x = x0
+    aux_total = jnp.zeros((), jnp.float32)
+    saved_inputs: Dict[str, Any] = {}
+    for name, knd in stages:
+        x, auxs, saved_inputs[name] = fwd_stack(params[name], x, knd)
+        aux_total = aux_total + auxs
+
+    def post(rest_, xn):
+        xf = xn[:, -s:] if cfg.arch_type == "vlm" else xn
+        h = md.apply_norm(cfg, rest_, xf, "final_norm_")
+        logits = (h @ rest_["lm_head"].astype(h.dtype)).astype(jnp.float32)
+        return cross_entropy(logits, batch["labels"])
+
+    ce, post_vjp = jax.vjp(post, rest, x)
+    loss = ce + aux_total
+    d_rest_post, dx = post_vjp(scale)
+
+    # ---- backward, reverse scan per stack, folding per layer ----
+    # (m, v) stacks ride in the CARRY and are updated in place with
+    # dynamic_update_index — as scan ys they would be double-buffered
+    # (xs and ys can't alias), costing an extra m+v of stack memory.
+    new_m = dict(state["m"])
+    new_v = dict(state["v"])
+    for name, knd in reversed(stages):
+        n_layers = jax.tree.leaves(params[name])[0].shape[0]
+
+        def bwd(carry, xs, knd=knd, name=name):
+            dx_c, m_stack, v_stack = carry
+            j, lp, xin = xs
+            _, vjp = jax.vjp(
+                lambda lp_, xi_: apply_block(cfg, lp_, xi_, positions,
+                                             kind=knd, causal=causal),
+                lp, xin)
+            dlp, dxin = vjp((dx_c, scale))               # aux cotangent=scale
+            m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
+                s, j, 0, keepdims=False), m_stack)
+            v_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
+                s, j, 0, keepdims=False), v_stack)
+            m2, v2 = _fold_tree(m_j, v_j, dlp, beta1, beta2, use_pallas)
+            m_stack = jax.tree.map(
+                lambda s, u: lax.dynamic_update_index_in_dim(s, u, j, 0),
+                m_stack, m2)
+            v_stack = jax.tree.map(
+                lambda s, u: lax.dynamic_update_index_in_dim(s, u, j, 0),
+                v_stack, v2)
+            return (dxin, m_stack, v_stack), None
+
+        (dx, m_new, v_new), _ = lax.scan(
+            bwd, (dx, state["m"][name], state["v"][name]),
+            (jnp.arange(n_layers), params[name], saved_inputs[name]),
+            reverse=True)
+        new_m[name], new_v[name] = m_new, v_new
+
+    (d_rest_pre,) = pre_vjp(dx)
+    d_rest = jax.tree.map(lambda a, b_: a + b_, d_rest_post, d_rest_pre)
+    for k in d_rest:
+        new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
+                                        d_rest[k], beta1, beta2, use_pallas)
+    return loss, {"m": new_m, "v": new_v, "step": state["step"]}
+
+
+# ---------------------------------------------------------------------------
+# Whisper (enc-dec): decoder stack layerwise, then encoder stack layerwise
+# ---------------------------------------------------------------------------
+
+
+def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
+                     use_pallas):
+    tokens = batch["tokens"]
+    frames = batch["frames"].astype(_cdt(cfg))
+    b, s = tokens.shape
+    se = frames.shape[1]
+    scale = jnp.asarray(scale, jnp.float32)
+    rest = {k: v for k, v in params.items() if k not in STACK_KEYS}
+    epos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    from repro.sharding.ctx import maybe_shard
+
+    # encoder forward (save layer inputs)
+    e0 = frames + md.sinusoidal_positions(epos, cfg.d_model).astype(frames.dtype)
+
+    def enc_f(carry, lp):
+        h = carry
+        y, _ = apply_block(cfg, lp, h, epos, kind="dense", causal=False)
+        return maybe_shard(y, "dp", None, "model"), h
+    eN, enc_saved = lax.scan(enc_f, maybe_shard(e0, "dp", None, "model"),
+                             params["enc_blocks"])
+
+    def enc_norm(rest_, en):
+        return md.apply_norm(cfg, rest_, en, "enc_norm_")
+    enc_out, encn_vjp = jax.vjp(enc_norm, rest, eN)
+
+    def pre(rest_):
+        return embed_tokens(cfg, rest_, tokens, positions)
+    x0, pre_vjp = jax.vjp(pre, rest)
+
+    def dec_block(lp, x, eo):
+        enc_kv = md.encode_cross_kv(lp, eo)
+        y, a = apply_block(cfg, lp, x, positions, kind="dec", causal=True,
+                           enc_kv=enc_kv)
+        return y, a
+
+    def dec_f(carry, lp):
+        h = carry
+        y, _ = dec_block(lp, h, enc_out)
+        return maybe_shard(y, "dp", None, "model"), h
+    xN, dec_saved = lax.scan(dec_f, maybe_shard(x0, "dp", None, "model"),
+                             params["blocks"])
+
+    def post(rest_, xn):
+        h = md.apply_norm(cfg, rest_, xn, "final_norm_")
+        logits = (h @ rest_["lm_head"].astype(h.dtype)).astype(jnp.float32)
+        return cross_entropy(logits, batch["labels"])
+    ce, post_vjp = jax.vjp(post, rest, xN)
+    d_rest_post, dx = post_vjp(scale)
+
+    new_m = dict(state["m"])
+    new_v = dict(state["v"])
+
+    def _idx(stack, j):
+        return jax.tree.map(lambda s: lax.dynamic_index_in_dim(
+            s, j, 0, keepdims=False), stack)
+
+    def _upd(stack, sub, j):
+        return jax.tree.map(lambda s, u: lax.dynamic_update_index_in_dim(
+            s, u, j, 0), stack, sub)
+
+    # decoder backward: carry (dx, d_enc_out accumulator, m, v stacks)
+    def dbwd(carry, xs):
+        dx_c, denc, m_stack, v_stack = carry
+        j, lp, xin = xs
+        _, vjp = jax.vjp(dec_block, lp, xin, enc_out)
+        dlp, dxin, denc_j = vjp((dx_c, scale))
+        m2, v2 = _fold_tree(_idx(m_stack, j), _idx(v_stack, j), dlp,
+                            beta1, beta2, use_pallas)
+        return (dxin, denc + denc_j, _upd(m_stack, m2, j),
+                _upd(v_stack, v2, j)), None
+
+    denc0 = jnp.zeros_like(enc_out)
+    nl = jax.tree.leaves(params["blocks"])[0].shape[0]
+    (dx, denc, m_new, v_new), _ = lax.scan(
+        dbwd, (dx, denc0, state["m"]["blocks"], state["v"]["blocks"]),
+        (jnp.arange(nl), params["blocks"], dec_saved),
+        reverse=True)
+    new_m["blocks"], new_v["blocks"] = m_new, v_new
+
+    d_rest_encn, d_eN = encn_vjp(denc)
+
+    # encoder backward
+    def ebwd(carry, xs):
+        dx_c, m_stack, v_stack = carry
+        j, lp, xin = xs
+        _, vjp = jax.vjp(
+            lambda lp_, xi_: apply_block(cfg, lp_, xi_, epos, kind="dense",
+                                         causal=False), lp, xin)
+        dlp, dxin = vjp((dx_c, scale))
+        m2, v2 = _fold_tree(_idx(m_stack, j), _idx(v_stack, j), dlp,
+                            beta1, beta2, use_pallas)
+        return (dxin, _upd(m_stack, m2, j), _upd(v_stack, v2, j)), None
+
+    ne = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
+    (_, m_new, v_new), _ = lax.scan(
+        ebwd, (d_eN, state["m"]["enc_blocks"], state["v"]["enc_blocks"]),
+        (jnp.arange(ne), params["enc_blocks"], enc_saved),
+        reverse=True)
+    new_m["enc_blocks"], new_v["enc_blocks"] = m_new, v_new
+
+    (d_rest_pre,) = pre_vjp(dx)
+    d_rest = jax.tree.map(lambda a, b_, c: a + b_ + c,
+                          d_rest_post, d_rest_encn, d_rest_pre)
+    for k in d_rest:
+        new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
+                                        d_rest[k], beta1, beta2, use_pallas)
+    return ce, {"m": new_m, "v": new_v, "step": state["step"]}

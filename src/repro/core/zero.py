@@ -1,0 +1,44 @@
+"""ZeRO-1 (DeepSpeed P_os): shard the optimizer states over the data axis.
+
+In the pjit engine this is expressed as sharding constraints on (m, v):
+GSPMD then materializes exactly the ZeRO-1 schedule — gradients are
+reduce-scattered into the owned shard, the param update runs on the shard,
+and the updated params are all-gathered. Combined with AdamA this is the
+paper's Table-3 "ZeRO-S1 + AdamA" configuration: activations 1/N (micro-
+batching), gradients transient (optimizer accumulation), optimizer states
+1/M_dp (this module).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _add_axis(spec: P, shape, mesh, axis: str) -> P:
+    """Shard the largest divisible, not-yet-sharded dim of `shape` on `axis`."""
+    size = mesh.shape[axis]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = None, -1
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is not None:
+            continue
+        if dim % size == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best is None:
+        return P(*entries)                 # nothing divisible: stay as-is
+    entries[best] = axis
+    return P(*entries)
+
+
+def zero1_state_sharding(params_sharding_tree, abstract_params, mesh,
+                         axis: str = "data"):
+    """Given the param sharding tree (NamedSharding leaves) and abstract
+    params, produce the (m, v) sharding tree with `axis` added."""
+    def leaf(sh, p):
+        spec = sh.spec if isinstance(sh, NamedSharding) else sh
+        return NamedSharding(mesh, _add_axis(spec, p.shape, mesh, axis))
+    mv = jax.tree.map(leaf, params_sharding_tree, abstract_params)
+    return mv

@@ -1,0 +1,57 @@
+"""Fused Adam/AdamA apply kernel (Pallas, TPU target).
+
+The mini-batch-end update (Algorithm 1 'Update' line):
+    p -= lr * ( (m/bc1) / (sqrt(v/bc2) + eps) + wd * p )
+
+Unfused, XLA emits this as several elementwise HLOs over param-sized arrays;
+fused it is one pass: read p, m, v once, write p once. Bias corrections are
+scalar prefetch arguments (they depend on the step count), passed as SMEM
+scalars so one compiled kernel serves every step.
+
+Same (BLOCK_ROWS, 1024) VMEM tiling as the accumulate kernel; p is aliased
+input->output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+
+
+def _kernel(sc_ref, p_ref, m_ref, v_ref, po_ref, *, eps, weight_decay):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    p = p_ref[...].astype(jnp.float32)
+    mh = m_ref[...] / bc1
+    vh = v_ref[...] / bc2
+    u = mh / (jnp.sqrt(vh) + eps)
+    if weight_decay:
+        u = u + weight_decay * p
+    po_ref[...] = (p - lr * u).astype(po_ref.dtype)
+
+
+def adam_apply_2d(p, m, v, *, lr, bc1, bc2, eps: float = 1e-8,
+                  weight_decay: float = 0.0, interpret: bool = False):
+    """p: (R, LANES); m, v: (R, LANES) fp32. Returns updated p (aliased)."""
+    assert p.shape == m.shape == v.shape and p.shape[1] == LANES
+    rows = p.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(bc1, jnp.float32),
+                         jnp.asarray(bc2, jnp.float32)])
+    grid = (rows // block,)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps, weight_decay=weight_decay),
+        grid=grid,
+        in_specs=[pl.BlockSpec((3,), lambda i: (0,)),   # step-dependent scalars
+                  spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        input_output_aliases={1: 0},            # p updated in place
+        interpret=interpret,
+    )(scalars, p, m, v)

@@ -1,0 +1,53 @@
+"""Fused AdamA accumulate kernel (Pallas, TPU target).
+
+The optimizer-accumulation inner loop (Algorithm 2):
+    m += (1-b1) * s * g
+    v += (1-b2) * (s*g)^2
+
+Unfused this is 2 kernels with 5 HBM reads + 2 writes of param-sized arrays
+(g read twice, m, v read+write). The fused kernel reads g ONCE and performs
+both read-modify-writes in a single pass: 3 reads + 2 writes — a 28% cut in
+optimizer-path HBM traffic, which matters because AdamA runs this fold N
+times per mini-batch (vs once for plain Adam).
+
+TPU mapping: tensors are flattened and tiled to (BLOCK_ROWS, 1024) VMEM
+blocks — 1024 = 8 sublanes * 128 lanes keeps the VPU fully occupied and the
+last dim hardware-aligned. m and v are aliased input->output (in-place), so
+the kernel allocates nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024          # 8 sublanes x 128 lanes
+BLOCK_ROWS = 256      # (256, 1024) fp32 = 1 MB per operand block in VMEM
+
+
+def _kernel(m_ref, v_ref, g_ref, mo_ref, vo_ref, *, beta1, beta2, scale):
+    g = g_ref[...].astype(jnp.float32) * scale
+    mo_ref[...] = m_ref[...] + (1.0 - beta1) * g
+    vo_ref[...] = v_ref[...] + (1.0 - beta2) * (g * g)
+
+
+def adama_accum_2d(m, v, g, *, beta1: float, beta2: float, scale: float = 1.0,
+                   interpret: bool = False):
+    """m, v: (R, LANES) fp32; g: (R, LANES) any float dtype. In-place aliased."""
+    assert m.shape == v.shape == g.shape and m.shape[1] == LANES, m.shape
+    rows = m.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0
+    grid = (rows // block,)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, beta1=beta1, beta2=beta2, scale=scale),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32)] * 2,
+        input_output_aliases={0: 0, 1: 1},      # m, v updated in place
+        interpret=interpret,
+    )(m, v, g)

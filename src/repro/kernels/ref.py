@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adama_accum_ref(m, v, g, *, beta1, beta2, scale=1.0):
+    g = g.astype(jnp.float32) * scale
+    return m + (1 - beta1) * g, v + (1 - beta2) * jnp.square(g)
+
+
+def adam_apply_ref(p, m, v, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
+    mh = m / bc1
+    vh = v / bc2
+    u = mh / (jnp.sqrt(vh) + eps)
+    if weight_decay:
+        u = u + weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0):
+    """Token-by-token RWKV-6 recurrence (oracle for kernels/rwkv6_chunk.py):
+    y_t = r_t @ (S + diag(u) k_t v_t^T);  S <- diag(exp(logw_t)) S + k_t v_t^T
+    Shapes: r/k/logw (BH,S,K); v (BH,S,V); u (BH,K); s0 (BH,K,V)."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bk,bv->bkv", kt, vt)
+        y = jnp.einsum("bk,bkv->bv", rt, st + u[:, :, None] * kv)
+        return st * jnp.exp(wt)[:, :, None] + kv, y
+
+    st, ys = jax.lax.scan(step, s0, (r.transpose(1, 0, 2), k.transpose(1, 0, 2),
+                                     v.transpose(1, 0, 2),
+                                     logw.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), st

@@ -1,0 +1,98 @@
+"""RWKV-6 chunked linear-recurrence kernel (Pallas, TPU target).
+
+The time-mix recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T with
+data-dependent decay is the compute hot-spot of the attention-free archs
+(rwkv6-7b). The chunk-parallel formulation does per-chunk MXU matmuls with a
+sequential carry over chunk states; XLA schedules the carried state through
+HBM every scan step. This kernel keeps the (K, V) state resident in VMEM
+across the whole sequence (grid = (BH, n_chunks), state in scratch persisting
+along the last grid dim) — per chunk it reads only the (C, K) r/k/v/logw
+tiles and writes the (C, V) output tile: HBM traffic drops from
+O(n_chunks * K * V) state movement to zero.
+
+Math (per head, chunk of length C, inclusive log-decay cumsum cw):
+    y_inter[t] = (r_t * exp(cw_ex[t])) @ S
+    y_intra[t] = sum_{i<t} (r_t . k_i . exp(cw_ex[t]-cw[i])) v_i
+               + (r_t . u . k_t) v_t
+    S' = diag(exp(cw[-1])) S + sum_i (k_i * exp(cw[-1]-cw[i])) v_i^T
+Matches models/modules.rwkv6_timemix exactly (ref oracle = that function).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+            state, *, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    r = r_ref[0].astype(jnp.float32)          # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    logw = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, K) bonus
+
+    cw = jnp.cumsum(logw, axis=0)             # inclusive
+    cw_ex = cw - logw
+    total = cw[-1:]                           # (1, K)
+
+    s = state[...]
+    rdec = r * jnp.exp(cw_ex)
+    y_inter = rdec @ s                        # (C, V)
+
+    # intra-chunk pairwise decay (C, C, K), stable (exponent <= 0 for i < t)
+    c = r.shape[0]
+    dmat = cw_ex[:, None, :] - cw[None, :, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >
+           jax.lax.broadcasted_iota(jnp.int32, (c, c), 1))
+    dmat = jnp.where(tri[:, :, None], dmat, -jnp.inf)
+    att = jnp.einsum("ck,jk,cjk->cj", r, k, jnp.exp(dmat),
+                     preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * u * k, axis=-1, keepdims=True)    # (C, 1)
+    y_intra = att @ v + bonus * v
+
+    y_ref[0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    kdec = k * jnp.exp(total - cw)
+    state[...] = s * jnp.exp(total).T + kdec.T @ v
+
+    @pl.when(ci == n_chunks - 1)
+    def _out():
+        sout_ref[0] = state[...]
+
+
+def rwkv6_chunk_scan(r, k, v, logw, u, s0, *, chunk: int = 64,
+                     interpret: bool = False):
+    """r/k/v/logw: (BH, S, K) — S a multiple of `chunk`; u: (BH, K) bonus;
+    s0: (BH, K, V) initial state. Returns (y (BH, S, V), s_final)."""
+    bh, s, kk = r.shape
+    vv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    tile = lambda: pl.BlockSpec((1, chunk, kk), lambda b, c: (b, c, 0))
+    vspec = pl.BlockSpec((1, chunk, vv), lambda b, c: (b, c, 0))
+    yspec = pl.BlockSpec((1, chunk, vv), lambda b, c: (b, c, 0))
+    uspec = pl.BlockSpec((1, 1, kk), lambda b, c: (b, 0, 0))
+    sspec = pl.BlockSpec((1, kk, vv), lambda b, c: (b, 0, 0))
+    y, s_out = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks),
+        grid=(bh, n_chunks),
+        in_specs=[tile(), tile(), vspec, tile(), uspec, sspec],
+        out_specs=[yspec, sspec],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, vv), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, kk, vv), jnp.float32)],
+        # the recurrent state lives in VMEM scratch, persisting across the
+        # chunk grid dim — the whole point of the kernel (no HBM state traffic)
+        scratch_shapes=[pltpu.VMEM((kk, vv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u.reshape(bh, 1, kk), s0)
+    return y, s_out

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve CLIs.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+dedicated process.
+"""

@@ -1,0 +1,264 @@
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers, compiles, and fits — without hardware.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b \
+      --shape train_4k [--multi-pod] [--engine pjit|shardmap] \
+      [--accum adama|ga|adama_layerwise] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Writes one JSON artifact per combination with memory_analysis, cost_analysis
+and the loop-aware collective-byte breakdown (read by benchmarks/roofline.py).
+"""
+# The next two lines MUST run before any other import (jax locks the device
+# count at first init). Do NOT replicate this env var anywhere global —
+# smoke tests and benches must see the single real device.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, OptimizerConfig,
+                           get_config, shape_supported)
+from repro.core.accumulation import make_train_step
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import ctx as shard_ctx
+from repro.launch.specs import input_specs
+from repro.models.decode import prefill, prefill_whisper, serve_step
+from repro.models.model import abstract_params
+from repro.sharding.rules import Rules
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, dtype)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
+                  accum="adama", micro_batches=8, fsdp=True, remat=True,
+                  use_pallas=False, optimizer="adama", zero1=False,
+                  profile="tp2d", extra_opt=None):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return None, why
+    tp = mesh.shape.get("model", 1) if profile != "dp" else 1
+    rules = Rules(cfg, mesh, fsdp=fsdp, profile=profile)
+    aparams = abstract_params(cfg, tp=tp)
+    pspecs = rules.params_pspecs(aparams)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    if shape.kind == "train":
+        opt = OptimizerConfig(name=optimizer, accumulation=accum,
+                              micro_batches=micro_batches,
+                              use_pallas=use_pallas,
+                              **(extra_opt or {}))
+        if engine == "shardmap":
+            from repro.core.dp_shardmap import make_dp_train_step
+            dp = rules.dp_axes()
+            step, opt_init = make_dp_train_step(cfg, opt, mesh, dp,
+                                                "adama" if accum != "ga" else "ga",
+                                                remat=remat)
+        else:
+            step, opt_init = make_train_step(cfg, opt, remat=remat)
+        aopt = jax.eval_shape(opt_init, aparams)
+        ospecs = rules.opt_pspecs(aopt, aparams, zero1=zero1)
+        osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
+        batch = input_specs(cfg, shape)
+        bspecs = rules.batch_pspecs(batch)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs)
+        # under shard_map the dp axes are manual: activation constraints may
+        # only reference the auto ("model") axis
+        ctx_dp = () if engine == "shardmap" else rules.dp_axes()
+        with mesh, shard_ctx.use_mesh(mesh, ctx_dp):
+            lowered = jax.jit(
+                step,
+                in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh,
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            ).lower(aparams, aopt, batch)
+        return lowered, ""
+
+    # serving paths use bf16 weights
+    aparams = _cast_tree(aparams, jnp.bfloat16)
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        bspecs = rules.batch_pspecs(batch)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs)
+        fn = prefill_whisper if cfg.arch_type == "audio" else prefill
+        acache = jax.eval_shape(lambda p, b: fn(cfg, p, b)[1], aparams, batch)
+        cspecs = rules.cache_pspecs(acache)
+        csh = {k: NamedSharding(mesh, s) for k, s in cspecs.items()}
+        dp = rules.dp_axes()
+        with mesh, shard_ctx.use_mesh(mesh, dp):
+            lowered = jax.jit(
+                lambda p, b: fn(cfg, p, b),
+                in_shardings=(psh, bsh),
+                out_shardings=(NamedSharding(mesh, P(dp)), csh),
+            ).lower(aparams, batch)
+        return lowered, ""
+
+    # decode
+    cache, token, pos = input_specs(cfg, shape)
+    cspecs = rules.cache_pspecs(cache)
+    csh = {k: NamedSharding(mesh, s) for k, s in cspecs.items()}
+    dp = rules.dp_axes()
+    import numpy as np
+    dpsz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = P(dp) if token.shape[0] % max(dpsz, 1) == 0 and dp else P()
+    bsh = NamedSharding(mesh, bspec)
+    with mesh, shard_ctx.use_mesh(mesh, dp if bspec != P() else ()):
+        lowered = jax.jit(
+            lambda p, c, t, s_: serve_step(cfg, p, c, t, s_),
+            in_shardings=(psh, csh, bsh, bsh),
+            out_shardings=(NamedSharding(mesh, bspec), csh),
+            donate_argnums=(1,),
+        ).lower(aparams, cache, token, pos)
+    return lowered, ""
+
+
+def run_one(arch, shape_name, multi_pod, outdir, **kw):
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    for k, v in kw.items():
+        if k in ("engine", "accum") and v not in ("pjit", "adama"):
+            tag += f"__{k}-{v}"
+        if k == "profile" and v != "tp2d":
+            tag += f"__{k}-{v}"
+        if k == "use_pallas" and v:
+            tag += "__pallas"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        lowered, why = build_lowered(arch, shape_name, mesh,
+                                     **kw)
+    except Exception as e:
+        traceback.print_exc()
+        return {"tag": tag, "status": "LOWER_FAIL", "error": f"{type(e).__name__}: {e}"}
+    if lowered is None:
+        rec = {"tag": tag, "status": "SKIP", "reason": why}
+        _write(outdir, tag, rec)
+        print(f"[dryrun] {tag}: SKIP ({why})")
+        return rec
+    t_lower = time.time() - t0
+    try:
+        compiled = lowered.compile()
+    except Exception as e:
+        traceback.print_exc()
+        rec = {"tag": tag, "status": "COMPILE_FAIL",
+               "error": f"{type(e).__name__}: {e}"}
+        _write(outdir, tag, rec)
+        return rec
+    t_compile = time.time() - t0 - t_lower
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    hlo = analyze_hlo(txt)
+    coll = {k[5:]: v for k, v in hlo.items() if k.startswith("coll_")}
+    coll["total"] = hlo.get("coll_total", 0.0)
+    n_dev = 512 if multi_pod else 256
+    rec = {
+        "tag": tag, "status": "OK", "arch": arch, "shape": shape_name,
+        "mesh": mesh_tag, "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes +
+                                      ma.output_size_in_bytes +
+                                      ma.temp_size_in_bytes -
+                                      ma.alias_size_in_bytes),
+        },
+        "cost": {"flops": ca.get("flops", 0.0),
+                 "bytes_accessed": ca.get("bytes accessed", 0.0),
+                 # loop-aware (trip-count-multiplied) parses — use these
+                 "flops_loop_aware": hlo.get("flops", 0.0),
+                 "bytes_loop_aware": hlo.get("bytes", 0.0)},
+        "collectives": coll,
+        "options": {k: str(v) for k, v in kw.items()},
+    }
+    _write(outdir, tag, rec)
+    gb = 1 << 30
+    print(f"[dryrun] {tag}: OK peak/device={rec['memory']['peak_bytes_per_device']/gb:.2f} GiB "
+          f"flops={rec['cost']['flops']:.3e} coll={coll.get('total', 0)/gb:.3f} GiB "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
+def _write(outdir, tag, rec):
+    if outdir:
+        Path(outdir).mkdir(parents=True, exist_ok=True)
+        with open(Path(outdir) / f"{tag}.json", "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--engine", default="pjit", choices=["pjit", "shardmap"])
+    ap.add_argument("--accum", default="adama",
+                    choices=["ga", "adama", "adama_layerwise"])
+    ap.add_argument("--optimizer", default="adama",
+                    choices=["adam", "adama", "adafactor", "sm3"])
+    ap.add_argument("--micro-batches", type=int, default=8)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--profile", default="tp2d", choices=["tp2d", "dp"])
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    kw = dict(engine=args.engine, accum=args.accum,
+              micro_batches=args.micro_batches, fsdp=not args.no_fsdp,
+              remat=not args.no_remat, zero1=args.zero1,
+              use_pallas=args.use_pallas, optimizer=args.optimizer,
+              profile=args.profile)
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    fails = 0
+    for arch, shape in combos:
+        mesh_tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+        tag = f"{arch}__{shape}__{mesh_tag}"
+        p = Path(args.out) / f"{tag}.json"
+        if args.skip_existing and p.exists():
+            st = json.loads(p.read_text()).get("status")
+            if st in ("OK", "SKIP"):
+                print(f"[dryrun] {tag}: cached {st}")
+                continue
+        rec = run_one(arch, shape, args.multi_pod, args.out, **kw)
+        if rec["status"] not in ("OK", "SKIP"):
+            fails += 1
+            print(f"[dryrun] {tag}: {rec['status']}: {rec.get('error')}")
+    if fails:
+        raise SystemExit(f"{fails} combinations failed")
+    print("[dryrun] all combinations OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Loop-aware analysis of compiled HLO text: collective traffic, matmul
+FLOPs, and approximate HBM bytes.
+
+Why not `compiled.cost_analysis()`? It reports the module body ONCE — a
+lax.scan over 60 layers or 8 micro-batches contributes a single iteration,
+underestimating FLOPs/bytes by the trip count. We parse `compiled.as_text()`
+ourselves: every computation is scanned for ops, and call sites (`calls=`,
+`body=`, `to_apply=`, `branch_computations=`) are walked from ENTRY with
+multipliers — `while` bodies multiply by their `known_trip_count`.
+
+Collective bytes per device use the ring model with group size n parsed from
+`replica_groups=[g,n]<=[...]`:
+    all-reduce          2*(n-1)/n * result_bytes
+    all-gather          (n-1)/n  * result_bytes
+    reduce-scatter      (n-1)    * result_bytes   (result is the shard)
+    all-to-all          (n-1)/n  * result_bytes
+    collective-permute  result_bytes
+
+FLOPs: 2 * prod(result_dims) * prod(contracting_dims) per `dot` (the MXU
+term; elementwise flops are ignored — they are bandwidth-, not compute-bound).
+
+Bytes: per op, result bytes + operand bytes (post-fusion HLO, so fusion
+parameters/results approximate HBM traffic), skipping pure aliasing ops.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id", "iota"}
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("all-gather", "all-to-all"):
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    return 1.0
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry = None
+        cur = None
+        for line in text.splitlines():
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$",
+                         line)
+            if m:
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+            elif cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                else:
+                    self.comps[cur].append(line)
+
+        # per computation: symbol table, ops, edges
+        self.symbols: Dict[str, Dict[str, str]] = {}
+        self.ops: Dict[str, list] = {}
+        self.edges: Dict[str, list] = {}
+        for name, lines in self.comps.items():
+            table: Dict[str, str] = {}
+            ops = []
+            edges = []
+            for line in lines:
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                var, rtype, op = dm.groups()
+                table[var] = rtype
+                operands = re.findall(r"%([\w.\-]+)", line.split("(", 1)[1])
+                ops.append((var, rtype, op, operands, line))
+                trip = 1
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+                if tm:
+                    trip = int(tm.group(1))
+                for cm in re.finditer(
+                        r"(calls|body|condition|to_apply|branch_computations)"
+                        r"=\{?%?([\w.\-]+)", line):
+                    kindc, callee = cm.groups()
+                    edges.append((callee, trip if kindc == "body" else 1))
+                bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if bm:
+                    for c in bm.group(1).split(",")[1:]:
+                        edges.append((c.strip().lstrip("%"), 1))
+            self.symbols[name] = table
+            self.ops[name] = ops
+            self.edges[name] = edges
+
+    # ------------------------------------------------------------------
+    def analyze(self) -> Dict[str, float]:
+        res: Dict[str, float] = defaultdict(float)
+        stack = set()
+
+        def walk(comp: str, mult: float):
+            if comp not in self.comps or comp in stack:
+                return
+            stack.add(comp)
+            table = self.symbols[comp]
+            for var, rtype, op, operands, line in self.ops[comp]:
+                if op in _COLLECTIVES or op.rstrip("-start") in _COLLECTIVES:
+                    kind = op[:-6] if op.endswith("-start") else op
+                    if kind in _COLLECTIVES:
+                        rg = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+                        n = int(rg.group(2)) if rg else 1
+                        b = _shape_bytes(rtype)
+                        res[f"coll_{kind}"] += mult * b * _ring_factor(kind, n)
+                        res[f"coll_{kind}_raw"] += mult * b
+                if op == "dot":
+                    shapes = _shape_dims(rtype)
+                    if shapes:
+                        _, rdims = shapes[0]
+                        rprod = 1
+                        for d in rdims:
+                            rprod *= d
+                        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                       line)
+                        cprod = 1
+                        if cm and operands:
+                            lhs_t = table.get(operands[0], "")
+                            ls = _shape_dims(lhs_t)
+                            if ls:
+                                _, ldims = ls[0]
+                                for i in cm.group(1).split(","):
+                                    if i and int(i) < len(ldims):
+                                        cprod *= ldims[int(i)]
+                        res["flops"] += mult * 2.0 * rprod * cprod
+                if op not in _SKIP_BYTES:
+                    b = _shape_bytes(rtype)
+                    for o in operands:
+                        b += _shape_bytes(table.get(o, ""))
+                    res["bytes"] += mult * b
+            for callee, m in self.edges[comp]:
+                walk(callee, mult * m)
+            stack.discard(comp)
+
+        if self.entry:
+            walk(self.entry, 1.0)
+        res["coll_total"] = sum(v for k, v in res.items()
+                                if k.startswith("coll_") and
+                                not k.endswith("_raw") and k != "coll_total")
+        return dict(res)
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    return HloAnalysis(text).analyze()
+
+
+def analyze_collectives(text: str) -> Dict[str, float]:
+    """Back-compat shim: collective subset of analyze_hlo."""
+    res = analyze_hlo(text)
+    out = {k[5:]: v for k, v in res.items() if k.startswith("coll_")}
+    out["total"] = res.get("coll_total", 0.0)
+    return out
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation. This is what the dry-run lowers against.
+
+Decode semantics: the cache has capacity seq_len, prefilled with seq_len-1
+tokens; `serve_step` writes token seq_len-1 (the last slot) and attends over
+the full cache — "ONE new token with a KV cache of seq_len".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.decode import abstract_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "audio":
+        return {
+            "tokens": sds((gb, s), jnp.int32),
+            "labels": sds((gb, s), jnp.int32),
+            "frames": sds((gb, cfg.encoder_seq_len, cfg.d_model),
+                          jnp.dtype(cfg.compute_dtype)),
+        }
+    if cfg.arch_type == "vlm":
+        st = s - cfg.n_patch_tokens
+        return {
+            "tokens": sds((gb, st), jnp.int32),
+            "labels": sds((gb, st), jnp.int32),
+            "patches": sds((gb, cfg.n_patch_tokens, cfg.d_model),
+                           jnp.dtype(cfg.compute_dtype)),
+        }
+    return {"tokens": sds((gb, s), jnp.int32),
+            "labels": sds((gb, s), jnp.int32)}
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    sp = train_specs(cfg, shape)
+    del sp["labels"]
+    return sp
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[Any, Any, Any]:
+    """(cache, token, pos) stand-ins for serve_step."""
+    gb, s = shape.global_batch, shape.seq_len
+    cache = abstract_cache(cfg, gb, s)
+    return cache, sds((gb, 1), jnp.int32), sds((gb,), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+CPU-scale runs execute for real; production shapes are launched via
+--dry-run (see launch/dryrun.py for the mesh proof).
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --reduced \
+      --steps 50 --accumulation adama --micro-batches 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import INPUT_SHAPES, InputShape, OptimizerConfig, RunConfig, get_config
+from repro.optim import schedule as sched
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale variant of the arch family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--micro-batches", type=int, default=4)
+    ap.add_argument("--accumulation", default="adama",
+                    choices=["ga", "adama", "adama_layerwise"])
+    ap.add_argument("--optimizer", default="adama",
+                    choices=["adam", "adama", "adafactor", "sm3"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = InputShape("cli", args.seq_len, args.global_batch, "train")
+    run = RunConfig(
+        model=cfg,
+        optimizer=OptimizerConfig(
+            name=args.optimizer, accumulation=args.accumulation,
+            micro_batches=args.micro_batches, lr=args.lr,
+            use_pallas=args.use_pallas),
+        shape=shape, seed=args.seed, steps=args.steps,
+        log_every=args.log_every, checkpoint_dir=args.checkpoint_dir)
+    lr_fn = sched.warmup_cosine(args.lr, args.warmup, args.steps)
+    out = train(run, lr_schedule=lr_fn)
+    print(f"[train] done; final loss {out['losses'][-1]:.4f} "
+          f"(first {out['losses'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

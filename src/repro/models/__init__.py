@@ -1,0 +1,3 @@
+from repro.models import decode, model, modules
+
+__all__ = ["model", "modules", "decode"]

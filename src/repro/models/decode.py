@@ -1,0 +1,456 @@
+"""Serving path: KV/latent/recurrent caches, prefill and single-token decode.
+
+`serve_step` is what the decode input shapes (decode_32k, long_500k) lower:
+ONE new token against a cache of seq_len. Cache layouts per family:
+
+  gqa/swa : k,v (L,B,Sc,KV,hd)  Sc = min(S, window) ring for swa
+  mla     : latent (L,B,Sc,R), k_rope (L,B,Sc,dr)   — the MLA memory win
+  rwkv    : wkv (L,B,H,K,V) fp32, shift_a/shift_c (L,B,D)
+  hybrid  : swa ring k,v + mamba conv (L,B,dc-1,di) + ssm (L,B,di,N)
+  audio   : self k,v + precomputed cross k,v (L,B,Se,KV,hd)
+
+All caches carry `cache_pos` (B,Sc) int32 with INT32_MAX marking empty slots
+(masked in attention) and `pos` is passed per step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import modules as md
+from repro.models.model import (_cdt, apply_block, embed_tokens,
+                                main_stack_kind, n_main_layers)
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.attention == "swa" and cfg.window is not None:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    l = n_main_layers(cfg)
+    sc = cache_len(cfg, seq_len)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = _cdt(cfg)
+    c: Dict[str, Any] = {
+        "cache_pos": jnp.full((batch, sc), INT_MAX, jnp.int32),
+    }
+    kind = main_stack_kind(cfg)
+    if kind in ("dense", "hybrid", "moe", "dec"):
+        if cfg.attention == "mla":
+            r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+            c["latent"] = jnp.zeros((l, batch, sc, r), dt)
+            c["k_rope"] = jnp.zeros((l, batch, sc, dr), dt)
+        else:
+            c["k"] = jnp.zeros((l, batch, sc, kv, hd), dt)
+            c["v"] = jnp.zeros((l, batch, sc, kv, hd), dt)
+    if cfg.moe is not None and cfg.moe.dense_prefix:
+        lp = cfg.moe.dense_prefix
+        if cfg.attention == "mla":
+            c["latent_p"] = jnp.zeros((lp, batch, sc, cfg.kv_lora_rank), dt)
+            c["k_rope_p"] = jnp.zeros((lp, batch, sc, cfg.qk_rope_head_dim), dt)
+        else:
+            c["k_p"] = jnp.zeros((lp, batch, sc, kv, hd), dt)
+            c["v_p"] = jnp.zeros((lp, batch, sc, kv, hd), dt)
+    if kind == "rwkv":
+        h = cfg.d_model // cfg.ssm.head_dim
+        k = cfg.ssm.head_dim
+        c["wkv"] = jnp.zeros((l, batch, h, k, k), jnp.float32)
+        c["shift_a"] = jnp.zeros((l, batch, cfg.d_model), dt)
+        c["shift_c"] = jnp.zeros((l, batch, cfg.d_model), dt)
+        del c["cache_pos"]
+    if kind == "hybrid":
+        di = cfg.ssm.expand * cfg.d_model
+        c["conv"] = jnp.zeros((l, batch, cfg.ssm.d_conv - 1, di), dt)
+        c["ssm"] = jnp.zeros((l, batch, di, cfg.ssm.d_state), jnp.float32)
+    if kind == "dec":
+        se = cfg.encoder_seq_len
+        c["ck"] = jnp.zeros((l, batch, se, kv, hd), dt)
+        c["cv"] = jnp.zeros((l, batch, se, kv, hd), dt)
+    return c
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode-step attention helpers
+# ---------------------------------------------------------------------------
+
+
+def _gqa_step(cfg, p, x, k_c, v_c, cache_pos, pos):
+    """x (B,1,D); k_c/v_c (B,Sc,KV,hd). Returns (y, new_k, new_v)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(x.dtype))
+    if cfg.pos_emb == "rope":
+        pp = pos[:, None]
+        q = md.apply_rope(q.transpose(0, 2, 1, 3), pp, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = md.apply_rope(k.transpose(0, 2, 1, 3), pp, cfg.rope_theta).transpose(0, 2, 1, 3)
+    sc = k_c.shape[1]
+    slot = pos % sc
+    bi = jnp.arange(x.shape[0])
+    k_c = k_c.at[bi, slot].set(k[:, :, 0].transpose(0, 1, 2))
+    v_c = v_c.at[bi, slot].set(v[:, :, 0])
+    window = cfg.window if cfg.attention == "swa" else None
+    y = md.single_query_attention(
+        q, k_c.transpose(0, 2, 1, 3), v_c.transpose(0, 2, 1, 3),
+        q_position=pos, kv_positions=cache_pos, window=window)
+    return jnp.einsum("bhsk,hkd->bsd", y, p["wo"].astype(x.dtype)), k_c, v_c
+
+
+def _mla_step(cfg, p, x, lat_c, kr_c, cache_pos, pos):
+    """MLA decode: cache the compressed latent. Default path attends in the
+    LATENT space (wkv_b absorbed into q and the output) — per-head K/V are
+    never expanded over the cache. The naive path (expand then attend) is
+    kept for the A/B in EXPERIMENTS.md §Perf."""
+    import math
+    q_nope, q_rope = md.mla_project_q(cfg, p, x)            # (B,H,1,*)
+    latent, k_rope = md.mla_latent(cfg, p, x)               # (B,1,R),(B,1,dr)
+    pp = pos[:, None]
+    q_rope = md.apply_rope(q_rope.transpose(0, 2, 1, 3), pp,
+                           cfg.rope_theta).transpose(0, 2, 1, 3)
+    k_rope = md.apply_rope(k_rope, pp, cfg.rope_theta)
+    sc = lat_c.shape[1]
+    slot = pos % sc
+    bi = jnp.arange(x.shape[0])
+    lat_c = lat_c.at[bi, slot].set(latent[:, 0])
+    kr_c = kr_c.at[bi, slot].set(k_rope[:, 0])
+    h = q_nope.shape[1]
+    dn = cfg.qk_nope_head_dim
+
+    if cfg.mla_absorbed_decode:
+        wkv_b = p["wkv_b"].astype(x.dtype)                  # (R,H,dn+dv)
+        scale = 1.0 / math.sqrt(dn + cfg.qk_rope_head_dim)
+        # absorb the K up-projection into q: q_lat (B,H,R)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0], wkv_b[..., :dn])
+        s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                       lat_c.astype(jnp.float32))
+        s = s + jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
+                           kr_c.astype(jnp.float32))
+        s = s * scale
+        valid = cache_pos <= pos[:, None]
+        s = jnp.where(valid[:, None], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        out_lat = jnp.einsum("bhs,bsr->bhr", w,
+                             lat_c.astype(jnp.float32)).astype(x.dtype)
+        # absorb the V up-projection into the output
+        y = jnp.einsum("bhr,rhv->bhv", out_lat, wkv_b[..., dn:])
+        y = jnp.einsum("bhv,hvd->bd", y, p["wo"].astype(x.dtype))
+        return y[:, None], lat_c, kr_c
+
+    # naive: expand cached latents to per-head K/V, then attend
+    k_nope, v = md.mla_expand_kv(cfg, p, lat_c)             # (B,H,Sc,dn/dv)
+    kr_h = jnp.broadcast_to(kr_c[:, None], (kr_c.shape[0], h) + kr_c.shape[1:])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, kr_h], axis=-1)
+    y = md.single_query_attention(q, k, v, q_position=pos,
+                                  kv_positions=cache_pos)
+    return jnp.einsum("bhsk,hkd->bsd", y, p["wo"].astype(x.dtype)), lat_c, kr_c
+
+
+def _step_block(cfg, p, x, caches, cache_pos, pos, *, kind, enc_kv=None):
+    """One block, one token. caches: dict of this layer's cache slices.
+    Returns (x, new_caches)."""
+    new = {}
+    a_in = md.apply_norm(cfg, p, x, "attn_norm_") if kind != "rwkv" else None
+    if kind == "rwkv":
+        a_in = md.apply_norm(cfg, p, x, "att_norm_")
+        y, sa, st = md.rwkv6_timemix_step(cfg, p, a_in, caches["shift_a"],
+                                          caches["wkv"])
+        new["shift_a"], new["wkv"] = sa, st
+        x = x + y
+        c_in = md.apply_norm(cfg, p, x, "ffn_norm_")
+        y, sc_ = md.rwkv6_channelmix(p, c_in, caches["shift_c"])
+        new["shift_c"] = sc_
+        return x + y, new
+
+    if cfg.attention == "mla":
+        attn, new["latent"], new["k_rope"] = _mla_step(
+            cfg, p, a_in, caches["latent"], caches["k_rope"], cache_pos, pos)
+    else:
+        attn, new["k"], new["v"] = _gqa_step(
+            cfg, p, a_in, caches["k"], caches["v"], cache_pos, pos)
+    if kind == "hybrid":
+        conv = caches["conv"]
+        di = cfg.ssm.expand * cfg.d_model
+        mam, conv2, ssm2 = md.mamba_mix(cfg, p, a_in, conv_state=conv,
+                                        ssm_state=caches["ssm"])
+        new["conv"], new["ssm"] = conv2.astype(conv.dtype), ssm2
+        attn = 0.5 * (md.rmsnorm(attn, p["fuse_norm_a"]) +
+                      md.rmsnorm(mam, p["fuse_norm_m"]))
+    x = x + attn
+    if kind == "dec":
+        c_in = md.apply_norm(cfg, p, x, "cross_norm_")
+        q = jnp.einsum("bsd,dhk->bhsk", c_in, p["wq_x"].astype(x.dtype))
+        se = enc_kv[0].shape[2]
+        kv_pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32),
+                                  (x.shape[0], se))
+        y = md.single_query_attention(q, enc_kv[0], enc_kv[1],
+                                      q_position=jnp.full((x.shape[0],), se,
+                                                          jnp.int32),
+                                      kv_positions=kv_pos)
+        x = x + jnp.einsum("bhsk,hkd->bsd", y, p["wo_x"].astype(x.dtype))
+    m_in = md.apply_norm(cfg, p, x, "mlp_norm_")
+    if kind == "moe":
+        y, _ = md.moe_ffn(cfg, p, m_in)
+    else:
+        y = md.mlp(cfg, p, m_in)
+    return x + y, new
+
+
+# ---------------------------------------------------------------------------
+# serve_step: ONE new token
+# ---------------------------------------------------------------------------
+
+_CACHE_KEYS = {
+    "dense": ["k", "v"], "moe": ["k", "v"], "dec": ["k", "v", "ck", "cv"],
+    "mla": ["latent", "k_rope"],
+    "hybrid": ["k", "v", "conv", "ssm"],
+    "rwkv": ["wkv", "shift_a", "shift_c"],
+}
+
+
+def _layer_cache_keys(cfg):
+    kind = main_stack_kind(cfg)
+    if cfg.attention == "mla" and kind in ("dense", "moe"):
+        keys = list(_CACHE_KEYS["mla"])
+    else:
+        keys = list(_CACHE_KEYS[kind])
+    return kind, keys
+
+
+def serve_step(cfg: ModelConfig, params, cache, token, pos):
+    """token (B,1) int32; pos (B,) int32 absolute position of `token`.
+    Returns (logits (B,Vp) fp32, new cache)."""
+    kind, keys = _layer_cache_keys(cfg)
+    x = embed_tokens(cfg, params, token, pos[:, None])
+    cache_pos = cache.get("cache_pos")
+    new_cache = dict(cache)
+    if cache_pos is not None:
+        # mark the new token's slot BEFORE attention so it can attend to itself
+        sc = cache_pos.shape[1]
+        bi = jnp.arange(token.shape[0])
+        cache_pos = cache_pos.at[bi, pos % sc].set(pos)
+        new_cache["cache_pos"] = cache_pos
+
+    # dense-prefix stack (MoE archs)
+    if "dense_blocks" in params:
+        pkeys = ["latent_p", "k_rope_p"] if cfg.attention == "mla" else ["k_p", "v_p"]
+        base = ["latent", "k_rope"] if cfg.attention == "mla" else ["k", "v"]
+        def pbody(carry, xs):
+            h = carry
+            lp = xs[0]
+            lc = dict(zip(base, xs[1:]))
+            h, nc = _step_block(cfg, lp, h, lc, cache_pos, pos, kind="dense")
+            return h, tuple(nc[k] for k in base)
+        x, outs = lax.scan(pbody, x,
+                           (params["dense_blocks"],) +
+                           tuple(cache[k] for k in pkeys))
+        for k, o in zip(pkeys, outs):
+            new_cache[k] = o
+
+    enc_kv = (cache["ck"], cache["cv"]) if kind == "dec" else None
+    lkeys = [k for k in keys if k not in ("ck", "cv")]
+
+    def body(carry, xs):
+        h = carry
+        lp = xs[0]
+        lc = dict(zip(lkeys, xs[1:]))
+        if kind == "dec":
+            l_enc = (lc.pop("_ck"), lc.pop("_cv")) if "_ck" in lc else None
+        h, nc = _step_block(cfg, lp, h, lc, cache_pos, pos, kind=kind,
+                            enc_kv=None)
+        return h, tuple(nc[k] for k in lkeys)
+
+    if kind == "dec":
+        def body(carry, xs):  # noqa: F811 — cross-kv variant
+            h = carry
+            lp, ck, cv = xs[0], xs[-2], xs[-1]
+            lc = dict(zip(lkeys, xs[1:-2]))
+            h, nc = _step_block(cfg, lp, h, lc, cache_pos, pos, kind=kind,
+                                enc_kv=(ck, cv))
+            return h, tuple(nc[k] for k in lkeys)
+        xs_in = (params["blocks"],) + tuple(cache[k] for k in lkeys) + \
+            (cache["ck"].transpose(0, 1, 3, 2, 4), cache["cv"].transpose(0, 1, 3, 2, 4))
+    else:
+        xs_in = (params["blocks"],) + tuple(cache[k] for k in lkeys)
+
+    x, outs = lax.scan(body, x, xs_in)
+    for k, o in zip(lkeys, outs):
+        new_cache[k] = o
+
+    x = md.apply_norm(cfg, params, x, "final_norm_")
+    logits = (x[:, 0] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also emits the cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Sequential decode-based prefill reference is O(S) scan steps; the
+    production prefill reuses the training forward (blockwise attention) and
+    projects the cache tensors in one pass."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if cfg.arch_type == "vlm":
+        patches = batch["patches"].astype(_cdt(cfg))
+        p_ = patches.shape[1]
+        s = p_ + s
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        xt = embed_tokens(cfg, params, tokens, positions[:, p_:])
+        x = jnp.concatenate([patches, xt], axis=1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = embed_tokens(cfg, params, tokens, positions)
+    kind, _ = _layer_cache_keys(cfg)
+    cache = init_cache(cfg, b, s)
+    sc = cache_len(cfg, s)
+    aux = jnp.zeros((), jnp.float32)
+
+    if kind == "rwkv":
+        def body(carry, lp):
+            h, _ = carry
+            a_in = md.apply_norm(cfg, lp, h, "att_norm_")
+            zeros_x = jnp.zeros((b, cfg.d_model), h.dtype)
+            st0 = jnp.zeros((b, cfg.d_model // cfg.ssm.head_dim,
+                             cfg.ssm.head_dim, cfg.ssm.head_dim), jnp.float32)
+            y, sa, st = md.rwkv6_timemix(cfg, lp, a_in, zeros_x, st0)
+            h = h + y
+            c_in = md.apply_norm(cfg, lp, h, "ffn_norm_")
+            y, sc_ = md.rwkv6_channelmix(lp, c_in, zeros_x)
+            return (h + y, aux), (st, sa, sc_)
+        (x, _), (wkv, sa, sc_) = lax.scan(body, (x, aux), params["blocks"])
+        cache.update(wkv=wkv, shift_a=sa, shift_c=sc_)
+    else:
+        def proj_kv(lp, h_in):
+            if cfg.attention == "mla":
+                latent, k_rope = md.mla_latent(cfg, lp, h_in)
+                k_rope = md.apply_rope(k_rope, positions, cfg.rope_theta)
+                return latent[:, -sc:], k_rope[:, -sc:]
+            k = jnp.einsum("bsd,dhk->bshk", h_in, lp["wk"].astype(h_in.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", h_in, lp["wv"].astype(h_in.dtype))
+            if cfg.pos_emb == "rope":
+                k = md.apply_rope(k, positions, cfg.rope_theta)
+            return k[:, -sc:], v[:, -sc:]
+
+        def body(carry, lp):
+            h, aux_c = carry
+            a_in = md.apply_norm(cfg, lp, h, "attn_norm_")
+            kv_out = proj_kv(lp, a_in)
+            extra = ()
+            if kind == "hybrid":
+                # run block with state extraction
+                h2, a = apply_block_with_state(cfg, lp, h, positions)
+                h_new, conv_st, ssm_st = h2
+                extra = (conv_st, ssm_st)
+                return (h_new, aux_c + a), kv_out + extra
+            h_new, a = apply_block(cfg, lp, h, positions,
+                                   kind=kind, causal=True)
+            return (h_new, aux_c + a), kv_out
+
+        if "dense_blocks" in params:
+            def pbody(carry, lp):
+                h, aux_c = carry
+                a_in = md.apply_norm(cfg, lp, h, "attn_norm_")
+                kv_out = proj_kv(lp, a_in)
+                h_new, a = apply_block(cfg, lp, h, positions, kind="dense",
+                                       causal=True)
+                return (h_new, aux_c + a), kv_out
+            (x, aux), pouts = lax.scan(pbody, (x, aux), params["dense_blocks"])
+            if cfg.attention == "mla":
+                cache["latent_p"], cache["k_rope_p"] = pouts
+            else:
+                cache["k_p"], cache["v_p"] = pouts
+
+        (x, aux), outs = lax.scan(body, (x, aux), params["blocks"])
+        if kind == "hybrid":
+            cache["k"], cache["v"], cache["conv"], cache["ssm"] = outs
+        elif cfg.attention == "mla":
+            cache["latent"], cache["k_rope"] = outs
+        else:
+            cache["k"], cache["v"] = outs
+
+    if "cache_pos" in cache:
+        cp = positions[:, -sc:]
+        cache["cache_pos"] = _ring_align(cp, s, sc)
+    x = md.apply_norm(cfg, params, x, "final_norm_")
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, cache
+
+
+def _ring_align(cp, s, sc):
+    """Place the last `sc` positions at their ring slots (pos % sc)."""
+    if s == sc:
+        return cp
+    b = cp.shape[0]
+    out = jnp.full((b, sc), INT_MAX, jnp.int32)
+    slots = cp % sc
+    bi = jnp.arange(b)[:, None]
+    return out.at[bi, slots].set(cp)
+
+
+def apply_block_with_state(cfg, p, x, positions):
+    """Hybrid block that also returns final (conv_state, ssm_state)."""
+    a_in = md.apply_norm(cfg, p, x, "attn_norm_")
+    attn = md.gqa_attention(cfg, p, a_in, positions, causal=True)
+    mam, conv_st, ssm_st = md.mamba_mix(cfg, p, a_in)
+    fused = 0.5 * (md.rmsnorm(attn, p["fuse_norm_a"]) +
+                   md.rmsnorm(mam, p["fuse_norm_m"]))
+    x = x + fused
+    m_in = md.apply_norm(cfg, p, x, "mlp_norm_")
+    x = x + md.mlp(cfg, p, m_in)
+    return (x, conv_st.astype(_cdt(cfg)), ssm_st), jnp.zeros((), jnp.float32)
+
+
+def prefill_whisper(cfg: ModelConfig, params, batch):
+    """Whisper prefill: run encoder, project cross k/v per layer, then prefill
+    the decoder self-attention cache over the given decoder tokens."""
+    frames = batch["frames"].astype(_cdt(cfg))
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    se = frames.shape[1]
+    epos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+    from repro.models.model import scan_blocks
+    e = frames + md.sinusoidal_positions(epos, cfg.d_model).astype(frames.dtype)
+    e, _ = scan_blocks(cfg, params["enc_blocks"], e, epos, kind="dense",
+                       causal=False)
+    enc_out = md.apply_norm(cfg, params, e, "enc_norm_")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(cfg, params, tokens, positions)
+    cache = init_cache(cfg, b, s)
+    sc = cache_len(cfg, s)
+
+    def body(carry, lp):
+        h = carry
+        ck, cv = md.encode_cross_kv(lp, enc_out)
+        a_in = md.apply_norm(cfg, lp, h, "attn_norm_")
+        k = jnp.einsum("bsd,dhk->bshk", a_in, lp["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", a_in, lp["wv"].astype(h.dtype))
+        h, _ = apply_block(cfg, lp, h, positions, kind="dec",
+                           causal=True, enc_kv=(ck, cv))
+        return h, (k[:, -sc:], v[:, -sc:],
+                   ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3))
+
+    x, (k, v, ck, cv) = lax.scan(body, x, params["blocks"])
+    cache.update(k=k, v=v, ck=ck, cv=cv, cache_pos=positions[:, -sc:])
+    x = md.apply_norm(cfg, params, x, "final_norm_")
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,541 @@
+"""Model building blocks, pure JAX.
+
+Everything is a function (params, x, ...) -> y over plain dict params so the
+whole model pytree can be scanned / sharded / fed to the optimizer without a
+module framework. Attention uses a blockwise online-softmax formulation
+(lax.scan over KV blocks) so 32k-token prefill never materializes an (S, S)
+score tensor — this is the TPU-native analogue of flash attention and is what
+keeps the dry-run memory analysis honest.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dtype)
+
+
+def layernorm(x, w, b, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * lax.rsqrt(var + eps) * w + b).astype(dtype)
+
+
+def apply_norm(cfg, p, x, prefix=""):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p[prefix + "scale"], p[prefix + "bias"])
+    return rmsnorm(x, p[prefix + "scale"])
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:                          # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model):
+    """Whisper-style sinusoidal absolute embeddings, computed on the fly."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (online softmax over KV chunks)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(q, k, v, *, causal, q_positions, kv_positions,
+                        window=None, kv_block=1024, softcap=None):
+    """Online-softmax attention; never materializes (Sq, Sk) for large Sk.
+
+    q: (B, Hq, Sq, hd); k: (B, Hkv, Sk, hd); v: (B, Hkv, Sk, hv)
+    q_positions: (B, Sq) absolute positions of queries
+    kv_positions: (B, Sk)
+    window: sliding-window size (None = full)
+    Returns (B, Hq, Sq, hv).
+    """
+    from repro.sharding.ctx import shard_attention_operand
+    b, hq, sq, hd = q.shape
+    _, hkv, sk, hv = v.shape
+    scale = 1.0 / math.sqrt(hd)
+    if hkv != hq:
+        # explicit KV repeat: a (hkv, group) reshape of the q-head axis is
+        # un-shardable under GSPMD when hkv doesn't divide the TP axis; the
+        # repeat keeps the head axis intact so q-head TP sharding propagates.
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    q = shard_attention_operand(q)
+    k = shard_attention_operand(k)
+    v = shard_attention_operand(v)
+    nblk = max(1, -(-sk // kv_block))
+    pad = nblk * kv_block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(b, hq, nblk, kv_block, hd).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hq, nblk, kv_block, hv).transpose(2, 0, 1, 3, 4)
+    pb = kv_positions.reshape(b, nblk, kv_block).transpose(1, 0, 2)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk                                   # (B,H,kb,hd) ...
+        kc = shard_attention_operand(kc)   # keep the kv-block (contraction)
+        vc = shard_attention_operand(vc)   # dim unsharded inside the scan
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc.astype(jnp.float32)) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        pad_ok = (pc[:, None, :] < jnp.iinfo(jnp.int32).max) & \
+            jnp.ones_like(q_positions[:, :, None], dtype=bool)
+        if causal:
+            valid = (pc[:, None, :] <= q_positions[:, :, None]) & pad_ok
+        else:
+            valid = pad_ok
+        if window is not None:
+            valid = valid & (pc[:, None, :] > q_positions[:, :, None] - window)
+        mask = valid[:, None]                              # (B,1,Sq,kb)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+        corr = jnp.where(jnp.isinf(m), 0.0, corr)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkv->bhqv", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, hv), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def single_query_attention(q, k, v, *, q_position, kv_positions, window=None):
+    """Decode-step attention: q (B,Hq,1,hd), cache k/v (B,Hkv,S,hd/hv)."""
+    b, hq, _, hd = q.shape
+    hkv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    qf = q[:, :, 0].astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", qf, k.astype(jnp.float32)) * scale
+    valid = kv_positions <= q_position[:, None]            # (B,S)
+    if window is not None:
+        valid = valid & (kv_positions > q_position[:, None] - window)
+    s = jnp.where(valid[:, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bhkv->bhv", p, v.astype(jnp.float32))
+    return out[:, :, None].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sublayer (train / prefill path)
+# ---------------------------------------------------------------------------
+
+
+def gqa_attention(cfg, p, x, positions, *, causal=True):
+    """p: wq (D,Hq,hd), wk/wv (D,Hkv,hd), wo (Hq,hd,D)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(x.dtype))
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    window = cfg.window if cfg.attention == "swa" else None
+    out = blockwise_attention(q, k, v, causal=causal, q_positions=positions,
+                              kv_positions=positions, window=window)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_attention(cfg, p, x, enc_kv, positions):
+    """Whisper cross-attention; enc_kv = (k, v) each (B,Hkv,Se,hd)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq_x"].astype(x.dtype))
+    k, v = enc_kv
+    se = k.shape[2]
+    kv_pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (x.shape[0], se))
+    out = blockwise_attention(q, k, v, causal=False, q_positions=positions,
+                              kv_positions=kv_pos)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo_x"].astype(x.dtype))
+
+
+def encode_cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wk_x"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wv_x"].astype(enc_out.dtype))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def mla_project_q(cfg, p, x):
+    """Returns q_nope (B,H,S,dn), q_rope (B,H,S,dr)."""
+    if cfg.q_lora_rank:
+        ql = rmsnorm(x @ p["wq_a"].astype(x.dtype), p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bhsk", ql, p["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    dn = cfg.qk_nope_head_dim
+    return q[..., :dn], q[..., dn:]
+
+
+def mla_latent(cfg, p, x):
+    """Compressed KV: returns (latent (B,S,R) rms-normed, k_rope (B,S,dr))."""
+    kv = x @ p["wkv_a"].astype(x.dtype)                    # (B,S,R+dr)
+    latent, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    return rmsnorm(latent, p["kv_norm"]), k_rope
+
+
+def mla_expand_kv(cfg, p, latent):
+    """latent (B,S,R) -> k_nope (B,H,S,dn), v (B,H,S,dv)."""
+    kv = jnp.einsum("bsr,rhk->bhsk", latent, p["wkv_b"].astype(latent.dtype))
+    dn = cfg.qk_nope_head_dim
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_attention(cfg, p, x, positions, *, causal=True):
+    q_nope, q_rope = mla_project_q(cfg, p, x)
+    latent, k_rope = mla_latent(cfg, p, x)
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions,
+                        cfg.rope_theta).transpose(0, 2, 1, 3)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B,S,dr) shared
+    k_nope, v = mla_expand_kv(cfg, p, latent)
+    h = q_nope.shape[1]
+    k_rope_h = jnp.broadcast_to(k_rope[:, None], (k_rope.shape[0], h) + k_rope.shape[1:])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = blockwise_attention(q, k, v, causal=causal, q_positions=positions,
+                              kv_positions=positions)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp(cfg, p, x):
+    a = act_fn(cfg.act)
+    if "w_gate" in p:                                       # gated (silu) FFN
+        h = a(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    else:                                                   # plain (gelu) FFN
+        h = a(x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based per-row routing; expert-parallel over the "model" axis)
+# ---------------------------------------------------------------------------
+
+
+def _route_row(ids, gates, x_row, n_experts, capacity):
+    """Route one row. ids/gates: (S,k); x_row: (S,D). Returns
+    (buf (E*C, D), tok_slot (E*C,), gate_slot (E*C,)) — the slot->token maps
+    let the combine be an expert-side scatter-add, which stays local per
+    expert shard (token-side gathers force GSPMD to all-gather the whole
+    expert buffer)."""
+    s, k = ids.shape
+    flat_ids = ids.reshape(-1)
+    order = jnp.argsort(flat_ids)                           # stable
+    sorted_ids = flat_ids[order]
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(n_experts), side="left")
+    pos = jnp.arange(s * k, dtype=jnp.int32) - starts[sorted_ids].astype(jnp.int32)
+    keep = pos < capacity
+    # dropped copies scatter to an out-of-range slot => discarded (mode=drop)
+    dst = jnp.where(keep, sorted_ids * capacity + pos, n_experts * capacity)
+    tok = (order // k).astype(jnp.int32)
+    xs = x_row[tok]
+    buf = jnp.zeros((n_experts * capacity, x_row.shape[-1]), x_row.dtype)
+    buf = buf.at[dst].add(xs, mode="drop")
+    # slot-side maps (empty slots: gate 0 -> contribute nothing)
+    gate_flat = gates.reshape(-1)[order]
+    tok_slot = jnp.zeros((n_experts * capacity,), jnp.int32)
+    tok_slot = tok_slot.at[dst].set(tok, mode="drop")
+    gate_slot = jnp.zeros((n_experts * capacity,), gates.dtype)
+    gate_slot = gate_slot.at[dst].set(gate_flat, mode="drop")
+    return buf, tok_slot, gate_slot
+
+
+def moe_ffn(cfg, p, x):
+    """x: (B,S,D). Router top-k -> per-row capacity buffers -> grouped matmul
+    (expert dim shardable over 'model') -> weighted combine. Shared experts
+    run densely. Returns (y, aux_loss)."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    e, k = mc.n_experts, mc.top_k
+    capacity = int(max(k, math.ceil(s * k * mc.capacity_factor / e)))
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = lax.top_k(probs, k)                        # (B,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean(jax.nn.one_hot(ids[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * mc.router_aux_weight
+
+    buf, tok_slot, gate_slot = jax.vmap(
+        functools.partial(_route_row, n_experts=e, capacity=capacity)
+    )(ids, gates, x)
+    buf = buf.reshape(b, e, capacity, d)
+
+    # expert-parallel dispatch: the row-local scatter above produces the
+    # buffer batch-sharded with the expert dim replicated; pinning it to
+    # (batch=dp, experts=model) makes GSPMD emit ONE all-to-all (the GShard
+    # dispatch) instead of per-layer all-gather+all-reduce of the whole
+    # buffer (observed 7.7 TiB/step on deepseek-v2-236b without this).
+    from repro.sharding.ctx import maybe_shard
+    buf = maybe_shard(buf, "dp", "model", None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, p["w_gate_e"].astype(x.dtype))
+    h = act_fn(cfg.act)(h) * jnp.einsum("becd,edf->becf", buf,
+                                        p["w_up_e"].astype(x.dtype))
+    yb = jnp.einsum("becf,efd->becd", h, p["w_down_e"].astype(x.dtype))
+    yb = maybe_shard(yb, "dp", "model", None, None)
+    yb = yb.reshape(b, e * capacity, d)
+
+    # combine: expert-side scatter-add into token space. Each expert shard
+    # scatters its own slots into a PARTIAL (S, D) which GSPMD reduces with
+    # one activation-sized all-reduce — token-side gathers would all-gather
+    # the full expert buffer instead.
+    def combine_row(y_row, tok_r, gate_r):
+        contrib = y_row * gate_r[:, None].astype(y_row.dtype)
+        return jnp.zeros((s, d), y_row.dtype).at[tok_r].add(contrib,
+                                                            mode="drop")
+
+    y = jax.vmap(combine_row)(yb, tok_slot, gate_slot)
+    y = maybe_shard(y, "dp", None, None)
+
+    if mc.n_shared:
+        sh = act_fn(cfg.act)(x @ p["w_gate_s"].astype(x.dtype)) * \
+            (x @ p["w_up_s"].astype(x.dtype))
+        y = y + sh @ p["w_down_s"].astype(x.dtype)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear recurrence, chunk-parallel
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, prev):
+    """Shift sequence right by one; prev: (B,D) last token of previous call."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv6_decay(p, x):
+    """Data-dependent decay (Finch's signature): w = exp(-exp(w0 + lora(x)))."""
+    lo = jnp.tanh(x @ p["w_dd_a"].astype(x.dtype)) @ p["w_dd_b"].astype(x.dtype)
+    logw = -jnp.exp(jnp.clip(p["w_base"].astype(jnp.float32) +
+                             lo.astype(jnp.float32), -20.0, 8.0))
+    return logw                                             # (B,S,D) log-decay <= 0
+
+
+def rwkv6_timemix(cfg, p, x, prev_x, state, *, chunk=64):
+    """Chunked RWKV-6 time-mix.
+
+    x: (B,S,D); prev_x: (B,D) token-shift carry; state: (B,H,K,V) wkv state.
+    Returns (y, new_prev_x, new_state).
+    """
+    b, s, d = x.shape
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    xs = _token_shift(x, prev_x)
+    # static lerp mixes per projection (paper uses ddlerp; static mix retains
+    # the data-dependent *decay*, which is Finch's core novelty)
+    def mix(name):
+        mu = p[f"mu_{name}"].astype(x.dtype)
+        return x + (xs - x) * mu
+    r = (mix("r") @ p["w_r"].astype(x.dtype)).reshape(b, s, h, hd)
+    kk = (mix("k") @ p["w_k"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = (mix("v") @ p["w_v"].astype(x.dtype)).reshape(b, s, h, hd)
+    g = jax.nn.silu(mix("g") @ p["w_g"].astype(x.dtype))
+    logw = rwkv6_decay(p, mix("w")).reshape(b, s, h, hd)    # (B,S,H,K) fp32
+    u = p["u_bonus"].astype(jnp.float32).reshape(h, hd)
+
+    # pad to chunk multiple
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, kk, v, logw = zf(r), zf(kk), zf(v), zf(logw)
+    rc = r.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = kk.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    wc = logw.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)  # (N,B,H,C,K)
+
+    def body(st, blk):
+        rb, kb, vb, wb = blk                                # (B,H,C,*)
+        c = wb.shape[2]
+        cw = jnp.cumsum(wb, axis=2)                         # inclusive cum log decay
+        cw_ex = cw - wb                                     # exclusive
+        total = cw[:, :, -1:]                               # (B,H,1,K)
+        # inter-chunk: y_inter[t] = (r_t * exp(cw_ex[t])) @ S
+        rdec = rb * jnp.exp(cw_ex)
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", rdec, st)
+        # intra-chunk pairwise decay, stably: coefficient for (t, i), i < t is
+        # exp(cw_ex[t] - cw[i]) <= 1; materialize per-dim (B,H,C,C,K) log-decay
+        # masked to -inf for i >= t, then contract with r and k in one einsum.
+        dmat = cw_ex[:, :, :, None, :] - cw[:, :, None, :, :]   # (B,H,C,C,K)
+        tri = jnp.tril(jnp.ones((c, c), bool), -1)              # strictly lower
+        dmat = jnp.where(tri[None, None, :, :, None], dmat, -jnp.inf)
+        att = jnp.einsum("bhck,bhjk,bhcjk->bhcj", rb, kb, jnp.exp(dmat))
+        # diagonal (current token) uses the u bonus
+        bonus = jnp.einsum("bhck,hk,bhck->bhc", rb, u, kb)[..., None]
+        y_intra = jnp.einsum("bhcj,bhjv->bhcv", att, vb) + bonus * vb
+        # state to next chunk: S' = diag(exp(total)) S + sum_i exp(total-cw_i) k_i v_i^T
+        kdec = kb * jnp.exp(total - cw)                     # decay-to-end keys
+        st_new = st * jnp.exp(total)[:, :, 0, :, None] + \
+            jnp.einsum("bhck,bhcv->bhkv", kdec, vb)
+        return st_new, y_inter + y_intra
+
+    state_f = state.astype(jnp.float32)
+    new_state, yc = lax.scan(body, state_f, (rc, kc, vc, wc))
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(b, nc * chunk, h, hd)[:, :s]
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(y.reshape(b, s, h, hd), p["ln_x"].reshape(h, hd)).reshape(b, s, d)
+    y = (y * g) @ p["w_o"].astype(x.dtype)
+    return y, x[:, -1], new_state.astype(state.dtype)
+
+
+def rwkv6_timemix_step(cfg, p, x, prev_x, state):
+    """Single-token decode step. x: (B,1,D)."""
+    b, _, d = x.shape
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    xs = prev_x[:, None]
+    def mix(name):
+        mu = p[f"mu_{name}"].astype(x.dtype)
+        return x + (xs - x) * mu
+    r = (mix("r") @ p["w_r"].astype(x.dtype)).reshape(b, h, hd).astype(jnp.float32)
+    kk = (mix("k") @ p["w_k"].astype(x.dtype)).reshape(b, h, hd).astype(jnp.float32)
+    v = (mix("v") @ p["w_v"].astype(x.dtype)).reshape(b, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(mix("g") @ p["w_g"].astype(x.dtype))[:, 0]
+    logw = rwkv6_decay(p, mix("w")).reshape(b, h, hd)
+    u = p["u_bonus"].astype(jnp.float32).reshape(h, hd)
+    st = state.astype(jnp.float32)                          # (B,H,K,V)
+    kv = jnp.einsum("bhk,bhv->bhkv", kk, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, st + u[None, :, :, None] * kv)
+    st = st * jnp.exp(logw)[..., None] + kv
+    y = y.reshape(b, d).astype(x.dtype)
+    y = rmsnorm(y.reshape(b, h, hd), p["ln_x"].reshape(h, hd)).reshape(b, d)
+    y = (y * g) @ p["w_o"].astype(x.dtype)
+    return y[:, None], x[:, -1], st.astype(state.dtype)
+
+
+def rwkv6_channelmix(p, x, prev_x):
+    xs = _token_shift(x, prev_x)
+    mu_k = p["mu_ck"].astype(x.dtype)
+    mu_r = p["mu_cr"].astype(x.dtype)
+    xk = x + (xs - x) * mu_k
+    xr = x + (xs - x) * mu_r
+    k = jnp.square(jax.nn.relu(xk @ p["w_ck"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["w_cr"].astype(x.dtype))
+    return r * (k @ p["w_cv"].astype(x.dtype)), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba / S6 selective SSM (for Hymba's SSM heads)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). state: (B,K-1,C)|None."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    return out, xp[:, -(k - 1):]
+
+
+def mamba_mix(cfg, p, x, conv_state=None, ssm_state=None):
+    """Selective SSM. x: (B,S,D). Returns (y, conv_state, ssm_state)."""
+    b, s, d = x.shape
+    sc = cfg.ssm
+    di = sc.expand * d
+    xz = x @ p["w_in"].astype(x.dtype)                      # (B,S,2*di)
+    xi, z = xz[..., :di], xz[..., di:]
+    xi, conv_state = _causal_conv(xi, p["conv_w"], conv_state)
+    xi = jax.nn.silu(xi + p["conv_b"].astype(x.dtype))
+    dt = jax.nn.softplus((xi @ p["w_dt_a"].astype(x.dtype)) @
+                         p["w_dt_b"].astype(x.dtype) +
+                         p["dt_bias"].astype(x.dtype))      # (B,S,di)
+    bmat = xi @ p["w_B"].astype(x.dtype)                    # (B,S,N)
+    cmat = xi @ p["w_C"].astype(x.dtype)                    # (B,S,N)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di,N)
+    dt32 = dt.astype(jnp.float32)
+    abar = jnp.exp(dt32[..., None] * a)                     # (B,S,di,N)
+    bx = dt32[..., None] * bmat[:, :, None, :].astype(jnp.float32) * \
+        xi[..., None].astype(jnp.float32)                   # (B,S,di,N)
+    if s == 1 and ssm_state is not None:
+        h = abar[:, 0] * ssm_state.astype(jnp.float32) + bx[:, 0]
+        new_ssm = h
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))[:, None]
+    else:
+        init = jnp.zeros((b, di, a.shape[-1]), jnp.float32) if ssm_state is None \
+            else ssm_state.astype(jnp.float32)
+        # associative scan over time: h_t = abar_t * h_{t-1} + bx_t
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        a_in = jnp.concatenate([jnp.ones((b, 1) + abar.shape[2:], abar.dtype), abar], 1)
+        b_in = jnp.concatenate([init[:, None], bx], 1)
+        aa, hh = lax.associative_scan(comb, (a_in, b_in), axis=1)
+        h = hh[:, 1:]
+        new_ssm = h[:, -1]
+        y = jnp.einsum("bsdn,bsn->bsd", h, cmat.astype(jnp.float32))
+    y = y.astype(x.dtype) + xi * p["D_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = y @ p["w_out"].astype(x.dtype)
+    return y, conv_state, (new_ssm.astype(jnp.float32) if ssm_state is None
+                           else new_ssm.astype(ssm_state.dtype))

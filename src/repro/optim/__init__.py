@@ -1,0 +1,3 @@
+from repro.optim import adafactor, adam, schedule, sm3
+
+__all__ = ["adam", "adafactor", "sm3", "schedule"]

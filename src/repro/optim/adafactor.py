@@ -1,0 +1,65 @@
+"""Adafactor (Shazeer & Stern, 2018) — Table-2 baseline.
+
+Factored second moment for >=2D tensors (row/col running averages), full
+accumulator for 1D. No first moment (beta1=0 variant), update clipping d=1.
+Reduces optimizer-state memory from 2P (Adam) to ~P/k — the paper's Table 2
+compares AdamA's activation+gradient savings against this optimizer-state
+saving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def init(params):
+    def leaf(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+    return {"acc": jax.tree.map(leaf, params,
+                                is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def update(grads, state, params, *, lr, beta2_pow=0.8, eps=1e-30, d_clip=1.0,
+           weight_decay=0.0, **_):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    b2 = 1.0 - t ** (-beta2_pow)
+
+    def leaf(g, acc, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p):
+            vr = b2 * acc["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * acc["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(vr[..., None] * vc[..., None, :] /
+                             jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps))
+            u = g / jnp.maximum(denom, eps)
+            new_acc = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * acc["v"] + (1 - b2) * g2
+            u = g / (jnp.sqrt(v) + eps)
+            new_acc = {"v": v}
+        u = u / jnp.maximum(1.0, _rms(u) / d_clip)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_acc
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_a = tdef.flatten_up_to(state["acc"])
+    out = [leaf(g, a, p) for g, a, p in zip(flat_g, flat_a, flat_p)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_acc = tdef.unflatten([o[1] for o in out])
+    return new_params, {"acc": new_acc, "step": step}

@@ -1,0 +1,35 @@
+"""Baseline Adam (Kingma & Ba, 2014) — the paper's comparison point."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, *, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+           weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: beta2 * v_ + (1 - beta2) *
+                     jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    bc1 = 1 - beta1 ** t
+    bc2 = 1 - beta2 ** t
+
+    def upd(p, m_, v_):
+        mh = m_ / bc1
+        vh = v_ / bc2
+        u = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}

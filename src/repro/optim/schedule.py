@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr, warmup_steps, total_steps, min_lr=0.0):
+    def f(step):
+        t = step.astype(jnp.float32)
+        w = jnp.minimum(t / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip((t - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_lr + 0.5 * (lr - min_lr) * (1 + jnp.cos(jnp.pi * prog))
+        return w * cos
+    return f
+
+
+def inverse_sqrt(lr, warmup_steps):
+    """Paper's convergence theorem assumes alpha_t = alpha / sqrt(t)."""
+    def f(step):
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        w = jnp.minimum(t / jnp.maximum(warmup_steps, 1), 1.0)
+        return w * lr / jnp.sqrt(jnp.maximum(t, warmup_steps))
+    return f

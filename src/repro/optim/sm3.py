@@ -1,0 +1,54 @@
+"""SM3 (Anil et al., 2019) — Table-2 baseline.
+
+Memory-efficient adaptive optimizer: per-axis max accumulators (SM3-II).
+For a 2D (R, C) tensor it keeps only R + C accumulator entries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    def leaf(p):
+        if p.ndim >= 2:
+            return {f"a{j}": jnp.zeros(p.shape[j], jnp.float32)
+                    for j in range(p.ndim)}
+        return {"a0": jnp.zeros_like(p, dtype=jnp.float32)}
+    return {"acc": jax.tree.map(leaf, params,
+                                is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, *, lr, eps=1e-8, weight_decay=0.0, **_):
+    step = state["step"] + 1
+
+    def leaf(g, acc, p):
+        g = g.astype(jnp.float32)
+        if p.ndim >= 2:
+            # broadcast-min of the per-axis accumulators
+            nu = None
+            for j in range(p.ndim):
+                shape = [1] * p.ndim
+                shape[j] = p.shape[j]
+                a = acc[f"a{j}"].reshape(shape)
+                nu = a if nu is None else jnp.minimum(nu, a)
+            nu = nu + jnp.square(g)
+            new_acc = {}
+            for j in range(p.ndim):
+                axes = tuple(i for i in range(p.ndim) if i != j)
+                new_acc[f"a{j}"] = jnp.max(nu, axis=axes)
+        else:
+            nu = acc["a0"] + jnp.square(g)
+            new_acc = {"a0": nu}
+        u = g / (jnp.sqrt(nu) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_acc
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_a = tdef.flatten_up_to(state["acc"])
+    out = [leaf(g, a, p) for g, a, p in zip(flat_g, flat_a, flat_p)]
+    return tdef.unflatten([o[0] for o in out]), \
+        {"acc": tdef.unflatten([o[1] for o in out]), "step": step}

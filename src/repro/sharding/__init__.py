@@ -1,0 +1,3 @@
+from repro.sharding.rules import Rules
+
+__all__ = ["Rules"]

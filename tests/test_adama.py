@@ -1,0 +1,152 @@
+"""AdamA core invariants (the paper's claims, as unit/property tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import batch_for, maxdiff, tiny
+from repro.configs import OptimizerConfig
+from repro.core import adama
+from repro.core.accumulation import make_train_step
+from repro.models.model import init_params
+from repro.optim import adam
+
+
+# ---------------------------------------------------------------------------
+# algebra: the accumulate/finalize pipeline equals the closed forms of Alg. 1
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_micro=st.integers(1, 6), b1=st.floats(0.5, 0.99),
+       b2=st.floats(0.9, 0.9999), steps=st.integers(1, 3))
+def test_adama_matches_algorithm1_closed_form(n_micro, b1, b2, steps):
+    d = 16
+    params = {"w": jnp.linspace(-1, 1, d)}
+    state = adama.init(params)
+    rng = np.random.default_rng(0)
+    m_ref = np.zeros(d)
+    v_ref = np.zeros(d)
+    w_ref = np.asarray(params["w"])
+    p = params
+    lr = 1e-2
+    for t in range(1, steps + 1):
+        grads = rng.standard_normal((n_micro, d))
+        state = adama.begin_minibatch(state, b1, b2)
+        for g in grads:
+            state = adama.accumulate(
+                state, {"w": jnp.asarray(g / n_micro, jnp.float32)}, b1, b2)
+        p, state = adama.finalize(p, state, lr=lr, beta1=b1, beta2=b2)
+        # closed form (Algorithm 1, AdamA variant of v)
+        gs = grads / n_micro
+        m_ref = b1 * m_ref + (1 - b1) * gs.sum(0)
+        v_ref = b2 * v_ref + (1 - b2) * (gs ** 2).sum(0)
+        mh = m_ref / (1 - b1 ** t)
+        vh = v_ref / (1 - b2 ** t)
+        w_ref = w_ref - lr * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(state["m"]["w"], m_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(state["v"]["w"], v_ref, rtol=1e-5, atol=1e-6)
+    # params: fp32 bias correction 1-b2^t loses ~3 digits as b2 -> 1
+    # (hypothesis found b2=0.9999); reference is fp64
+    np.testing.assert_allclose(p["w"], w_ref, rtol=3e-4, atol=1e-5)
+
+
+def test_adama_n1_equals_adam_exactly():
+    """With one micro-batch Sum(g)^2 == Sum(g^2): AdamA == Adam bit-for-bit."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    oc = OptimizerConfig(name="adama", accumulation="adama", micro_batches=1)
+    step_a, init_a = make_train_step(cfg, oc)
+    pa, sa, _ = jax.jit(step_a)(params, init_a(params), batch)
+    og = OptimizerConfig(name="adam", accumulation="ga", micro_batches=1)
+    step_g, init_g = make_train_step(cfg, og)
+    pg, sg, _ = jax.jit(step_g)(params, init_g(params), batch)
+    assert maxdiff(pa, pg) == 0.0
+    assert maxdiff(sa["m"], sg["m"]) == 0.0
+    assert maxdiff(sa["v"], sg["v"]) == 0.0
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "deepseek_v2_lite_16b",
+                                  "rwkv6_7b", "hymba_1_5b", "whisper_base",
+                                  "internvl2_26b", "bert_large"])
+def test_layerwise_equals_e2e(arch):
+    """Algorithm 2 (layer-interleaved fold) computes the same update as the
+    whole-model fold — only the schedule differs."""
+    cfg = tiny(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    oc = OptimizerConfig(name="adama", accumulation="adama", micro_batches=2)
+    ol = dataclasses.replace(oc, accumulation="adama_layerwise")
+    step_e, init_e = make_train_step(cfg, oc)
+    step_l, init_l = make_train_step(cfg, ol)
+    pe, se, me = jax.jit(step_e)(params, init_e(params), batch)
+    pl, sl, ml = jax.jit(step_l)(params, init_l(params), batch)
+    assert maxdiff(pe, pl) < 5e-6
+    assert maxdiff(se["m"], sl["m"]) < 5e-7
+    assert abs(float(me["loss"]) - float(ml["loss"])) < 1e-5
+
+
+def test_v_deviation_is_small():
+    """Fig. 4: sqrt(v_Adam)/sqrt(v_AdamA) stays within a few % after a few
+    steps on a real model."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    oc_a = OptimizerConfig(name="adama", accumulation="adama",
+                           micro_batches=4, lr=1e-3)
+    oc_g = OptimizerConfig(name="adam", accumulation="ga",
+                           micro_batches=4, lr=1e-3)
+    step_a, init_a = make_train_step(cfg, oc_a)
+    step_g, init_g = make_train_step(cfg, oc_g)
+    pa, sa = params, init_a(params)
+    pg, sg = params, init_g(params)
+    ja, jg = jax.jit(step_a), jax.jit(step_g)
+    for i in range(3):
+        batch = batch_for(cfg, 8, 16, jax.random.key(10 + i))
+        pa, sa, _ = ja(pa, sa, batch)
+        pg, sg, _ = jg(pg, sg, batch)
+    ratios = []
+    for va, vg in zip(jax.tree.leaves(sa["v"]), jax.tree.leaves(sg["v"])):
+        num = jnp.sqrt(vg) + 1e-12
+        den = jnp.sqrt(va) + 1e-12
+        ratios.append(float(jnp.median(num / den)))
+    med = float(np.median(ratios))
+    # near 1 when micro-batch gradient noise dominates the mean (paper Fig. 4
+    # reports <1% on trained nets; random init + synthetic data is looser)
+    assert 0.5 < med < 2.0, med
+
+
+def test_adama_v_geq_adam_v():
+    """Sum(g_i^2) >= (Sum g_i)^2/N — per-minibatch AdamA v dominates Adam v
+    term-wise when Adam uses the same 1/N-scaled accumulated gradient."""
+    rng = np.random.default_rng(1)
+    g = rng.standard_normal((8, 32)) / 8
+    v_adama = (g ** 2).sum(0)
+    v_adam = g.sum(0) ** 2
+    assert np.all(v_adama * 8 >= v_adam - 1e-12)
+
+
+def test_distributed_correction_equations():
+    """Eqs. 5-8: M devices x N micro == single device x N*M micro (numpy)."""
+    rng = np.random.default_rng(2)
+    M, N, d = 4, 2, 8
+    b1, b2 = 0.9, 0.99
+    grads = rng.standard_normal((M, N, d))
+    m_prev = rng.standard_normal(d)
+    v_prev = np.abs(rng.standard_normal(d))
+    # single device, N*M micro-batches, scale 1/(N*M)
+    gs = grads.reshape(M * N, d) / (M * N)
+    m_single = b1 * m_prev + (1 - b1) * gs.sum(0)
+    v_single = b2 * v_prev + (1 - b2) * (gs ** 2).sum(0)
+    # distributed: local scale 1/N, v pre-scaled by M*b2, psum(m)/M, psum(v)/M^2
+    m_loc = np.stack([b1 * m_prev + (1 - b1) * (grads[i] / N).sum(0)
+                      for i in range(M)])
+    v_loc = np.stack([M * b2 * v_prev + (1 - b2) * ((grads[i] / N) ** 2).sum(0)
+                      for i in range(M)])
+    m_dp = m_loc.sum(0) / M
+    v_dp = v_loc.sum(0) / (M ** 2)
+    np.testing.assert_allclose(m_dp, m_single, rtol=1e-12)
+    np.testing.assert_allclose(v_dp, v_single * 1.0, rtol=1e-12, atol=1e-12)

@@ -1,0 +1,74 @@
+"""Blockwise online-softmax attention vs naive oracle (incl. hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.modules import (blockwise_attention, single_query_attention)
+
+
+def naive(q, k, v, causal=True, window=None):
+    b, hq, s, hd = q.shape
+    g = hq // k.shape[1]
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / np.sqrt(hd)
+    m = jnp.tril(jnp.ones((s, s), bool)) if causal else jnp.ones((s, s), bool)
+    if window is not None:
+        m = m & (jnp.arange(s)[None] > jnp.arange(s)[:, None] - window)
+    logits = jnp.where(m, logits, -jnp.inf)
+    return jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(logits, -1), vv)
+
+
+def _mk(s, hq, hkv, hd=8, b=2):
+    ks = jax.random.split(jax.random.key(s), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, hd))
+    k = jax.random.normal(ks[1], (b, hkv, s, hd))
+    v = jax.random.normal(ks[2], (b, hkv, s, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("kv_block", [4, 16, 64])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 5),
+                                           (False, None)])
+def test_blockwise_matches_naive(kv_block, causal, window):
+    q, k, v, pos = _mk(19, 6, 2)
+    out = blockwise_attention(q, k, v, causal=causal, q_positions=pos,
+                              kv_positions=pos, window=window,
+                              kv_block=kv_block)
+    np.testing.assert_allclose(out, naive(q, k, v, causal, window),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.integers(1, 40), hq=st.sampled_from([1, 2, 4, 6]),
+       ratio=st.sampled_from([1, 2]), kv_block=st.sampled_from([3, 8, 32]))
+def test_blockwise_property(s, hq, ratio, kv_block):
+    if hq % ratio:
+        hq = ratio
+    q, k, v, pos = _mk(s, hq, hq // ratio)
+    out = blockwise_attention(q, k, v, causal=True, q_positions=pos,
+                              kv_positions=pos, kv_block=kv_block)
+    np.testing.assert_allclose(out, naive(q, k, v, True),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_single_query_matches_last_row():
+    q, k, v, pos = _mk(23, 4, 2)
+    out = single_query_attention(q[:, :, -1:], k, v, q_position=pos[:, -1],
+                                 kv_positions=pos)
+    np.testing.assert_allclose(out, naive(q, k, v, True)[:, :, -1:],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_single_query_window_ring_semantics():
+    """Sliding window: positions beyond the window must be masked even if
+    present in the cache (ring buffers keep stale slots)."""
+    q, k, v, pos = _mk(7, 2, 2)
+    w = 4
+    out = single_query_attention(q[:, :, -1:], k, v, q_position=pos[:, -1],
+                                 kv_positions=pos, window=w)
+    ref = naive(q, k, v, True, window=w)[:, :, -1:]
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,129 @@
+"""Distributed tests — run in subprocesses so each picks its own fake device
+count (jax locks the device count at first init; the main pytest process must
+keep the single real CPU device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_dp_adama_equals_single_device_nm():
+    """Paper §3.3: AdamA on (M devices, N micro) == single device (N*M micro),
+    via the M*beta2 pre-scale and /M, /M^2 all-reduce corrections."""
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.accumulation import make_train_step
+        from repro.core.dp_shardmap import make_dp_train_step
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        batch = {'tokens': tokens, 'labels': tokens}
+        M, N = 4, 2
+        mesh = jax.make_mesh((M,), ('data',), axis_types=(AxisType.Auto,))
+        oc = OptimizerConfig(name='adama', accumulation='adama', micro_batches=N*M)
+        step_s, init_s = make_train_step(cfg, oc)
+        p_s, st_s, _ = jax.jit(step_s)(params, init_s(params), batch)
+        oc2 = dataclasses.replace(oc, micro_batches=N)
+        step_d, init_d = make_dp_train_step(cfg, oc2, mesh, ('data',), 'adama')
+        with mesh:
+            p_d, st_d, _ = jax.jit(step_d)(params, init_d(params), batch)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p_s), jax.tree.leaves(p_d)))
+        dv = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(jax.tree.leaves(st_s['v']), jax.tree.leaves(st_d['v'])))
+        print('PDIFF', d, 'VDIFF', dv)
+        assert d < 1e-6 and dv < 1e-8, (d, dv)
+    """, devices=4)
+    assert "PDIFF" in out
+
+
+def test_dp_comm_schedule_volumes():
+    """Fig. 7's argument as HLO fact: per mini-batch collective volume is
+    ~P for GA, ~2P for AdamA (m and v), ~N*P for the naive schedule."""
+    out = run_sub("""
+        import dataclasses, json, jax, jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params, abstract_params
+        from repro.core.dp_shardmap import make_dp_train_step
+        from repro.launch.hlo_analysis import analyze_collectives
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        aparams = abstract_params(cfg)
+        P_bytes = sum(x.size * 4 for x in jax.tree.leaves(aparams))
+        M, N = 4, 4
+        mesh = jax.make_mesh((M,), ('data',), axis_types=(AxisType.Auto,))
+        batch = {'tokens': jax.ShapeDtypeStruct((16, 32), jnp.int32),
+                 'labels': jax.ShapeDtypeStruct((16, 32), jnp.int32)}
+        vols = {}
+        for variant in ('ga', 'adama', 'naive'):
+            oc = OptimizerConfig(name='adama', accumulation='adama', micro_batches=N)
+            step, init = make_dp_train_step(cfg, oc, mesh, ('data',), variant)
+            aopt = jax.eval_shape(init, aparams)
+            with mesh:
+                comp = jax.jit(step).lower(aparams, aopt, batch).compile()
+            coll = analyze_collectives(comp.as_text())
+            vols[variant] = coll['all-reduce_raw']
+        print(json.dumps({k: v / P_bytes for k, v in vols.items()}))
+        r = {k: v / P_bytes for k, v in vols.items()}
+        assert 0.9 < r['ga'] < 1.6, r
+        assert 1.8 < r['adama'] < 2.8, r
+        assert r['naive'] > N * 0.9, r
+        assert abs(r['adama'] - 2.0) < abs(r['naive'] - 2.0), r
+    """, devices=4)
+
+
+def test_dryrun_lowers_on_small_mesh():
+    """build_lowered compiles a FULL config on a small host mesh (the 16x16
+    production mesh is exercised by launch/dryrun.py in its own process)."""
+    run_sub("""
+        import jax
+        from jax.sharding import AxisType
+        from repro.launch.dryrun import build_lowered
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(AxisType.Auto,)*2)
+        for shape in ('train_4k', 'decode_32k'):
+            lowered, why = build_lowered('stablelm_1_6b', shape, mesh,
+                                         micro_batches=4)
+            assert lowered is not None, why
+            comp = lowered.compile()
+            assert comp.memory_analysis().temp_size_in_bytes > 0
+        print('OK')
+    """, devices=8)
+
+
+def test_shardmap_engine_lowers():
+    run_sub("""
+        import jax
+        from jax.sharding import AxisType
+        from repro.launch.dryrun import build_lowered
+        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
+                             axis_types=(AxisType.Auto,)*3)
+        lowered, why = build_lowered('stablelm_1_6b', 'train_4k', mesh,
+                                     engine='shardmap', micro_batches=4,
+                                     fsdp=False)
+        assert lowered is not None, why
+        lowered.compile()
+        print('OK')
+    """, devices=8)

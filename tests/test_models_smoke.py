@@ -1,0 +1,91 @@
+"""Required per-arch smoke tests: REDUCED variant of each assigned family,
+one forward + one AdamA train step on CPU; output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import batch_for, tiny
+from repro.configs import ARCH_IDS, OptimizerConfig, get_config
+from repro.core.accumulation import make_train_step
+from repro.models.model import forward, init_params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()           # bf16 compute, as shipped
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = init_params(cfg, jax.random.key(0))
+    b, s = 2, 32
+    batch = batch_for(cfg, b, s)
+
+    logits, aux = jax.jit(lambda p, bb: forward(cfg, p, bb))(params, batch)
+    s_out = s if cfg.arch_type != "vlm" else s
+    assert logits.shape == (b, s_out, cfg.padded_vocab())
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN/Inf logits"
+    assert bool(jnp.isfinite(aux))
+
+    step, opt_init = make_train_step(
+        cfg, OptimizerConfig(name="adama", accumulation="adama",
+                             micro_batches=2, lr=1e-3))
+    p2, s2, metrics = jax.jit(step)(params, opt_init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: NaN loss"
+    for leaf in jax.tree.leaves(p2):
+        assert bool(jnp.all(jnp.isfinite(leaf))), f"{arch}: NaN params"
+    # params actually changed
+    moved = any(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                      b_.astype(jnp.float32)))) > 0
+                for a, b_ in zip(jax.tree.leaves(params),
+                                 jax.tree.leaves(p2)))
+    assert moved, f"{arch}: train step did not update params"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_numbers(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "stablelm_1_6b": (24, 2048, 32, 32, 5632, 100352),
+        "minicpm3_4b": (62, 2560, 40, 40, 6400, 73448),
+        "deepseek_v2_236b": (60, 5120, 128, 128, 12288, 102400),
+        "rwkv6_7b": (32, 4096, 64, 64, 14336, 65536),
+        "deepseek_v2_lite_16b": (27, 2048, 16, 16, 10944, 102400),
+        "mistral_nemo_12b": (40, 5120, 32, 8, 14336, 131072),
+        "hymba_1_5b": (32, 1600, 25, 5, 5504, 32001),
+        "yi_9b": (48, 4096, 32, 4, 11008, 64000),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865),
+        "internvl2_26b": (48, 6144, 48, 8, 16384, 92553),
+        "bert_large": (24, 1024, 16, 16, 4096, 30522),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    if arch.startswith("deepseek"):
+        assert cfg.moe.top_k == 6 and cfg.moe.n_shared == 2
+        assert cfg.kv_lora_rank == 512
+    if arch == "deepseek_v2_236b":
+        assert cfg.moe.n_experts == 160
+    if arch == "deepseek_v2_lite_16b":
+        assert cfg.moe.n_experts == 64
+    if arch == "hymba_1_5b":
+        assert cfg.ssm.d_state == 16
+    if arch == "whisper_base":
+        assert cfg.encoder_layers == 6
+
+
+def test_param_counts_match_nominal_sizes():
+    from repro.models.model import count_params_analytic
+    nominal = {
+        "stablelm_1_6b": 1.6e9, "minicpm3_4b": 4e9,
+        "deepseek_v2_236b": 236e9, "rwkv6_7b": 7e9,
+        "deepseek_v2_lite_16b": 16e9, "mistral_nemo_12b": 12e9,
+        "hymba_1_5b": 1.5e9, "yi_9b": 9e9, "internvl2_26b": 20e9,
+        "bert_large": 0.34e9,
+    }
+    for arch, n in nominal.items():
+        got = count_params_analytic(get_config(arch))
+        assert 0.7 * n < got < 1.35 * n, f"{arch}: {got/1e9:.2f}B vs {n/1e9}B"
+    active = count_params_analytic(get_config("deepseek_v2_236b"),
+                                   active_only=True)
+    assert active < 30e9   # 21B active for top-6 of 160

@@ -1,0 +1,84 @@
+"""Sharding rules: every leaf spec must be divisibility-consistent for every
+arch on the production mesh topology (checked abstractly, no devices)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, shape_supported
+from repro.models.decode import abstract_cache
+from repro.models.model import abstract_params
+
+
+class FakeMesh:
+    """Duck-typed mesh: Rules only reads .shape (a dict)."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+from repro.sharding.rules import Rules  # noqa: E402
+
+
+def _check_tree(specs, tree, mesh_shape, what):
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
+    flat_t = jax.tree.leaves(tree)
+    assert len(flat_s) == len(flat_t), what
+    for spec, leaf in zip(flat_s, flat_t):
+        entries = tuple(spec)
+        assert len(entries) <= leaf.ndim, (what, spec, leaf.shape)
+        for i, ax in enumerate(entries):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh_shape[a] for a in axes]))
+            assert leaf.shape[i] % size == 0, \
+                f"{what}: dim {i} of {leaf.shape} not divisible by {size} ({spec})"
+
+
+MESHES = [{"data": 16, "model": 16},
+          {"pod": 2, "data": 16, "model": 16}]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_shape", MESHES, ids=["1pod", "2pod"])
+def test_param_and_opt_specs_divisible(arch, mesh_shape):
+    cfg = get_config(arch)
+    mesh = FakeMesh(mesh_shape)
+    rules = Rules(cfg, mesh, fsdp=True)
+    aparams = abstract_params(cfg, tp=mesh_shape["model"])
+    pspecs = rules.params_pspecs(aparams)
+    _check_tree(pspecs, aparams, mesh_shape, f"{arch} params")
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "deepseek_v2_236b",
+                                  "rwkv6_7b", "hymba_1_5b", "whisper_base"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    mesh_shape = MESHES[0]
+    mesh = FakeMesh(mesh_shape)
+    rules = Rules(cfg, mesh, fsdp=True)
+    for sname in ("decode_32k", "long_500k"):
+        shape = INPUT_SHAPES[sname]
+        ok, _ = shape_supported(cfg, shape)
+        if not ok:
+            continue
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cspecs = rules.cache_pspecs(cache)
+        _check_tree(cspecs, cache, mesh_shape, f"{arch} {sname} cache")
+
+
+def test_vocab_padding_is_tp_divisible():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab(16) % (128 * 16) == 0
+        assert cfg.padded_vocab(16) >= cfg.vocab_size
+
+
+def test_zero1_adds_data_axis():
+    from repro.core.zero import _add_axis
+    from jax.sharding import PartitionSpec as P
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = _add_axis(P(None, "model"), (4096, 1024), mesh, "data")
+    assert spec == P("data", "model")
+    # non-divisible dims stay unsharded
+    spec = _add_axis(P(), (17, 33), mesh, "data")
+    assert spec == P(None, None)
