@@ -1,8 +1,15 @@
 """Kernel micro-bench: fused AdamA accumulate / Adam apply vs unfused jnp
-reference. On CPU the Pallas kernels run in interpret mode (correctness
-instrument); the derived column reports the HBM-traffic model for TPU:
-fused accumulate = 3 reads + 2 writes vs 5 reads + 2 writes unfused."""
+reference, plus the flat-arena pipeline vs per-leaf dispatch. On CPU the
+Pallas kernels run in interpret mode (correctness instrument); the derived
+column reports the HBM-traffic model for TPU: fused accumulate = 3 reads +
+2 writes vs 5 reads + 2 writes unfused.
+
+Also a DISPATCH-COUNT REGRESSION GUARD: the arena train step must lower to
+O(1) pallas_calls in the number of parameter leaves (1 fold in the scan
+body + 1 apply). Exits non-zero if that regresses — CI runs this module."""
 from __future__ import annotations
+
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +47,79 @@ def main():
         p, m, v, lr=1e-3, bc1=0.9, bc2=0.99))
     _, us_ka = timed(jka, p, m, v)
     row("kernels/adam_apply_pallas_interp", us_ka, "single-pass p,m,v read")
+
+    arena_vs_per_leaf()
+    if not dispatch_count_guard():
+        raise RuntimeError("arena dispatch-count regression")
+
+
+def _leafy_tree(n_leaves: int, leaf_size: int = 1 << 14):
+    ks = jax.random.split(jax.random.key(0), n_leaves)
+    return {f"w{i:03d}": jax.random.normal(ks[i], (leaf_size,), jnp.float32)
+            for i in range(n_leaves)}
+
+
+def arena_vs_per_leaf(n_leaves: int = 32):
+    """Same total fold work dispatched as one arena kernel vs one kernel per
+    leaf. On CPU-interpret the per-leaf path pays Python+interpreter overhead
+    per leaf; on TPU it pays per-launch overhead + per-leaf padding."""
+    from repro.core import arena
+    from repro.kernels import fused_step
+
+    g = _leafy_tree(n_leaves)
+    m = jax.tree.map(jnp.zeros_like, g)
+    v = jax.tree.map(jnp.zeros_like, g)
+    lay = arena.build_layout(g)
+
+    jleaf = jax.jit(lambda m, v, g: ops.adama_accumulate_tree(
+        m, v, g, beta1=0.9, beta2=0.999, scale=0.125))
+    _, us_l = timed(jleaf, m, v, g)
+    row("kernels/fold_per_leaf_x%d" % n_leaves, us_l,
+        f"dispatches={n_leaves}")
+
+    ma, va, ga = arena.pack(m, lay), arena.pack(v, lay), arena.pack(g, lay)
+    jar = jax.jit(lambda m, v, g: fused_step.arena_fold(
+        m, v, g, beta1=0.9, beta2=0.999, scale=0.125))
+    _, us_a = timed(jar, ma, va, ga)
+    row("kernels/fold_arena_x%d" % n_leaves, us_a,
+        f"dispatches=1;rows={lay.rows};speedup={us_l / us_a:.2f}x")
+
+
+def dispatch_count_guard() -> bool:
+    """Assert the arena train step's pallas_call count is CONSTANT in leaf
+    count (1 fold + 1 apply) by counting eqns in the lowered jaxpr."""
+    import dataclasses
+
+    from repro.configs import OptimizerConfig, get_config
+    from repro.core.accumulation import make_train_step
+    from repro.launch.hlo_analysis import count_jaxpr_primitives
+    from repro.models.model import init_params
+
+    ok = True
+    counts = []
+    for arch in ("stablelm_1_6b", "whisper_base"):
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  compute_dtype="float32")
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jnp.zeros((4, 16), jnp.int32)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.arch_type == "audio":
+            batch["frames"] = jnp.zeros((4, cfg.encoder_seq_len, cfg.d_model))
+        oc = OptimizerConfig(name="adama", accumulation="adama",
+                             micro_batches=2, use_pallas=True, arena=True)
+        step, init = make_train_step(cfg, oc)
+        jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
+        n = count_jaxpr_primitives(jaxpr, "pallas_call")
+        leaves = len(jax.tree.leaves(params))
+        counts.append(n)
+        ok &= (n == 2)
+        row(f"kernels/arena_dispatches_{arch}", float(n),
+            f"leaves={leaves};expected=2")
+    ok &= len(set(counts)) == 1
+    if not ok:
+        print("DISPATCH-COUNT REGRESSION: arena step no longer O(1) "
+              f"pallas_calls (got {counts}, want [2, 2])", file=sys.stderr)
+    return ok
 
 
 if __name__ == "__main__":

@@ -212,7 +212,22 @@ class OptimizerConfig:
     micro_batches: int = 8
     zero_stage: int = 0          # 0 | 1 (P_os over data axis)
     use_pallas: bool = False     # fused kernels for accumulate/apply
+    # flat optimizer-state arena (core/arena.py): ONE kernel dispatch per
+    # micro-batch fold / mini-batch apply instead of one per param leaf,
+    # with the begin-minibatch decay fused into the first fold. Effective
+    # only with use_pallas=True; incompatible with zero_stage=1 (the arena
+    # is a single buffer, not per-leaf shardable by zero1_state_sharding).
+    arena: bool = False
     grad_clip: Optional[float] = None
+
+    def __post_init__(self):
+        if self.arena and not self.use_pallas:
+            raise ValueError("arena=True requires use_pallas=True (the arena "
+                             "path IS the fused-kernel path)")
+        if self.arena and self.zero_stage:
+            raise ValueError("arena=True is incompatible with zero_stage=1: "
+                             "the arena is a single flat buffer, not "
+                             "per-leaf shardable by zero1_state_sharding")
 
 
 @dataclass(frozen=True)

@@ -15,6 +15,12 @@ Three engines, selected by OptimizerConfig.accumulation:
 
 All engines consume a global batch of shape (GB, ...) and reshape it to
 (N, GB/N, ...) micro-batches.
+
+With OptimizerConfig(use_pallas=True, arena=True) every engine runs its
+optimizer path over the flat state arena (core/arena.py): one fused
+`pallas_call` per micro-batch fold (the begin-minibatch decay riding in as
+SMEM scalars on the first fold) and one per mini-batch-end apply — O(1)
+kernel dispatches per micro-batch instead of O(param leaves).
 """
 from __future__ import annotations
 
@@ -27,10 +33,23 @@ from jax import lax
 
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.core import adama
+from repro.core import arena as arena_mod
 from repro.models.model import loss_fn as model_loss_fn
 from repro.optim import adafactor, adam, sm3
 
 OPTIMIZERS = {"adam": adam, "adafactor": adafactor, "sm3": sm3}
+
+
+def _use_arena(opt: OptimizerConfig) -> bool:
+    return opt.use_pallas and opt.arena
+
+
+def _fold_decay(i, beta1: float, beta2: float, m_devices: int = 1):
+    """Decay pair for fold i of a mini-batch: the begin-minibatch pass
+    (m*=b1, v*=M*b2*v) fused into the FIRST fold, identity afterwards."""
+    one = jnp.float32(1.0)
+    return (jnp.where(i == 0, jnp.float32(beta1), one),
+            jnp.where(i == 0, jnp.float32(m_devices * beta2), one))
 
 
 def _split_micro(batch: Dict[str, Any], n: int):
@@ -55,18 +74,31 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
     loss = make_loss(cfg, remat=remat)
     n = opt.micro_batches
     opt_mod = OPTIMIZERS[opt.name if opt.name != "adama" else "adam"]
+    # arena fast path: the Adam update becomes one fused fold (decay in SMEM)
+    # + one fused apply over the flat state arena
+    use_arena = _use_arena(opt)
+    if use_arena and opt_mod is not adam:
+        raise ValueError(f"arena=True with accumulation='ga' supports the "
+                         f"adam/adama optimizer only, got {opt.name!r}")
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
+        layout = opt_state["m"].layout if use_arena else None
 
         def body(carry, mb):
             acc, lsum = carry
             l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
-            acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32) / n,
-                               acc, g)
+            if use_arena:
+                acc = acc + arena_mod.pack(g, layout) / n
+            else:
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / n, acc, g)
             return (acc, lsum + l), None
 
-        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        zeros = (jnp.zeros((layout.rows, arena_mod.LANES), jnp.float32)
+                 if use_arena else
+                 jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params))
         (grads, lsum), _ = lax.scan(body, (zeros, 0.0), micro)
         if opt.grad_clip:
             gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
@@ -74,6 +106,22 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
             scale = jnp.minimum(1.0, opt.grad_clip / jnp.maximum(gn, 1e-9))
             grads = jax.tree.map(lambda g: g * scale, grads)
         lr = lr_schedule(opt_state["step"]) if lr_schedule else opt.lr
+        if use_arena:
+            from repro.kernels import fused_step
+            step_c = opt_state["step"] + 1
+            t = step_c.astype(jnp.float32)
+            m, v = fused_step.arena_fold(
+                opt_state["m"].data, opt_state["v"].data, grads,
+                beta1=opt.beta1, beta2=opt.beta2,
+                decay=(opt.beta1, opt.beta2))
+            p_new = fused_step.arena_apply(
+                arena_mod.pack(params, layout), m, v, lr=lr,
+                bc1=1 - opt.beta1 ** t, bc2=1 - opt.beta2 ** t, eps=opt.eps,
+                weight_decay=opt.weight_decay)
+            params = arena_mod.unpack(p_new, layout)
+            opt_state = {"m": opt_state["m"].with_data(m),
+                         "v": opt_state["v"].with_data(v), "step": step_c}
+            return params, opt_state, {"loss": lsum / n}
         kw = dict(lr=lr, weight_decay=opt.weight_decay)
         if opt_mod is adam:
             kw.update(beta1=opt.beta1, beta2=opt.beta2, eps=opt.eps)
@@ -81,7 +129,7 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
         return params, opt_state, {"loss": lsum / n}
 
     def init(params):
-        return opt_mod.init(params)
+        return adama.init_arena(params) if use_arena else opt_mod.init(params)
 
     return step, init
 
@@ -98,19 +146,37 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
     loss = make_loss(cfg, remat=remat)
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
+    use_arena = _use_arena(opt)
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
-        state = adama.begin_minibatch(opt_state, b1, b2, m_devices)
+        if use_arena:
+            # decay is fused into fold 0 (no standalone state-sized pass);
+            # 1/N rides in-kernel as the fold's static scale
+            state = dict(opt_state, step=opt_state["step"] + 1)
 
-        def body(carry, mb):
-            st, lsum = carry
-            l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
-            g = jax.tree.map(lambda x: x / n, g)        # Alg.1 line 6: g/N
-            st = adama.accumulate(st, g, b1, b2, use_pallas=opt.use_pallas)
-            return (st, lsum + l), None
+            def body(carry, xs):
+                st, lsum = carry
+                i, mb = xs
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                st = adama.accumulate(st, g, b1, b2, scale=1.0 / n,
+                                      decay=_fold_decay(i, b1, b2, m_devices))
+                return (st, lsum + l), None
 
-        (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
+            (state, lsum), _ = lax.scan(body, (state, 0.0),
+                                        (jnp.arange(n), micro))
+        else:
+            state = adama.begin_minibatch(opt_state, b1, b2, m_devices)
+
+            def body(carry, mb):
+                st, lsum = carry
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                g = jax.tree.map(lambda x: x / n, g)    # Alg.1 line 6: g/N
+                st = adama.accumulate(st, g, b1, b2,
+                                      use_pallas=opt.use_pallas)
+                return (st, lsum + l), None
+
+            (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
         if axis_names:
             state = adama.allreduce_states(state, axis_names, m_devices)
         lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
@@ -122,7 +188,7 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
             lsum = lax.pmean(lsum, axis_names)
         return params, state, {"loss": lsum / n}
 
-    return step, adama.init
+    return step, (adama.init_arena if use_arena else adama.init)
 
 
 # ---------------------------------------------------------------------------
@@ -136,19 +202,39 @@ def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
     from repro.core.layerwise import layerwise_loss_and_fold
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
+    use_arena = _use_arena(opt)
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
-        state = adama.begin_minibatch(opt_state, b1, b2, m_devices)
+        if use_arena:
+            # each arena row is folded exactly once per micro-batch (each
+            # layer once in the backward scan, the rest region at the
+            # boundary), so the begin-minibatch decay fuses into micro-batch
+            # 0's per-layer slice folds
+            state = dict(opt_state, step=opt_state["step"] + 1)
 
-        def body(carry, mb):
-            st, lsum = carry
-            l, st = layerwise_loss_and_fold(
-                cfg, params, mb, st, beta1=b1, beta2=b2, scale=1.0 / n,
-                use_pallas=opt.use_pallas)
-            return (st, lsum + l), None
+            def body(carry, xs):
+                st, lsum = carry
+                i, mb = xs
+                l, st = layerwise_loss_and_fold(
+                    cfg, params, mb, st, beta1=b1, beta2=b2, scale=1.0 / n,
+                    use_pallas=True,
+                    decay=_fold_decay(i, b1, b2, m_devices))
+                return (st, lsum + l), None
 
-        (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
+            (state, lsum), _ = lax.scan(body, (state, 0.0),
+                                        (jnp.arange(n), micro))
+        else:
+            state = adama.begin_minibatch(opt_state, b1, b2, m_devices)
+
+            def body(carry, mb):
+                st, lsum = carry
+                l, st = layerwise_loss_and_fold(
+                    cfg, params, mb, st, beta1=b1, beta2=b2, scale=1.0 / n,
+                    use_pallas=opt.use_pallas)
+                return (st, lsum + l), None
+
+            (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
         if axis_names:
             state = adama.allreduce_states(state, axis_names, m_devices)
         lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
@@ -160,7 +246,7 @@ def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
             lsum = lax.pmean(lsum, axis_names)
         return params, state, {"loss": lsum / n}
 
-    return step, adama.init
+    return step, (adama.init_arena if use_arena else adama.init)
 
 
 ENGINES = {

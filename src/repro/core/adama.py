@@ -24,6 +24,9 @@ from typing import Any, Dict, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import arena as arena_mod
+from repro.core.arena import Arena
+
 State = Dict[str, Any]
 
 
@@ -34,9 +37,26 @@ def init(params) -> State:
             "step": jnp.zeros((), jnp.int32)}
 
 
+def init_arena(params) -> State:
+    """Arena-backed state: (m, v) are single flat (rows, LANES) fp32 buffers
+    (see core/arena.py) so each fold/apply is ONE kernel dispatch."""
+    layout = arena_mod.build_layout(params)
+    return {"m": Arena.zeros(layout), "v": Arena.zeros(layout),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def is_arena_state(state: State) -> bool:
+    return isinstance(state["m"], Arena)
+
+
 def begin_minibatch(state: State, beta1: float, beta2: float,
                     m_devices: int = 1) -> State:
-    """m <- b1*m ; v <- M*b2*v (Eq. 6's M*beta2 pre-scale; M=1 single device)."""
+    """m <- b1*m ; v <- M*b2*v (Eq. 6's M*beta2 pre-scale; M=1 single device).
+
+    The arena engines skip this pass entirely: the decay is fused into the
+    first fold of the mini-batch via `accumulate(..., decay=...)`, saving a
+    full state-sized read+write. This standalone form (which also works on
+    Arena state) remains for the per-leaf path and the shard_map DP engine."""
     return {
         "m": jax.tree.map(lambda m: beta1 * m, state["m"]),
         "v": jax.tree.map(lambda v: (m_devices * beta2) * v, state["v"]),
@@ -45,17 +65,36 @@ def begin_minibatch(state: State, beta1: float, beta2: float,
 
 
 def accumulate(state: State, grads, beta1: float, beta2: float,
-               use_pallas: bool = False) -> State:
-    """Fold one micro-batch's gradients into (m, v); Algorithm 2 inner loop."""
+               use_pallas: bool = False, scale: float = 1.0,
+               decay=None) -> State:
+    """Fold one micro-batch's gradients into (m, v); Algorithm 2 inner loop.
+
+    `scale` multiplies g before the fold (Alg. 1 line 6's 1/N, applied
+    in-kernel on the arena path). `decay=(dm, dv)` folds the begin-minibatch
+    decay into this call (pass it on the first micro-batch only)."""
+    if is_arena_state(state):
+        from repro.kernels import fused_step
+        layout = state["m"].layout
+        g = arena_mod.pack(grads, layout)
+        m, v = fused_step.arena_fold(state["m"].data, state["v"].data, g,
+                                     beta1=beta1, beta2=beta2, scale=scale,
+                                     decay=decay)
+        return {"m": state["m"].with_data(m), "v": state["v"].with_data(v),
+                "step": state["step"]}
+    if decay is not None:
+        state = {"m": jax.tree.map(lambda m: decay[0] * m, state["m"]),
+                 "v": jax.tree.map(lambda v: decay[1] * v, state["v"]),
+                 "step": state["step"]}
     if use_pallas:
         from repro.kernels.ops import adama_accumulate_tree
         m, v = adama_accumulate_tree(state["m"], state["v"], grads,
-                                     beta1=beta1, beta2=beta2)
+                                     beta1=beta1, beta2=beta2, scale=scale)
         return {"m": m, "v": v, "step": state["step"]}
-    m = jax.tree.map(lambda m_, g: m_ + (1 - beta1) * g.astype(jnp.float32),
-                     state["m"], grads)
+    m = jax.tree.map(lambda m_, g: m_ + (1 - beta1) *
+                     (g.astype(jnp.float32) * scale), state["m"], grads)
     v = jax.tree.map(lambda v_, g: v_ + (1 - beta2) *
-                     jnp.square(g.astype(jnp.float32)), state["v"], grads)
+                     jnp.square(g.astype(jnp.float32) * scale),
+                     state["v"], grads)
     return {"m": m, "v": v, "step": state["step"]}
 
 
@@ -86,6 +125,15 @@ def finalize(params, state: State, *, lr, beta1: float, beta2: float,
     t = state["step"].astype(jnp.float32)
     bc1 = 1 - beta1 ** t
     bc2 = 1 - beta2 ** t
+    if is_arena_state(state):
+        from repro.kernels import fused_step
+        layout = state["m"].layout
+        p_arena = arena_mod.pack(params, layout)
+        p_new = fused_step.arena_apply(p_arena, state["m"].data,
+                                       state["v"].data, lr=lr, bc1=bc1,
+                                       bc2=bc2, eps=eps,
+                                       weight_decay=weight_decay)
+        return arena_mod.unpack(p_new, layout), state
     if use_pallas:
         from repro.kernels.ops import adam_apply_tree
         new_params = adam_apply_tree(params, state["m"], state["v"],

@@ -1,0 +1,287 @@
+"""Flat optimizer-state arena: all pytree leaves packed once into one
+contiguous hardware-aligned (rows, LANES) fp32 buffer with a STATIC layout
+table, so the whole AdamA fold/apply pipeline dispatches O(1) Pallas kernels
+per micro-batch instead of O(leaves).
+
+Layout (built once from the param tree, hashable, rides through jit as
+pytree aux data):
+
+  [ stack "blocks":   layer 0 | layer 1 | ... | layer L-1 ]
+  [ stack "dense_blocks": ... ]  [ stack "enc_blocks": ... ]
+  [ rest: embed | lm_head | final_norm_* | ... ]
+  [ tail padding to a BLOCK_ROWS multiple ]
+
+Stacked trees (leaves with a shared leading layer dim) are packed
+LAYER-MAJOR: every layer occupies an identical, ROW_ALIGN-aligned row range
+(`layer_rows`), so layer j of stack s lives at rows
+`s.row + j * s.layer_rows` — a statically-strided slice the layer-wise
+engine (Algorithm 2) folds into with one offset-indexed kernel per layer.
+Within a region each leaf starts on a fresh row; tail lanes of its last row
+are zero padding that no kernel result ever depends on (fold keeps 0 at 0,
+unpack never reads it).
+
+Everything is packed as fp32 (m, v are fp32 anyway; params/grads are cast on
+pack and cast back to their recorded dtype on unpack — bitwise identical to
+the per-leaf kernels' in-kernel casts). Mixed-dtype trees therefore share a
+single arena and a single dispatch.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+
+# top-level keys holding per-layer stacked subtrees (leading dim = layer);
+# must match the stages core/layerwise.py walks.
+STACK_KEYS = ("blocks", "dense_blocks", "enc_blocks")
+
+ROW_ALIGN = 8        # fp32 sublane multiple: every region is 8-row aligned
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _align(n: int, mult: int) -> int:
+    return _cdiv(n, mult) * mult
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """One leaf's slot inside its region (per-layer shape for stacked leaves)."""
+    shape: Tuple[int, ...]
+    dtype: Any                   # np.dtype — restored on unpack
+    row: int                     # row offset inside the region
+    rows: int                    # whole rows occupied (= ceil(size/LANES))
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+
+
+@dataclass(frozen=True)
+class StackSpec:
+    name: str
+    treedef: Any                 # treedef of the stacked subtree
+    n_layers: int
+    leaves: Tuple[LeafSpec, ...]
+    layer_rows: int              # ROW_ALIGN-aligned rows per layer
+    row: int                     # arena row of layer 0
+
+    @property
+    def rows(self) -> int:
+        return self.n_layers * self.layer_rows
+
+
+@dataclass(frozen=True)
+class RestSpec:
+    treedef: Any                 # treedef of the non-stacked remainder
+    leaves: Tuple[LeafSpec, ...]
+    row: int
+    rows: int                    # ROW_ALIGN-aligned
+
+
+@dataclass(frozen=True)
+class ArenaLayout:
+    stacks: Tuple[StackSpec, ...]
+    rest: RestSpec
+    rows: int                    # total, padded so block_rows() divides it
+
+    def stack(self, name: str) -> StackSpec:
+        for s in self.stacks:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def block_rows(self) -> int:
+        """Row-block for whole-arena kernels (divides self.rows exactly)."""
+        return min(BLOCK_ROWS, self.rows)
+
+    def slice_block(self, spec) -> int:
+        """Row-block for offset-indexed slice kernels over `spec` (a
+        StackSpec or RestSpec): must divide both the region stride and every
+        possible row offset. All are ROW_ALIGN multiples, so >= 8."""
+        if isinstance(spec, StackSpec):
+            stride = spec.layer_rows
+        else:
+            stride = spec.rows
+        return math.gcd(math.gcd(stride, spec.row), BLOCK_ROWS)
+
+
+# ---------------------------------------------------------------------------
+# Layout construction
+# ---------------------------------------------------------------------------
+
+
+def _leaf_specs(leaves) -> Tuple[Tuple[LeafSpec, ...], int]:
+    specs = []
+    row = 0
+    for x in leaves:
+        shape = tuple(x.shape)
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        rows = max(1, _cdiv(size, LANES))
+        specs.append(LeafSpec(shape, np.dtype(x.dtype), row, rows))
+        row += rows
+    return tuple(specs), row
+
+
+def split_tree(tree):
+    """(stack_items, rest_tree): pull the STACK_KEYS subtrees off a dict
+    tree; any other tree is entirely `rest`."""
+    if isinstance(tree, dict):
+        stack_items = [(k, tree[k]) for k in STACK_KEYS if k in tree]
+        rest = {k: v for k, v in tree.items() if k not in STACK_KEYS}
+        return stack_items, rest
+    return [], tree
+
+
+def build_layout(tree) -> ArenaLayout:
+    stack_items, rest_tree = split_tree(tree)
+    row = 0
+    stacks = []
+    for name, sub in stack_items:
+        leaves, tdef = jax.tree.flatten(sub)
+        n_layers = int(leaves[0].shape[0])
+        for x in leaves:
+            assert x.shape[0] == n_layers, \
+                f"stacked leaf in {name!r} has leading dim {x.shape[0]} != {n_layers}"
+        specs, used = _leaf_specs([jax.ShapeDtypeStruct(x.shape[1:], x.dtype)
+                                   for x in leaves])
+        layer_rows = max(ROW_ALIGN, _align(used, ROW_ALIGN))
+        stacks.append(StackSpec(name, tdef, n_layers, specs, layer_rows, row))
+        row += n_layers * layer_rows
+    rleaves, rdef = jax.tree.flatten(rest_tree)
+    rspecs, rused = _leaf_specs(rleaves)
+    rest_rows = _align(max(rused, 0), ROW_ALIGN)
+    rest = RestSpec(rdef, rspecs, row, rest_rows)
+    row += rest_rows
+    total = _align(row, BLOCK_ROWS) if row > BLOCK_ROWS else max(row, ROW_ALIGN)
+    return ArenaLayout(tuple(stacks), rest, total)
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack
+# ---------------------------------------------------------------------------
+
+
+def _pack_region(leaves, specs, region_rows, lead: Tuple[int, ...] = ()):
+    """Concatenate leaves (each reshaped (*lead, -1), zero-padded to whole
+    rows) into a (*lead, region_rows, LANES) fp32 block."""
+    mats = []
+    for x, spec in zip(leaves, specs):
+        flat = x.reshape(lead + (-1,)).astype(jnp.float32)
+        pad = spec.rows * LANES - spec.size
+        if pad:
+            flat = jnp.pad(flat, [(0, 0)] * len(lead) + [(0, pad)])
+        mats.append(flat.reshape(lead + (spec.rows, LANES)))
+    used = sum(s.rows for s in specs)
+    if region_rows > used:
+        mats.append(jnp.zeros(lead + (region_rows - used, LANES), jnp.float32))
+    return jnp.concatenate(mats, axis=len(lead)) if len(mats) > 1 else mats[0]
+
+
+def pack_layer(layer_tree, spec: StackSpec) -> jnp.ndarray:
+    """One layer's (un-stacked) subtree -> (layer_rows, LANES) fp32 slab."""
+    leaves = spec.treedef.flatten_up_to(layer_tree)
+    return _pack_region(leaves, spec.leaves, spec.layer_rows)
+
+
+def pack_rest(rest_tree, layout: ArenaLayout) -> jnp.ndarray:
+    """The non-stacked remainder -> (rest.rows, LANES) fp32 slab."""
+    leaves = layout.rest.treedef.flatten_up_to(rest_tree)
+    return _pack_region(leaves, layout.rest.leaves, layout.rest.rows)
+
+
+def pack(tree, layout: ArenaLayout) -> jnp.ndarray:
+    """Whole tree -> (layout.rows, LANES) fp32 arena (layer-major stacks)."""
+    stack_items, rest_tree = split_tree(tree)
+    parts = []
+    for (name, sub), spec in zip(stack_items, layout.stacks):
+        assert name == spec.name
+        leaves = spec.treedef.flatten_up_to(sub)
+        block = _pack_region(leaves, spec.leaves, spec.layer_rows,
+                             lead=(spec.n_layers,))
+        parts.append(block.reshape(-1, LANES))
+    if layout.rest.rows:
+        parts.append(pack_rest(rest_tree, layout))
+    used = sum(p.shape[0] for p in parts)
+    if layout.rows > used:
+        parts.append(jnp.zeros((layout.rows - used, LANES), jnp.float32))
+    return jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+
+def _unpack_region(block, specs, dtype, lead: Tuple[int, ...] = ()):
+    leaves = []
+    for spec in specs:
+        seg = block[..., spec.row:spec.row + spec.rows, :]
+        seg = seg.reshape(lead + (-1,))[..., :spec.size]
+        leaves.append(seg.reshape(lead + spec.shape)
+                      .astype(dtype if dtype is not None else spec.dtype))
+    return leaves
+
+
+def unpack(arena: jnp.ndarray, layout: ArenaLayout, dtype=None):
+    """Arena -> tree. Leaves cast back to their recorded dtypes (or a forced
+    `dtype`, e.g. fp32 for optimizer moments)."""
+    out: Dict[str, Any] = {}
+    for spec in layout.stacks:
+        block = arena[spec.row:spec.row + spec.rows]
+        block = block.reshape(spec.n_layers, spec.layer_rows, LANES)
+        leaves = _unpack_region(block, spec.leaves, dtype,
+                                lead=(spec.n_layers,))
+        out[spec.name] = spec.treedef.unflatten(leaves)
+    rblock = arena[layout.rest.row:layout.rest.row + layout.rest.rows]
+    rleaves = _unpack_region(rblock, layout.rest.leaves, dtype)
+    rest_tree = layout.rest.treedef.unflatten(rleaves)
+    if not layout.stacks:
+        return rest_tree
+    out.update(rest_tree)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Arena: the (buffer, static layout) pair as a first-class pytree
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class Arena:
+    """A (rows, LANES) fp32 buffer + its static layout. Registered as a
+    pytree (layout = aux data), so arena-backed optimizer state flows through
+    jit / scan / psum / donation exactly like the per-leaf tree state."""
+
+    def __init__(self, data: jnp.ndarray, layout: ArenaLayout):
+        self.data = data
+        self.layout = layout
+
+    def tree_flatten(self):
+        return (self.data,), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        return cls(children[0], layout)
+
+    @classmethod
+    def zeros(cls, layout: ArenaLayout) -> "Arena":
+        return cls(jnp.zeros((layout.rows, LANES), jnp.float32), layout)
+
+    @classmethod
+    def from_tree(cls, tree, layout: Optional[ArenaLayout] = None) -> "Arena":
+        layout = layout if layout is not None else build_layout(tree)
+        return cls(pack(tree, layout), layout)
+
+    def to_tree(self, dtype=None):
+        return unpack(self.data, self.layout, dtype)
+
+    def with_data(self, data: jnp.ndarray) -> "Arena":
+        return Arena(data, self.layout)
+
+    def __repr__(self):
+        return (f"Arena(rows={self.layout.rows}, lanes={LANES}, "
+                f"stacks={[s.name for s in self.layout.stacks]})")

@@ -28,8 +28,23 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.core import adama
-from repro.core.accumulation import _split_micro, make_loss
+from repro.core.accumulation import _fold_decay, _split_micro, make_loss
 from repro.optim import adam
+
+
+def _shard_map(f, mesh, *, in_specs, out_specs, manual_axes):
+    """shard_map across jax versions: `jax.shard_map(axis_names=...)` when
+    available (>= 0.6), else `jax.experimental.shard_map` with the
+    complementary `auto=` set (0.4.x). Replication checking is off either
+    way (psum-of-replicated patterns in the AdamA schedule trip it)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False, auto=auto)
 
 
 def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
@@ -76,6 +91,19 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                 st = adama.accumulate(st, g, b1, b2)
                 return (st, lsum + l), None
             (state, lsum), _ = lax.scan(body, (state, 0.0), micro)
+        elif opt.use_pallas and opt.arena:           # paper's schedule, arena
+            state = dict(opt_state, step=opt_state["step"] + 1)
+
+            def body(carry, xs):
+                st, lsum = carry
+                i, mb = xs
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                st = adama.accumulate(st, g, b1, b2, scale=1.0 / n,
+                                      decay=_fold_decay(i, b1, b2, m_dev))
+                return (st, lsum + l), None
+            (state, lsum), _ = lax.scan(body, (state, 0.0),
+                                        (jnp.arange(n), micro))
+            state = adama.allreduce_states(state, dp_axes, m_dev)  # Eqs. 7-8
         else:                                        # paper's schedule
             state = adama.begin_minibatch(opt_state, b1, b2, m_devices=m_dev)
 
@@ -100,14 +128,16 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
     bspec = P(dp_axes)
 
     def step(params, opt_state, batch):
-        f = jax.shard_map(
-            local_step, mesh=mesh,
-            in_specs=(rep, rep, bspec),
-            out_specs=(rep, rep, rep),
-            axis_names=set(dp_axes), check_vma=False)
+        f = _shard_map(local_step, mesh,
+                       in_specs=(rep, rep, bspec),
+                       out_specs=(rep, rep, rep), manual_axes=dp_axes)
         return f(params, opt_state, batch)
 
     def init(params):
-        return adam.init(params) if variant == "ga" else adama.init(params)
+        if variant == "ga":
+            return adam.init(params)
+        if opt.use_pallas and opt.arena:
+            return adama.init_arena(params)
+        return adama.init(params)
 
     return step, init

@@ -14,6 +14,14 @@ the paper where the hook granularity is also per-parameter-group.
 Note: each layer's forward is recomputed inside its VJP (we saved only the
 layer INPUTS), so this engine is simultaneously activation checkpointing —
 matching how gradient accumulation baselines are run in the paper's setting.
+
+Arena mode (state from adama.init_arena): (m, v) are flat (rows, LANES)
+buffers packed LAYER-MAJOR (core/arena.py), so layer j's entire parameter
+group is one contiguous row range. Each backward-scan iteration packs the
+layer gradient tree into a single slab and folds it into the layer's arena
+slice with ONE offset-indexed kernel (kernels/fused_step.arena_fold_slice) —
+O(1) dispatches per layer instead of O(leaves) — and the begin-minibatch
+decay rides into micro-batch 0's folds as SMEM scalars.
 """
 from __future__ import annotations
 
@@ -25,12 +33,12 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core.adama import accumulate_leaf
+from repro.core import arena as arena_mod
+from repro.core.adama import accumulate_leaf, is_arena_state
+from repro.core.arena import STACK_KEYS
 from repro.models import modules as md
 from repro.models.model import (apply_block, cross_entropy, embed_tokens,
                                 main_stack_kind, _cdt)
-
-STACK_KEYS = ("blocks", "dense_blocks", "enc_blocks")
 
 
 def _fold_tree(m, v, g, beta1, beta2, use_pallas):
@@ -46,14 +54,17 @@ def _fold_tree(m, v, g, beta1, beta2, use_pallas):
 
 def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
                             beta1: float, beta2: float, scale: float,
-                            use_pallas: bool = False):
+                            use_pallas: bool = False, decay=None):
     """One micro-batch: forward, then layer-by-layer backward folding grads
     into (m, v). Returns (loss, new_state). Gradients are scaled by `scale`
-    (= 1/N), matching Algorithm 1 line 6."""
+    (= 1/N), matching Algorithm 1 line 6. `decay` (arena mode only) fuses
+    the begin-minibatch decay into this micro-batch's folds."""
+    assert decay is None or is_arena_state(state), \
+        "fused decay requires arena-backed state"
     if cfg.arch_type == "audio":
         return _layerwise_audio(cfg, params, batch, state, beta1=beta1,
                                 beta2=beta2, scale=scale,
-                                use_pallas=use_pallas)
+                                use_pallas=use_pallas, decay=decay)
 
     kind = main_stack_kind(cfg)
     causal = cfg.arch_type != "encoder"
@@ -118,47 +129,94 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     d_rest_post, dx = post_vjp(scale)
 
     # ---- backward, reverse scan per stack, folding per layer ----
-    # (m, v) stacks ride in the CARRY and are updated in place with
-    # dynamic_update_index — as scan ys they would be double-buffered
+    # Tree mode: (m, v) stacks ride in the CARRY and are updated in place
+    # with dynamic_update_index — as scan ys they would be double-buffered
     # (xs and ys can't alias), costing an extra m+v of stack memory.
-    new_m = dict(state["m"])
-    new_v = dict(state["v"])
+    # Arena mode: the WHOLE (m, v) arenas ride in the carry; each iteration
+    # folds into layer j's row slice via one offset-indexed kernel (rows
+    # outside the slice pass through aliased, so there is no re-write).
+    arena_st = is_arena_state(state)
+    if arena_st:
+        lay = state["m"].layout
+        m_acc, v_acc = state["m"].data, state["v"].data
+    else:
+        new_m = dict(state["m"])
+        new_v = dict(state["v"])
     for name, knd in reversed(stages):
         n_layers = jax.tree.leaves(params[name])[0].shape[0]
+        spec = lay.stack(name) if arena_st else None
 
-        def bwd(carry, xs, knd=knd, name=name):
-            dx_c, m_stack, v_stack = carry
+        def bwd(carry, xs, knd=knd, spec=spec):
+            dx_c, m_c, v_c = carry
             j, lp, xin = xs
             _, vjp = jax.vjp(
                 lambda lp_, xi_: apply_block(cfg, lp_, xi_, positions,
                                              kind=knd, causal=causal),
                 lp, xin)
             dlp, dxin = vjp((dx_c, scale))               # aux cotangent=scale
-            m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
-                s, j, 0, keepdims=False), m_stack)
-            v_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
-                s, j, 0, keepdims=False), v_stack)
-            m2, v2 = _fold_tree(m_j, v_j, dlp, beta1, beta2, use_pallas)
-            m_stack = jax.tree.map(
-                lambda s, u: lax.dynamic_update_index_in_dim(s, u, j, 0),
-                m_stack, m2)
-            v_stack = jax.tree.map(
-                lambda s, u: lax.dynamic_update_index_in_dim(s, u, j, 0),
-                v_stack, v2)
-            return (dxin, m_stack, v_stack), None
+            m_c, v_c = _fold_layer(m_c, v_c, dlp, j, spec, lay if arena_st
+                                   else None, beta1, beta2, use_pallas, decay)
+            return (dxin, m_c, v_c), None
 
+        carry0 = ((dx, m_acc, v_acc) if arena_st else
+                  (dx, state["m"][name], state["v"][name]))
         (dx, m_new, v_new), _ = lax.scan(
-            bwd, (dx, state["m"][name], state["v"][name]),
+            bwd, carry0,
             (jnp.arange(n_layers), params[name], saved_inputs[name]),
             reverse=True)
-        new_m[name], new_v[name] = m_new, v_new
+        if arena_st:
+            m_acc, v_acc = m_new, v_new
+        else:
+            new_m[name], new_v[name] = m_new, v_new
 
     (d_rest_pre,) = pre_vjp(dx)
     d_rest = jax.tree.map(lambda a, b_: a + b_, d_rest_post, d_rest_pre)
+    if arena_st:
+        m_acc, v_acc = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
+                                  decay)
+        return loss, {"m": state["m"].with_data(m_acc),
+                      "v": state["v"].with_data(v_acc),
+                      "step": state["step"]}
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
                                         d_rest[k], beta1, beta2, use_pallas)
     return loss, {"m": new_m, "v": new_v, "step": state["step"]}
+
+
+def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay):
+    """Fold one layer's gradient tree. Tree mode: per-leaf fold into row j of
+    the (m, v) stacks. Arena mode: pack dlp into one slab and fold it into
+    the layer's arena row slice with a single offset-indexed kernel. Grads
+    arrive pre-scaled (via the VJP cotangent), so the kernel scale is 1."""
+    if lay is not None:
+        from repro.kernels import fused_step
+        g2 = arena_mod.pack_layer(dlp, spec)
+        off = spec.row + j * spec.layer_rows
+        return fused_step.arena_fold_slice(
+            m_c, v_c, g2, off, beta1=beta1, beta2=beta2,
+            block=lay.slice_block(spec), decay=decay)
+    m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
+        s, j, 0, keepdims=False), m_c)
+    v_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
+        s, j, 0, keepdims=False), v_c)
+    m2, v2 = _fold_tree(m_j, v_j, dlp, beta1, beta2, use_pallas)
+    m_c = jax.tree.map(
+        lambda s, u: lax.dynamic_update_index_in_dim(s, u, j, 0), m_c, m2)
+    v_c = jax.tree.map(
+        lambda s, u: lax.dynamic_update_index_in_dim(s, u, j, 0), v_c, v2)
+    return m_c, v_c
+
+
+def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay):
+    """Arena mode: fold ALL non-stacked leaves' gradients with one kernel
+    over the contiguous rest region."""
+    from repro.kernels import fused_step
+    if not lay.rest.rows:
+        return m_acc, v_acc
+    g2 = arena_mod.pack_rest(d_rest, lay)
+    return fused_step.arena_fold_slice(
+        m_acc, v_acc, g2, lay.rest.row, beta1=beta1, beta2=beta2,
+        block=lay.slice_block(lay.rest), decay=decay)
 
 
 # ---------------------------------------------------------------------------
@@ -167,7 +225,7 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
 
 
 def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
-                     use_pallas):
+                     use_pallas, decay=None):
     tokens = batch["tokens"]
     frames = batch["frames"].astype(_cdt(cfg))
     b, s = tokens.shape
@@ -217,60 +275,69 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
     ce, post_vjp = jax.vjp(post, rest, xN)
     d_rest_post, dx = post_vjp(scale)
 
-    new_m = dict(state["m"])
-    new_v = dict(state["v"])
+    arena_st = is_arena_state(state)
+    if arena_st:
+        lay = state["m"].layout
+        m0, v0 = state["m"].data, state["v"].data
+        dec_spec, enc_spec = lay.stack("blocks"), lay.stack("enc_blocks")
+    else:
+        lay = dec_spec = enc_spec = None
+        new_m = dict(state["m"])
+        new_v = dict(state["v"])
+        m0, v0 = state["m"]["blocks"], state["v"]["blocks"]
 
-    def _idx(stack, j):
-        return jax.tree.map(lambda s: lax.dynamic_index_in_dim(
-            s, j, 0, keepdims=False), stack)
-
-    def _upd(stack, sub, j):
-        return jax.tree.map(lambda s, u: lax.dynamic_update_index_in_dim(
-            s, u, j, 0), stack, sub)
-
-    # decoder backward: carry (dx, d_enc_out accumulator, m, v stacks)
+    # decoder backward: carry (dx, d_enc_out accumulator, m, v)
     def dbwd(carry, xs):
-        dx_c, denc, m_stack, v_stack = carry
+        dx_c, denc, m_c, v_c = carry
         j, lp, xin = xs
         _, vjp = jax.vjp(dec_block, lp, xin, enc_out)
         dlp, dxin, denc_j = vjp((dx_c, scale))
-        m2, v2 = _fold_tree(_idx(m_stack, j), _idx(v_stack, j), dlp,
-                            beta1, beta2, use_pallas)
-        return (dxin, denc + denc_j, _upd(m_stack, m2, j),
-                _upd(v_stack, v2, j)), None
+        m_c, v_c = _fold_layer(m_c, v_c, dlp, j, dec_spec, lay, beta1, beta2,
+                               use_pallas, decay)
+        return (dxin, denc + denc_j, m_c, v_c), None
 
     denc0 = jnp.zeros_like(enc_out)
     nl = jax.tree.leaves(params["blocks"])[0].shape[0]
     (dx, denc, m_new, v_new), _ = lax.scan(
-        dbwd, (dx, denc0, state["m"]["blocks"], state["v"]["blocks"]),
+        dbwd, (dx, denc0, m0, v0),
         (jnp.arange(nl), params["blocks"], dec_saved),
         reverse=True)
-    new_m["blocks"], new_v["blocks"] = m_new, v_new
+    if arena_st:
+        m0, v0 = m_new, v_new
+    else:
+        new_m["blocks"], new_v["blocks"] = m_new, v_new
+        m0, v0 = state["m"]["enc_blocks"], state["v"]["enc_blocks"]
 
     d_rest_encn, d_eN = encn_vjp(denc)
 
     # encoder backward
     def ebwd(carry, xs):
-        dx_c, m_stack, v_stack = carry
+        dx_c, m_c, v_c = carry
         j, lp, xin = xs
         _, vjp = jax.vjp(
             lambda lp_, xi_: apply_block(cfg, lp_, xi_, epos, kind="dense",
                                          causal=False), lp, xin)
         dlp, dxin = vjp((dx_c, scale))
-        m2, v2 = _fold_tree(_idx(m_stack, j), _idx(v_stack, j), dlp,
-                            beta1, beta2, use_pallas)
-        return (dxin, _upd(m_stack, m2, j), _upd(v_stack, v2, j)), None
+        m_c, v_c = _fold_layer(m_c, v_c, dlp, j, enc_spec, lay, beta1, beta2,
+                               use_pallas, decay)
+        return (dxin, m_c, v_c), None
 
     ne = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
     (_, m_new, v_new), _ = lax.scan(
-        ebwd, (d_eN, state["m"]["enc_blocks"], state["v"]["enc_blocks"]),
+        ebwd, (d_eN, m0, v0),
         (jnp.arange(ne), params["enc_blocks"], enc_saved),
         reverse=True)
-    new_m["enc_blocks"], new_v["enc_blocks"] = m_new, v_new
 
     (d_rest_pre,) = pre_vjp(dx)
     d_rest = jax.tree.map(lambda a, b_, c: a + b_ + c,
                           d_rest_post, d_rest_encn, d_rest_pre)
+    if arena_st:
+        m_new, v_new = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
+                                  decay)
+        return ce, {"m": state["m"].with_data(m_new),
+                    "v": state["v"].with_data(v_new),
+                    "step": state["step"]}
+    new_m["enc_blocks"], new_v["enc_blocks"] = m_new, v_new
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
                                         d_rest[k], beta1, beta2, use_pallas)

@@ -1,0 +1,119 @@
+"""Arena-wide fused AdamA kernels: the whole optimizer state as ONE
+(rows, LANES) fp32 buffer -> ONE `pallas_call` per micro-batch fold and ONE
+per mini-batch-end apply, independent of the number of parameter leaves.
+
+Three kernels:
+
+  arena_fold        m <- dm*m + (1-b1)*s*g ; v <- dv*v + (1-b2)*(s*g)^2
+                    over the full arena. The decay pair (dm, dv) is an SMEM
+                    scalar input: passing (beta1, M*beta2) on the FIRST fold
+                    of a mini-batch fuses `begin_minibatch` into it,
+                    eliminating an entire arena read+write pass (the decay
+                    pass the per-leaf path runs separately).
+  arena_fold_slice  Same fold restricted to rows [offset, offset+rows_g).
+                    `offset` is a TRACED scalar-prefetch argument feeding the
+                    BlockSpec index maps, so the layer-wise engine
+                    (Algorithm 2) folds layer j into its arena slice at
+                    `stack.row + j*layer_rows` from inside a lax.scan with a
+                    single kernel — no per-leaf dynamic_slice round-trips.
+                    Rows outside the slice keep their values (m, v are
+                    aliased input->output; untouched blocks are never
+                    copied through VMEM).
+  arena_apply       The bias-corrected parameter update over the packed
+                    param arena (reads p, m, v once, writes p once, aliased)
+                    — re-dispatches kernels/adam_apply.py on the arena.
+
+All operands are fp32 (the arena packs with a cast); scale/betas are static,
+step-dependent scalars ride in SMEM so one compiled kernel serves every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.adam_apply import adam_apply_2d
+from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+from repro.kernels.ops import _interpret
+
+
+def _decay_scalars(decay):
+    dm, dv = (1.0, 1.0) if decay is None else decay
+    return jnp.stack([jnp.asarray(dm, jnp.float32),
+                      jnp.asarray(dv, jnp.float32)])
+
+
+def _fold_body(sc_ref, m_ref, v_ref, g_ref, mo_ref, vo_ref, *,
+               beta1, beta2, scale):
+    g = g_ref[...] * scale
+    mo_ref[...] = sc_ref[0] * m_ref[...] + (1.0 - beta1) * g
+    vo_ref[...] = sc_ref[1] * v_ref[...] + (1.0 - beta2) * (g * g)
+
+
+def arena_fold(m, v, g, *, beta1: float, beta2: float, scale: float = 1.0,
+               decay=None, interpret=None):
+    """Whole-arena fold; m, v, g: (rows, LANES) fp32; m, v aliased in-place.
+    decay=(dm, dv) (traced ok) fuses the begin-minibatch decay pass."""
+    assert m.shape == v.shape == g.shape and m.shape[1] == LANES, m.shape
+    rows = m.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0, (rows, block)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_fold_body, beta1=beta1, beta2=beta2,
+                          scale=float(scale)),
+        grid=(rows // block,),
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,)), spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32)] * 2,
+        input_output_aliases={1: 0, 2: 1},
+        interpret=_interpret() if interpret is None else interpret,
+    )(_decay_scalars(decay), m, v, g)
+
+
+def _slice_fold_body(off_ref, sc_ref, m_ref, v_ref, g_ref, mo_ref, vo_ref, *,
+                     beta1, beta2, scale):
+    del off_ref                      # consumed by the index maps
+    _fold_body(sc_ref, m_ref, v_ref, g_ref, mo_ref, vo_ref,
+               beta1=beta1, beta2=beta2, scale=scale)
+
+
+def arena_fold_slice(m, v, g, row_offset, *, beta1: float, beta2: float,
+                     block: int, scale: float = 1.0, decay=None,
+                     interpret=None):
+    """Fold a (rows_g, LANES) gradient slab into arena rows
+    [row_offset, row_offset+rows_g). `row_offset` may be traced but must be
+    a multiple of `block` (layout.slice_block guarantees it). Rows outside
+    the slice pass through untouched via input->output aliasing."""
+    assert m.shape == v.shape and m.shape[1] == LANES and g.shape[1] == LANES
+    rows_g = g.shape[0]
+    assert rows_g % block == 0, (rows_g, block)
+    mv = pl.BlockSpec((block, LANES), lambda i, off, sc: (off[0] + i, 0))
+    gs = pl.BlockSpec((block, LANES), lambda i, off, sc: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # (row offset, decay pair)
+        grid=(rows_g // block,),
+        in_specs=[mv, mv, gs],
+        out_specs=[mv, mv],
+    )
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1) // block
+    return pl.pallas_call(
+        functools.partial(_slice_fold_body, beta1=beta1, beta2=beta2,
+                          scale=float(scale)),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32)] * 2,
+        input_output_aliases={2: 0, 3: 1},       # m, v in place
+        interpret=_interpret() if interpret is None else interpret,
+    )(off, _decay_scalars(decay), m, v, g)
+
+
+def arena_apply(p, m, v, *, lr, bc1, bc2, eps: float = 1e-8,
+                weight_decay: float = 0.0, interpret=None):
+    """Bias-corrected apply over packed (rows, LANES) fp32 arenas; p aliased."""
+    return adam_apply_2d(p, m, v, lr=lr, bc1=bc1, bc2=bc2, eps=eps,
+                         weight_decay=weight_decay,
+                         interpret=_interpret() if interpret is None
+                         else interpret)

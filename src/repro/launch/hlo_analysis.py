@@ -193,3 +193,39 @@ def analyze_collectives(text: str) -> Dict[str, float]:
 
 def count_op(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr-level dispatch counting (kernel-launch regression guard)
+# ---------------------------------------------------------------------------
+
+
+def count_jaxpr_primitives(jaxpr, name: str = "pallas_call") -> int:
+    """Count equations named `name` in a (closed) jaxpr, recursing into
+    sub-jaxprs (scan/while/cond bodies, pjit calls). A lax.scan body counts
+    ONCE regardless of trip count, so this measures kernels per *traced
+    program region* — exactly the dispatch-count the arena path bounds at
+    O(1) in the number of parameter leaves (benchmarks/kernel_bench.py and
+    tests/test_arena.py assert on it)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)        # ClosedJaxpr -> Jaxpr
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        for sub in _param_jaxprs(eqn.params):
+            total += count_jaxpr_primitives(sub, name)
+    return total
+
+
+def _param_jaxprs(params):
+    from jax.extend import core as jex_core  # jaxpr types' public home
+
+    def walk(v):
+        if isinstance(v, (jex_core.ClosedJaxpr, jex_core.Jaxpr)):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                yield from walk(x)
+
+    for v in params.values():
+        yield from walk(v)

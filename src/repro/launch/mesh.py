@@ -11,7 +11,23 @@ Defined as functions so importing this module never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                              # jax >= 0.5: explicit Auto/Manual axis types
+    from jax.sharding import AxisType
+except ImportError:               # jax 0.4.x: all mesh axes are Auto already
+    AxisType = None
+
+
+def make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: passes axis_types=(Auto, ...) when
+    the running jax supports it (0.4.x has no axis_types kwarg and treats
+    every axis as Auto, which is exactly what we want)."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if AxisType is not None:
+        kw["axis_types"] = (AxisType.Auto,) * len(shape)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,8 +42,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, found {len(devices)} — the "
             "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
             "=512 BEFORE importing jax (launch/dryrun.py does this).")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")):
@@ -35,5 +50,4 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--arena", action="store_true",
+                    help="flat optimizer-state arena: O(1) kernel dispatches "
+                         "per micro-batch (implies --use-pallas)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -48,7 +51,7 @@ def main():
         optimizer=OptimizerConfig(
             name=args.optimizer, accumulation=args.accumulation,
             micro_batches=args.micro_batches, lr=args.lr,
-            use_pallas=args.use_pallas),
+            use_pallas=args.use_pallas or args.arena, arena=args.arena),
         shape=shape, seed=args.seed, steps=args.steps,
         log_every=args.log_every, checkpoint_dir=args.checkpoint_dir)
     lr_fn = sched.warmup_cosine(args.lr, args.warmup, args.steps)

@@ -1,0 +1,319 @@
+"""Flat optimizer-state arena: layout/packing invariants, kernel parity with
+the per-leaf Pallas and jnp reference paths, engine-level equivalence, and
+the O(1)-dispatch guarantee (the tentpole claim: kernel launches per
+micro-batch are constant in the number of parameter leaves)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import batch_for, maxdiff, tiny
+from repro.configs import OptimizerConfig
+from repro.core import adama, arena
+from repro.core.accumulation import make_train_step
+from repro.core.arena import Arena
+from repro.kernels import fused_step, ops, ref
+from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+from repro.launch.hlo_analysis import count_jaxpr_primitives
+from repro.models.model import init_params
+
+# fp32 elementwise kernels: identical operation order, but XLA may contract
+# mul+add into FMA differently per fusion shape, so cross-path comparisons
+# are tight-tolerance (a few ulp), not bitwise. Pure data movement
+# (pack/unpack) IS asserted bitwise.
+TOL = dict(rtol=2e-6, atol=2e-6)
+
+
+def _edge_tree():
+    """Every packing edge at once: sub-lane leaf, non-LANES-divisible 2D
+    leaf, scalar-ish stacked leaf, mixed bf16/fp32, and a leaf spanning more
+    than BLOCK_ROWS rows without being a block multiple."""
+    return {
+        "a": jax.random.normal(jax.random.key(1), (7,), jnp.float32),
+        "b": jax.random.normal(jax.random.key(2), (300, 150)).astype(
+            jnp.bfloat16),
+        "blocks": {
+            "w": jax.random.normal(jax.random.key(3), (3, 257, 9),
+                                   jnp.float32),
+            "s": jax.random.normal(jax.random.key(4), (3, 5)).astype(
+                jnp.bfloat16),
+        },
+        "c": jax.random.normal(jax.random.key(5),
+                               (BLOCK_ROWS * LANES + 13,), jnp.float32),
+    }
+
+
+def _tree_equal_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype
+        assert np.array_equal(np.asarray(x, np.float32),
+                              np.asarray(y, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# layout + pack/unpack
+# ---------------------------------------------------------------------------
+
+
+def test_layout_alignment_invariants():
+    lay = arena.build_layout(_edge_tree())
+    for st in lay.stacks:
+        assert st.row % arena.ROW_ALIGN == 0
+        assert st.layer_rows % arena.ROW_ALIGN == 0
+    assert lay.rest.row % arena.ROW_ALIGN == 0
+    assert lay.rest.rows % arena.ROW_ALIGN == 0
+    assert lay.rows % lay.block_rows() == 0
+    if lay.rows > BLOCK_ROWS:
+        assert lay.rows % BLOCK_ROWS == 0
+    # slice blocks divide both region stride and every reachable offset
+    for st in lay.stacks:
+        blk = lay.slice_block(st)
+        assert st.layer_rows % blk == 0 and st.row % blk == 0
+    blk = lay.slice_block(lay.rest)
+    assert lay.rest.rows % blk == 0 and lay.rest.row % blk == 0
+
+
+def test_pack_unpack_roundtrip_bitwise_mixed_dtypes():
+    tree = _edge_tree()
+    lay = arena.build_layout(tree)
+    packed = arena.pack(tree, lay)
+    assert packed.shape == (lay.rows, LANES) and packed.dtype == jnp.float32
+    _tree_equal_bitwise(arena.unpack(packed, lay), tree)
+
+
+def test_pack_layer_matches_whole_pack():
+    tree = _edge_tree()
+    lay = arena.build_layout(tree)
+    packed = arena.pack(tree, lay)
+    st = lay.stack("blocks")
+    for j in range(st.n_layers):
+        layer = jax.tree.map(lambda x: x[j], tree["blocks"])
+        slab = arena.pack_layer(layer, st)
+        r0 = st.row + j * st.layer_rows
+        np.testing.assert_array_equal(np.asarray(slab),
+                                      np.asarray(packed[r0:r0 + st.layer_rows]))
+
+
+def test_arena_pytree_registration():
+    tree = _edge_tree()
+    a = Arena.from_tree(tree)
+    leaves, tdef = jax.tree.flatten(a)
+    assert len(leaves) == 1                       # layout is static aux data
+    b = jax.tree.unflatten(tdef, leaves)
+    assert b.layout is a.layout
+    doubled = jax.jit(lambda x: jax.tree.map(lambda d: d * 2, x))(a)
+    assert isinstance(doubled, Arena)
+    np.testing.assert_array_equal(np.asarray(doubled.data),
+                                  2 * np.asarray(a.data))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: arena vs per-leaf Pallas vs jnp reference
+# ---------------------------------------------------------------------------
+
+
+def _mvg():
+    tree = _edge_tree()
+    m = jax.tree.map(lambda x: jax.random.normal(jax.random.key(10), x.shape,
+                                                 jnp.float32), tree)
+    v = jax.tree.map(lambda x: jnp.abs(jax.random.normal(
+        jax.random.key(11), x.shape, jnp.float32)), tree)
+    return tree, m, v
+
+
+def test_arena_fold_matches_per_leaf_and_ref():
+    g, m, v = _mvg()
+    lay = arena.build_layout(g)
+    b1, b2, sc = 0.9, 0.999, 0.125
+    mo_a, vo_a = fused_step.arena_fold(arena.pack(m, lay), arena.pack(v, lay),
+                                       arena.pack(g, lay), beta1=b1, beta2=b2,
+                                       scale=sc)
+    mo_t = arena.unpack(mo_a, lay, jnp.float32)
+    vo_t = arena.unpack(vo_a, lay, jnp.float32)
+    mo_p, vo_p = ops.adama_accumulate_tree(m, v, g, beta1=b1, beta2=b2,
+                                           scale=sc)
+    for a_, p_ in ((mo_t, mo_p), (vo_t, vo_p)):
+        for x, y in zip(jax.tree.leaves(a_), jax.tree.leaves(p_)):
+            np.testing.assert_allclose(x, y, **TOL)
+    mo_r = jax.tree.map(lambda m_, g_: ref.adama_accum_ref(
+        m_, jnp.zeros_like(m_), g_, beta1=b1, beta2=b2, scale=sc)[0], m, g)
+    for x, y in zip(jax.tree.leaves(mo_t), jax.tree.leaves(mo_r)):
+        np.testing.assert_allclose(x, y, **TOL)
+
+
+def test_fold_decay_fusion_equals_begin_minibatch():
+    g, m, v = _mvg()
+    lay = arena.build_layout(g)
+    ma, va, ga = arena.pack(m, lay), arena.pack(v, lay), arena.pack(g, lay)
+    b1, b2, M = 0.9, 0.999, 4
+    fused_m, fused_v = fused_step.arena_fold(ma, va, ga, beta1=b1, beta2=b2,
+                                             decay=(b1, M * b2))
+    exp_m, exp_v = fused_step.arena_fold(b1 * ma, (M * b2) * va, ga,
+                                         beta1=b1, beta2=b2)
+    np.testing.assert_allclose(fused_m, exp_m, **TOL)
+    np.testing.assert_allclose(fused_v, exp_v, **TOL)
+
+
+def test_slice_fold_equals_whole_fold_and_preserves_rest():
+    g, m, v = _mvg()
+    lay = arena.build_layout(g)
+    ma, va, ga = arena.pack(m, lay), arena.pack(v, lay), arena.pack(g, lay)
+    b1, b2 = 0.9, 0.999
+    whole_m, whole_v = fused_step.arena_fold(ma, va, ga, beta1=b1, beta2=b2)
+    st = lay.stack("blocks")
+    blk = lay.slice_block(st)
+
+    def fold_layer(carry, j):
+        md, vd = carry
+        layer = jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(
+            x, j, 0, keepdims=False), g["blocks"])
+        slab = arena.pack_layer(layer, st)
+        md, vd = fused_step.arena_fold_slice(
+            md, vd, slab, st.row + j * st.layer_rows, beta1=b1, beta2=b2,
+            block=blk)
+        return (md, vd), None
+
+    (md, vd), _ = jax.jit(lambda md, vd: jax.lax.scan(
+        fold_layer, (md, vd), jnp.arange(st.n_layers)))(ma, va)
+    sl = slice(st.row, st.row + st.rows)
+    np.testing.assert_allclose(np.asarray(md)[sl], np.asarray(whole_m)[sl],
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(vd)[sl], np.asarray(whole_v)[sl],
+                               **TOL)
+    # untouched rows pass through the aliased output bit-exactly
+    np.testing.assert_array_equal(np.asarray(md)[st.row + st.rows:],
+                                  np.asarray(ma)[st.row + st.rows:])
+
+
+def test_arena_apply_matches_per_leaf_mixed_dtypes():
+    p, m, v = _mvg()
+    lay = arena.build_layout(p)
+    po = fused_step.arena_apply(arena.pack(p, lay), arena.pack(m, lay),
+                                arena.pack(v, lay), lr=1e-3, bc1=0.5, bc2=0.3,
+                                weight_decay=0.01)
+    po_t = arena.unpack(po, lay)
+    po_p = ops.adam_apply_tree(p, m, v, lr=1e-3, bc1=0.5, bc2=0.3,
+                               weight_decay=0.01)
+    for x, y in zip(jax.tree.leaves(po_t), jax.tree.leaves(po_p)):
+        assert x.dtype == y.dtype                 # dtypes restored (bf16!)
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence (acceptance: bert_large, stablelm_1_6b,
+# whisper_base) + O(1) dispatch
+# ---------------------------------------------------------------------------
+
+
+def _steps(arch, accum, **over):
+    cfg = tiny(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    oc = OptimizerConfig(name="adama", accumulation=accum, micro_batches=2,
+                         **over)
+    step, init = make_train_step(cfg, oc)
+    return params, batch, step, init
+
+
+@pytest.mark.parametrize("arch", ["bert_large", "stablelm_1_6b",
+                                  "whisper_base"])
+def test_adama_arena_engine_matches_reference(arch):
+    params, batch, step_r, init_r = _steps(arch, "adama")
+    _, _, step_a, init_a = _steps(arch, "adama", use_pallas=True, arena=True)
+    pr, sr, mr = jax.jit(step_r)(params, init_r(params), batch)
+    pa, sa, ma = jax.jit(step_a)(params, init_a(params), batch)
+    assert isinstance(sa["m"], Arena)
+    assert maxdiff(pr, pa) < 1e-6
+    assert maxdiff(sr["m"], sa["m"].to_tree(jnp.float32)) < 1e-6
+    assert maxdiff(sr["v"], sa["v"].to_tree(jnp.float32)) < 1e-6
+    assert abs(float(mr["loss"]) - float(ma["loss"])) < 1e-6
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "whisper_base"])
+def test_layerwise_arena_engine_matches_reference(arch):
+    params, batch, step_r, init_r = _steps(arch, "adama_layerwise")
+    _, _, step_a, init_a = _steps(arch, "adama_layerwise", use_pallas=True,
+                                  arena=True)
+    pr, sr, mr = jax.jit(step_r)(params, init_r(params), batch)
+    pa, sa, ma = jax.jit(step_a)(params, init_a(params), batch)
+    assert maxdiff(pr, pa) < 5e-6
+    assert maxdiff(sr["m"], sa["m"].to_tree(jnp.float32)) < 5e-6
+    assert abs(float(mr["loss"]) - float(ma["loss"])) < 1e-5
+
+
+def test_ga_arena_engine_matches_reference():
+    params, batch, step_r, init_r = _steps("stablelm_1_6b", "ga",
+                                           grad_clip=1.0)
+    _, _, step_a, init_a = _steps("stablelm_1_6b", "ga", grad_clip=1.0,
+                                  use_pallas=True, arena=True)
+    pr, sr, _ = jax.jit(step_r)(params, init_r(params), batch)
+    pa, sa, _ = jax.jit(step_a)(params, init_a(params), batch)
+    assert maxdiff(pr, pa) < 1e-6
+    assert maxdiff(sr["m"], sa["m"].to_tree(jnp.float32)) < 1e-6
+
+
+def _dispatches(arch, accum, **over):
+    params, batch, step, init = _steps(arch, accum, **over)
+    jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
+    return (count_jaxpr_primitives(jaxpr, "pallas_call"),
+            len(jax.tree.leaves(params)))
+
+
+def test_arena_dispatch_count_constant_in_leaves():
+    """The tentpole: a jitted arena train step lowers to a CONSTANT number
+    of pallas_calls (1 fold in the scan body + 1 apply) regardless of the
+    number of parameter leaves; the per-leaf path scales as 2x leaves."""
+    counts = {}
+    for arch in ["stablelm_1_6b", "deepseek_v2_lite_16b", "whisper_base"]:
+        n_arena, leaves = _dispatches(arch, "adama", use_pallas=True,
+                                      arena=True)
+        n_leaf, _ = _dispatches(arch, "adama", use_pallas=True)
+        counts[arch] = (n_arena, n_leaf, leaves)
+        assert n_arena == 2, counts               # 1 fold + 1 apply
+        assert n_leaf == 2 * leaves, counts
+    # leaf counts differ across the three archs, arena count does not
+    assert len({c[2] for c in counts.values()}) == 3
+    assert len({c[0] for c in counts.values()}) == 1
+
+
+def test_layerwise_arena_dispatch_count():
+    """Layer-wise arena: one slice-fold per STACK scan body + one for the
+    rest region + one apply — O(1) in leaves (vs 2x leaves per-leaf)."""
+    n, leaves = _dispatches("stablelm_1_6b", "adama_layerwise",
+                            use_pallas=True, arena=True)
+    assert n == 3                                 # blocks + rest + apply
+    n_w, leaves_w = _dispatches("whisper_base", "adama_layerwise",
+                                use_pallas=True, arena=True)
+    assert n_w == 4                               # dec + enc + rest + apply
+    n_leaf, _ = _dispatches("stablelm_1_6b", "adama_layerwise",
+                            use_pallas=True)
+    assert n_leaf == 2 * leaves
+
+
+# ---------------------------------------------------------------------------
+# multi-step training smoke: arena state survives jit/donation/scan reuse
+# ---------------------------------------------------------------------------
+
+
+def test_arena_multi_step_training_converges_like_reference():
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    oc_r = OptimizerConfig(name="adama", accumulation="adama",
+                           micro_batches=4)
+    oc_a = dataclasses.replace(oc_r, use_pallas=True, arena=True)
+    step_r, init_r = make_train_step(cfg, oc_r)
+    step_a, init_a = make_train_step(cfg, oc_a)
+    pr, sr = params, init_r(params)
+    pa, sa = params, init_a(params)
+    jr, ja = jax.jit(step_r), jax.jit(step_a)
+    for i in range(3):
+        batch = batch_for(cfg, 8, 16, jax.random.key(20 + i))
+        pr, sr, _ = jr(pr, sr, batch)
+        pa, sa, _ = ja(pa, sa, batch)
+    assert int(sa["step"]) == 3
+    assert maxdiff(pr, pa) < 5e-6
+    assert maxdiff(sr["m"], sa["m"].to_tree(jnp.float32)) < 5e-6
+    assert maxdiff(sr["v"], sa["v"].to_tree(jnp.float32)) < 5e-6

@@ -29,7 +29,7 @@ def test_dp_adama_equals_single_device_nm():
     via the M*beta2 pre-scale and /M, /M^2 all-reduce corrections."""
     out = run_sub("""
         import dataclasses, jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
         from repro.configs import get_config, OptimizerConfig
         from repro.models.model import init_params
         from repro.core.accumulation import make_train_step
@@ -40,7 +40,7 @@ def test_dp_adama_equals_single_device_nm():
         tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
         batch = {'tokens': tokens, 'labels': tokens}
         M, N = 4, 2
-        mesh = jax.make_mesh((M,), ('data',), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((M,), ('data',))
         oc = OptimizerConfig(name='adama', accumulation='adama', micro_batches=N*M)
         step_s, init_s = make_train_step(cfg, oc)
         p_s, st_s, _ = jax.jit(step_s)(params, init_s(params), batch)
@@ -58,12 +58,47 @@ def test_dp_adama_equals_single_device_nm():
     assert "PDIFF" in out
 
 
+def test_dp_adama_arena_equals_tree_state():
+    """The flat-arena optimizer path composes with the §3.3 DP schedule:
+    psum over the (m, v) arena buffers + fused decay/fold produce the same
+    update as the per-leaf tree state."""
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.dp_shardmap import make_dp_train_step
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        batch = {'tokens': tokens, 'labels': tokens}
+        mesh = make_mesh((4,), ('data',))
+        oc = OptimizerConfig(name='adama', accumulation='adama', micro_batches=2)
+        oca = dataclasses.replace(oc, use_pallas=True, arena=True)
+        step_t, init_t = make_dp_train_step(cfg, oc, mesh, ('data',), 'adama')
+        step_a, init_a = make_dp_train_step(cfg, oca, mesh, ('data',), 'adama')
+        with mesh:
+            pt, st, _ = jax.jit(step_t)(params, init_t(params), batch)
+            pa, sa, _ = jax.jit(step_a)(params, init_a(params), batch)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(pt), jax.tree.leaves(pa)))
+        mt = sa['m'].to_tree(jnp.float32)
+        dm = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(jax.tree.leaves(st['m']), jax.tree.leaves(mt)))
+        print('PDIFF', d, 'MDIFF', dm)
+        assert d < 1e-6 and dm < 1e-6, (d, dm)
+    """, devices=4)
+    assert "PDIFF" in out
+
+
 def test_dp_comm_schedule_volumes():
     """Fig. 7's argument as HLO fact: per mini-batch collective volume is
     ~P for GA, ~2P for AdamA (m and v), ~N*P for the naive schedule."""
     out = run_sub("""
         import dataclasses, json, jax, jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.configs import get_config, OptimizerConfig
         from repro.models.model import init_params, abstract_params
         from repro.core.dp_shardmap import make_dp_train_step
@@ -73,7 +108,7 @@ def test_dp_comm_schedule_volumes():
         aparams = abstract_params(cfg)
         P_bytes = sum(x.size * 4 for x in jax.tree.leaves(aparams))
         M, N = 4, 4
-        mesh = jax.make_mesh((M,), ('data',), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((M,), ('data',))
         batch = {'tokens': jax.ShapeDtypeStruct((16, 32), jnp.int32),
                  'labels': jax.ShapeDtypeStruct((16, 32), jnp.int32)}
         vols = {}
@@ -99,10 +134,9 @@ def test_dryrun_lowers_on_small_mesh():
     production mesh is exercised by launch/dryrun.py in its own process)."""
     run_sub("""
         import jax
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
         from repro.launch.dryrun import build_lowered
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         for shape in ('train_4k', 'decode_32k'):
             lowered, why = build_lowered('stablelm_1_6b', shape, mesh,
                                          micro_batches=4)
@@ -114,12 +148,18 @@ def test_dryrun_lowers_on_small_mesh():
 
 
 def test_shardmap_engine_lowers():
+    import jax
+    if not hasattr(jax, "shard_map"):
+        # partial-auto shard_map (manual DP axes + auto model axis for TP)
+        # fatally crashes old GSPMD: "Check failed: sharding.IsManualSubgroup"
+        # in hlo_sharding_util.cc. Pure-DP shard_map (the other three tests)
+        # works on 0.4.x via the auto= compat path in core/dp_shardmap.py.
+        pytest.skip("mixed manual/auto shard_map needs jax >= 0.6")
     run_sub("""
         import jax
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
         from repro.launch.dryrun import build_lowered
-        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                             axis_types=(AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
         lowered, why = build_lowered('stablelm_1_6b', 'train_4k', mesh,
                                      engine='shardmap', micro_batches=4,
                                      fsdp=False)

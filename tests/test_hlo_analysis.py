@@ -53,10 +53,10 @@ def test_collectives_in_scan_multiplied():
     env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
         from repro.launch.hlo_analysis import analyze_hlo
-        mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ('data', 'model'))
         N, M, K, NN = 7, 8, 64, 32
         def f(w, xs):
             def body(c, x):

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -48,6 +48,45 @@ def test_adama_accum_property(n, b1, b2, scale):
     mr, vr = ref.adama_accum_ref(m, v, g, beta1=b1, beta2=b2, scale=scale)
     np.testing.assert_allclose(mo, mr, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(vo, vr, rtol=1e-5, atol=1e-6)
+
+
+# --- padding edge cases for the leaf -> (R, LANES) tiling -------------------
+# sizes straddling every rounding rule: not LANES-divisible, exactly one
+# block, and rows above BLOCK_ROWS that are NOT a block multiple (forces the
+# round-up-to-block-multiple branch)
+def _edge_shapes():
+    from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+    return [(LANES - 1,), (LANES + 1,), (BLOCK_ROWS * LANES,),
+            (BLOCK_ROWS * LANES + 13,), ((BLOCK_ROWS + 3) * LANES,)]
+
+
+@pytest.mark.parametrize("shape", _edge_shapes())
+def test_to_2d_roundtrip_and_padding(shape):
+    from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+    x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape) + 1.0
+    arr, n = ops._to_2d(x)
+    assert n == x.size and arr.shape[1] == LANES
+    rows = arr.shape[0]
+    assert rows * LANES >= n
+    if rows > BLOCK_ROWS:
+        assert rows % BLOCK_ROWS == 0, rows      # kernel grid divisibility
+    flat = np.asarray(arr).reshape(-1)
+    assert np.array_equal(flat[:n], np.asarray(x).reshape(-1))
+    assert not flat[n:].any()                    # zero padding
+    back = ops._from_2d(arr, n, x.shape, x.dtype)
+    assert np.array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("shape", _edge_shapes())
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+def test_accum_padding_edges_match_ref(shape, gdtype):
+    m = jax.random.normal(jax.random.key(7), shape, jnp.float32)
+    v = jnp.abs(jax.random.normal(jax.random.key(8), shape, jnp.float32))
+    g = jax.random.normal(jax.random.key(9), shape, gdtype)
+    mo, vo = ops.adama_accumulate(m, v, g, beta1=0.9, beta2=0.999, scale=0.5)
+    mr, vr = ref.adama_accum_ref(m, v, g, beta1=0.9, beta2=0.999, scale=0.5)
+    np.testing.assert_allclose(mo, mr, rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(vo, vr, rtol=2e-6, atol=2e-6)
 
 
 def test_kernels_jit_and_grad_free():
