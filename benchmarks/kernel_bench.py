@@ -6,21 +6,56 @@ column reports the HBM-traffic model for TPU: fused accumulate = 3 reads +
 
 Also a DISPATCH-COUNT REGRESSION GUARD: the arena train step must lower to
 O(1) pallas_calls in the number of parameter leaves (1 fold in the scan
-body + 1 apply). Exits non-zero if that regresses — CI runs this module."""
+body + 1 apply) FOR EVERY STATE CODEC, and an OPTIMIZER-STATE-BYTES metric
+per codec (fp32 vs int8 vs factored) measured from the abstract state the
+engines actually allocate — the Table-3 memory win, measured not asserted.
+Both are emitted into the benchmark JSON (--json, default
+experiments/kernel_bench.json). `--check` runs only the guards (CI mode);
+exits non-zero on any regression."""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, timed
+from repro.configs.base import STATE_CODECS as CODECS
 from repro.kernels import ops, ref
 
 N = 1 << 20     # 1M params
 
 
-def main():
+def main(check_only: bool = False,
+         json_path: str | None = "experiments/kernel_bench.json"):
+    metrics = {}
+    if not check_only:
+        bench_kernels()
+        arena_vs_per_leaf()
+    metrics["optimizer_state_bytes"] = sb = state_bytes_per_codec()
+    ok, metrics["arena_dispatches"] = dispatch_count_guard()
+    if json_path:
+        Path(json_path).parent.mkdir(parents=True, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=1, sort_keys=True)
+        print(f"# wrote {json_path}")
+    if not ok:
+        raise RuntimeError("arena dispatch-count regression")
+    # state-bytes regression guard: compressed codecs must stay compressed
+    # (nominal ratios 0.25 / 0.001 + row-padding headroom on reduced cfgs)
+    fp32_v = sb["fp32"]["v_bytes"]
+    if sb["int8"]["v_bytes"] > 0.3 * fp32_v or \
+            sb["factored"]["v_bytes"] > 0.01 * fp32_v:
+        raise RuntimeError(
+            f"optimizer-state-bytes regression: v bytes per codec "
+            f"{ {c: d['v_bytes'] for c, d in sb.items()} } "
+            f"(want int8 <= 0.3x fp32, factored <= 0.01x fp32)")
+
+
+def bench_kernels():
     m = jnp.zeros((N,), jnp.float32)
     v = jnp.zeros((N,), jnp.float32)
     g = jnp.ones((N,), jnp.bfloat16)
@@ -47,10 +82,6 @@ def main():
         p, m, v, lr=1e-3, bc1=0.9, bc2=0.99))
     _, us_ka = timed(jka, p, m, v)
     row("kernels/adam_apply_pallas_interp", us_ka, "single-pass p,m,v read")
-
-    arena_vs_per_leaf()
-    if not dispatch_count_guard():
-        raise RuntimeError("arena dispatch-count regression")
 
 
 def _leafy_tree(n_leaves: int, leaf_size: int = 1 << 14):
@@ -85,42 +116,91 @@ def arena_vs_per_leaf(n_leaves: int = 32):
         f"dispatches=1;rows={lay.rows};speedup={us_l / us_a:.2f}x")
 
 
-def dispatch_count_guard() -> bool:
-    """Assert the arena train step's pallas_call count is CONSTANT in leaf
-    count (1 fold + 1 apply) by counting eqns in the lowered jaxpr."""
+def _bench_setup(arch: str):
     import dataclasses
 
-    from repro.configs import OptimizerConfig, get_config
-    from repro.core.accumulation import make_train_step
-    from repro.launch.hlo_analysis import count_jaxpr_primitives
+    from repro.configs import get_config
     from repro.models.model import init_params
 
-    ok = True
-    counts = []
-    for arch in ("stablelm_1_6b", "whisper_base"):
-        cfg = dataclasses.replace(get_config(arch).reduced(),
-                                  compute_dtype="float32")
-        params = init_params(cfg, jax.random.key(0))
-        tokens = jnp.zeros((4, 16), jnp.int32)
-        batch = {"tokens": tokens, "labels": tokens}
-        if cfg.arch_type == "audio":
-            batch["frames"] = jnp.zeros((4, cfg.encoder_seq_len, cfg.d_model))
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              compute_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    tokens = jnp.zeros((4, 16), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.zeros((4, cfg.encoder_seq_len, cfg.d_model))
+    return cfg, params, batch
+
+
+def state_bytes_per_codec(arch: str = "stablelm_1_6b"):
+    """MEASURED optimizer-state bytes per codec: eval_shape the exact state
+    the arena engines allocate (m + codec-encoded v + step) and sum the
+    array bytes — no formula, the number Table 3's capacity math composes
+    with AdamA's activation/gradient savings. Returns the JSON metric."""
+    from repro.configs import OptimizerConfig
+    from repro.core.accumulation import make_train_step
+    from repro.core.state_store import optimizer_state_bytes
+
+    cfg, params, _ = _bench_setup(arch)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    out = {}
+    for codec in CODECS:
         oc = OptimizerConfig(name="adama", accumulation="adama",
-                             micro_batches=2, use_pallas=True, arena=True)
-        step, init = make_train_step(cfg, oc)
-        jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
-        n = count_jaxpr_primitives(jaxpr, "pallas_call")
+                             micro_batches=2, use_pallas=True, arena=True,
+                             state_codec=codec)
+        _, init = make_train_step(cfg, oc)
+        aopt = jax.eval_shape(init, params)
+        total = optimizer_state_bytes(aopt)
+        v = optimizer_state_bytes(aopt["v"])
+        m = optimizer_state_bytes(aopt["m"])
+        out[codec] = {"arch": arch, "n_params": int(n_params),
+                      "total_bytes": total, "m_bytes": m, "v_bytes": v,
+                      "v_bytes_per_param": round(v / n_params, 4)}
+        row(f"kernels/state_bytes_{codec}", float(total),
+            f"arch={arch};v_bytes={v};v_bytes_per_param={v / n_params:.4f};"
+            f"v_vs_fp32={v / out['fp32']['v_bytes']:.4f}" if codec != "fp32"
+            else f"arch={arch};v_bytes={v};"
+                 f"v_bytes_per_param={v / n_params:.4f}")
+    return out
+
+
+def dispatch_count_guard():
+    """Assert the arena train step's pallas_call count is CONSTANT in leaf
+    count (1 fold + 1 apply) FOR EVERY CODEC by counting eqns in the
+    lowered jaxpr. Returns (ok, counts-dict for the benchmark JSON)."""
+    from repro.configs import OptimizerConfig
+    from repro.core.accumulation import make_train_step
+    from repro.launch.hlo_analysis import count_jaxpr_primitives
+
+    ok = True
+    counts = {}
+    for arch in ("stablelm_1_6b", "whisper_base"):
+        cfg, params, batch = _bench_setup(arch)
         leaves = len(jax.tree.leaves(params))
-        counts.append(n)
-        ok &= (n == 2)
-        row(f"kernels/arena_dispatches_{arch}", float(n),
-            f"leaves={leaves};expected=2")
-    ok &= len(set(counts)) == 1
+        for codec in CODECS:
+            oc = OptimizerConfig(name="adama", accumulation="adama",
+                                 micro_batches=2, use_pallas=True, arena=True,
+                                 state_codec=codec)
+            step, init = make_train_step(cfg, oc)
+            jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
+            n = count_jaxpr_primitives(jaxpr, "pallas_call")
+            counts[f"{arch}/{codec}"] = n
+            ok &= (n == 2)
+            row(f"kernels/arena_dispatches_{arch}_{codec}", float(n),
+                f"leaves={leaves};expected=2")
     if not ok:
         print("DISPATCH-COUNT REGRESSION: arena step no longer O(1) "
-              f"pallas_calls (got {counts}, want [2, 2])", file=sys.stderr)
-    return ok
+              f"pallas_calls (got {counts}, want 2 everywhere)",
+              file=sys.stderr)
+    return ok, counts
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="guards only (dispatch count + state bytes), no "
+                         "timing runs — the CI mode")
+    ap.add_argument("--json", default="experiments/kernel_bench.json",
+                    help="write metrics JSON here ('' to disable)")
+    args = ap.parse_args()
+    main(check_only=args.check, json_path=args.json or None)

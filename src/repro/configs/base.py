@@ -210,24 +210,86 @@ class OptimizerConfig:
     # accumulation engine: ga | adama | adama_layerwise
     accumulation: str = "adama"
     micro_batches: int = 8
-    zero_stage: int = 0          # 0 | 1 (P_os over data axis)
+    zero_stage: int = 0          # 0 | 1 (P_os; arena shards by row range)
     use_pallas: bool = False     # fused kernels for accumulate/apply
     # flat optimizer-state arena (core/arena.py): ONE kernel dispatch per
     # micro-batch fold / mini-batch apply instead of one per param leaf,
     # with the begin-minibatch decay fused into the first fold. Effective
-    # only with use_pallas=True; incompatible with zero_stage=1 (the arena
-    # is a single buffer, not per-leaf shardable by zero1_state_sharding).
+    # only with use_pallas=True. With zero_stage=1 the arena is sharded by
+    # ROW RANGE (core/zero.py::shard_rows) instead of per leaf.
     arena: bool = False
+    # second-moment codec over the arena (core/state_store.py):
+    #   fp32     exact, 4 B/param for v (default)
+    #   int8     per-row quantized codes + fp32 scale column, ~1 B/param
+    #   factored SM3-style per-row statistic, ~4/1024 B/param
+    # Codecs are arena columns: they require arena=True. All codec state is
+    # row-indexed, so every codec composes with zero_stage=1 row sharding.
+    state_codec: str = "fp32"
     grad_clip: Optional[float] = None
 
     def __post_init__(self):
-        if self.arena and not self.use_pallas:
-            raise ValueError("arena=True requires use_pallas=True (the arena "
-                             "path IS the fused-kernel path)")
-        if self.arena and self.zero_stage:
-            raise ValueError("arena=True is incompatible with zero_stage=1: "
-                             "the arena is a single flat buffer, not "
-                             "per-leaf shardable by zero1_state_sharding")
+        validate_optimizer_config(self)
+
+
+# Capability matrix for the optimizer-state store, consulted by
+# validate_optimizer_config and mirrored in tests/test_configs.py and the
+# README table. Keys: (codec, zero_stage, accumulation engine) dimensions
+# that are NOT universally supported, with the actionable reason.
+STATE_CODECS = ("fp32", "int8", "factored")
+ZERO_STAGES = (0, 1)
+ACCUM_ENGINES = ("ga", "adama", "adama_layerwise")
+
+
+def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
+    """None when the configuration is supported, else an actionable error
+    message. The full matrix is codec x zero_stage x engine:
+
+      codec fp32      : any engine, any zero stage, arena or per-leaf.
+      codec int8/fact.: require arena=True (codecs are arena columns) —
+                        then any engine and any zero stage (codec state is
+                        row-indexed, so row-range ZeRO composes).
+      zero_stage=1    : per-leaf states shard via zero1_state_sharding;
+                        arena states shard by row range (shard_rows).
+      arena=True      : requires use_pallas=True; the 'ga' engine's fused
+                        update supports the adam/adama optimizer only.
+
+    One engine-selection caveat lives outside this matrix (engine choice is
+    not an OptimizerConfig field): the shard_map DP engine
+    (core/dp_shardmap.make_dp_train_step) additionally requires
+    zero_stage=1 for int8/factored — its mini-batch-end state psum cannot
+    sum codec-encoded moments, while the row-range ZeRO-1 schedule
+    reduce-scatters fp32 gradients instead. It raises its own actionable
+    error at construction.
+    """
+    if opt.accumulation not in ACCUM_ENGINES:
+        return (f"unknown accumulation engine {opt.accumulation!r}; "
+                f"expected one of {ACCUM_ENGINES}")
+    if opt.state_codec not in STATE_CODECS:
+        return (f"unknown state_codec {opt.state_codec!r}; expected one of "
+                f"{STATE_CODECS}")
+    if opt.zero_stage not in ZERO_STAGES:
+        return (f"zero_stage={opt.zero_stage} unsupported; expected one of "
+                f"{ZERO_STAGES} (ZeRO-2/3 shard gradients/params, which "
+                f"AdamA already makes transient)")
+    if opt.arena and not opt.use_pallas:
+        return ("arena=True requires use_pallas=True (the arena path IS the "
+                "fused-kernel path); pass use_pallas=True")
+    if opt.state_codec != "fp32" and not opt.arena:
+        return (f"state_codec={opt.state_codec!r} requires arena=True: "
+                f"codecs are columns of the flat state arena "
+                f"(core/state_store.py); pass arena=True use_pallas=True")
+    if opt.arena and opt.accumulation == "ga" and \
+            opt.name not in ("adam", "adama"):
+        return (f"arena=True with accumulation='ga' supports the adam/adama "
+                f"optimizer only (the fused arena update is Adam), got "
+                f"name={opt.name!r}; drop arena or switch optimizer")
+    return None
+
+
+def validate_optimizer_config(opt: "OptimizerConfig") -> None:
+    reason = optimizer_capability(opt)
+    if reason is not None:
+        raise ValueError(reason)
 
 
 @dataclass(frozen=True)

@@ -21,6 +21,13 @@ optimizer path over the flat state arena (core/arena.py): one fused
 `pallas_call` per micro-batch fold (the begin-minibatch decay riding in as
 SMEM scalars on the first fold) and one per mini-batch-end apply — O(1)
 kernel dispatches per micro-batch instead of O(param leaves).
+
+OptimizerConfig.state_codec selects the second-moment codec
+(core/state_store.py: fp32 | int8 | factored); the codec transform is fused
+into the same kernels, so the dispatch count is unchanged. With
+zero_stage=1 the arena state is constrained to ZeRO-1 row-range sharding
+(core/zero.py) — under a multi-device mesh GSPMD materializes the
+reduce-scatter/all-gather schedule; on a single device it is a no-op.
 """
 from __future__ import annotations
 
@@ -42,6 +49,29 @@ OPTIMIZERS = {"adam": adam, "adafactor": adafactor, "sm3": sm3}
 
 def _use_arena(opt: OptimizerConfig) -> bool:
     return opt.use_pallas and opt.arena
+
+
+def _arena_init(opt: OptimizerConfig, state_shards: int = 1):
+    """Arena state initializer honouring the configured codec; the layout is
+    padded for `state_shards` equal row ranges whenever the caller may shard
+    (zero_stage=1 OR a dp-profile launcher passing its dp size) — padding
+    rows are zeros that no kernel result depends on, so over-padding is
+    always safe while an unpadded layout makes shard_rows refuse."""
+    return functools.partial(adama.init_arena, codec=opt.state_codec,
+                             n_shards=max(1, state_shards))
+
+
+def _zero_constrain(opt: OptimizerConfig, state):
+    """ZeRO-1 over the arena in the pjit engine: constrain every row-indexed
+    state column to row-range sharding over the dp axes. GSPMD then owns the
+    reduce-scatter/all-gather schedule; without an installed mesh this is a
+    no-op (single-device runs, unit tests)."""
+    if opt.zero_stage != 1 or not _use_arena(opt):
+        return state
+    from repro.sharding.ctx import maybe_shard
+    return {k: (jax.tree.map(lambda x: maybe_shard(x, "dp", None), v)
+                if k in ("m", "v") else v)
+            for k, v in state.items()}
 
 
 def _fold_decay(i, beta1: float, beta2: float, m_devices: int = 1):
@@ -70,16 +100,15 @@ def make_loss(cfg: ModelConfig, *, remat: bool = False) -> Callable:
 
 
 def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
-                 lr_schedule=None):
+                 lr_schedule=None, state_shards: int = 1):
     loss = make_loss(cfg, remat=remat)
     n = opt.micro_batches
     opt_mod = OPTIMIZERS[opt.name if opt.name != "adama" else "adam"]
     # arena fast path: the Adam update becomes one fused fold (decay in SMEM)
     # + one fused apply over the flat state arena
+    # arena + non-adam is rejected at OptimizerConfig construction
+    # (configs/base.py::optimizer_capability), so opt_mod is adam here
     use_arena = _use_arena(opt)
-    if use_arena and opt_mod is not adam:
-        raise ValueError(f"arena=True with accumulation='ga' supports the "
-                         f"adam/adama optimizer only, got {opt.name!r}")
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
@@ -107,21 +136,22 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
             grads = jax.tree.map(lambda g: g * scale, grads)
         lr = lr_schedule(opt_state["step"]) if lr_schedule else opt.lr
         if use_arena:
-            from repro.kernels import fused_step
+            from repro.core import state_store
+            codec = state_store.codec_of(opt_state["v"])
             step_c = opt_state["step"] + 1
             t = step_c.astype(jnp.float32)
-            m, v = fused_step.arena_fold(
-                opt_state["m"].data, opt_state["v"].data, grads,
+            m, vparts = codec.fold(
+                opt_state["m"].data, codec.parts_of(opt_state["v"]), grads,
                 beta1=opt.beta1, beta2=opt.beta2,
                 decay=(opt.beta1, opt.beta2))
-            p_new = fused_step.arena_apply(
-                arena_mod.pack(params, layout), m, v, lr=lr,
+            p_new = codec.apply(
+                arena_mod.pack(params, layout), m, vparts, lr=lr,
                 bc1=1 - opt.beta1 ** t, bc2=1 - opt.beta2 ** t, eps=opt.eps,
                 weight_decay=opt.weight_decay)
             params = arena_mod.unpack(p_new, layout)
             opt_state = {"m": opt_state["m"].with_data(m),
-                         "v": opt_state["v"].with_data(v), "step": step_c}
-            return params, opt_state, {"loss": lsum / n}
+                         "v": codec.wrap(layout, vparts), "step": step_c}
+            return params, _zero_constrain(opt, opt_state), {"loss": lsum / n}
         kw = dict(lr=lr, weight_decay=opt.weight_decay)
         if opt_mod is adam:
             kw.update(beta1=opt.beta1, beta2=opt.beta2, eps=opt.eps)
@@ -129,7 +159,8 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
         return params, opt_state, {"loss": lsum / n}
 
     def init(params):
-        return adama.init_arena(params) if use_arena else opt_mod.init(params)
+        return (_arena_init(opt, state_shards)(params) if use_arena
+                else opt_mod.init(params))
 
     return step, init
 
@@ -140,7 +171,8 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
 
 
 def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
-                    lr_schedule=None, m_devices: int = 1, axis_names=()):
+                    lr_schedule=None, m_devices: int = 1, axis_names=(),
+                    state_shards: int = 1):
     """m_devices/axis_names are used by the shard_map DP engine (Eqs. 5-8);
     in the pjit engine they stay (1, ()) and gradients arrive pre-reduced."""
     loss = make_loss(cfg, remat=remat)
@@ -186,9 +218,10 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
                                        use_pallas=opt.use_pallas)
         if axis_names:
             lsum = lax.pmean(lsum, axis_names)
-        return params, state, {"loss": lsum / n}
+        return params, _zero_constrain(opt, state), {"loss": lsum / n}
 
-    return step, (adama.init_arena if use_arena else adama.init)
+    return step, (_arena_init(opt, state_shards) if use_arena
+                  else adama.init)
 
 
 # ---------------------------------------------------------------------------
@@ -198,7 +231,8 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
 
 def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
                               remat=False, lr_schedule=None,
-                              m_devices: int = 1, axis_names=()):
+                              m_devices: int = 1, axis_names=(),
+                              state_shards: int = 1):
     from repro.core.layerwise import layerwise_loss_and_fold
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
@@ -244,9 +278,10 @@ def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
                                        use_pallas=opt.use_pallas)
         if axis_names:
             lsum = lax.pmean(lsum, axis_names)
-        return params, state, {"loss": lsum / n}
+        return params, _zero_constrain(opt, state), {"loss": lsum / n}
 
-    return step, (adama.init_arena if use_arena else adama.init)
+    return step, (_arena_init(opt, state_shards) if use_arena
+                  else adama.init)
 
 
 ENGINES = {

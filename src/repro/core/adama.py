@@ -37,11 +37,15 @@ def init(params) -> State:
             "step": jnp.zeros((), jnp.int32)}
 
 
-def init_arena(params) -> State:
-    """Arena-backed state: (m, v) are single flat (rows, LANES) fp32 buffers
-    (see core/arena.py) so each fold/apply is ONE kernel dispatch."""
-    layout = arena_mod.build_layout(params)
-    return {"m": Arena.zeros(layout), "v": Arena.zeros(layout),
+def init_arena(params, codec: str = "fp32", n_shards: int = 1) -> State:
+    """Arena-backed state: m is a flat (rows, LANES) fp32 buffer and v is
+    `codec`-encoded arena columns (core/state_store.py), so each fold/apply
+    is ONE kernel dispatch. `n_shards` pads the layout for ZeRO-1 row-range
+    sharding (core/zero.py::shard_rows)."""
+    from repro.core import state_store
+    layout = arena_mod.build_layout(params, n_shards=n_shards)
+    return {"m": Arena.zeros(layout),
+            "v": state_store.get_codec(codec).init(layout),
             "step": jnp.zeros((), jnp.int32)}
 
 
@@ -55,8 +59,16 @@ def begin_minibatch(state: State, beta1: float, beta2: float,
 
     The arena engines skip this pass entirely: the decay is fused into the
     first fold of the mini-batch via `accumulate(..., decay=...)`, saving a
-    full state-sized read+write. This standalone form (which also works on
-    Arena state) remains for the per-leaf path and the shard_map DP engine."""
+    full state-sized read+write. This standalone form remains for the
+    per-leaf path and the shard_map DP engine; on arena state it decays in
+    CODEC space (for int8, c*(q*s) == q*(c*s): only the scale column is
+    touched)."""
+    if is_arena_state(state):
+        from repro.core import state_store
+        codec = state_store.codec_of(state["v"])
+        return {"m": state["m"].with_data(beta1 * state["m"].data),
+                "v": codec.scale_state(state["v"], m_devices * beta2),
+                "step": state["step"] + 1}
     return {
         "m": jax.tree.map(lambda m: beta1 * m, state["m"]),
         "v": jax.tree.map(lambda v: (m_devices * beta2) * v, state["v"]),
@@ -73,14 +85,15 @@ def accumulate(state: State, grads, beta1: float, beta2: float,
     in-kernel on the arena path). `decay=(dm, dv)` folds the begin-minibatch
     decay into this call (pass it on the first micro-batch only)."""
     if is_arena_state(state):
-        from repro.kernels import fused_step
+        from repro.core import state_store
+        codec = state_store.codec_of(state["v"])
         layout = state["m"].layout
         g = arena_mod.pack(grads, layout)
-        m, v = fused_step.arena_fold(state["m"].data, state["v"].data, g,
-                                     beta1=beta1, beta2=beta2, scale=scale,
-                                     decay=decay)
-        return {"m": state["m"].with_data(m), "v": state["v"].with_data(v),
-                "step": state["step"]}
+        m, parts = codec.fold(state["m"].data, codec.parts_of(state["v"]), g,
+                              beta1=beta1, beta2=beta2, scale=scale,
+                              decay=decay)
+        return {"m": state["m"].with_data(m),
+                "v": codec.wrap(layout, parts), "step": state["step"]}
     if decay is not None:
         state = {"m": jax.tree.map(lambda m: decay[0] * m, state["m"]),
                  "v": jax.tree.map(lambda v: decay[1] * v, state["v"]),
@@ -109,7 +122,21 @@ def accumulate_leaf(m, v, g, beta1: float, beta2: float, use_pallas=False):
 
 def allreduce_states(state: State, axis_names: Sequence[str],
                      m_devices: int) -> State:
-    """Distributed sync (Eqs. 7-8): mean(m), sum(v)/M^2 — inside shard_map."""
+    """Distributed sync (Eqs. 7-8): mean(m), sum(v)/M^2 — inside shard_map.
+
+    Codec-encoded v cannot ride this path: summing int8 codes is
+    meaningless, and summing factored per-row maxima is not the max of the
+    summed gradients (it can UNDERestimate v and amplify updates). The
+    ZeRO-1 row-range schedule reduce-scatters the fp32 GRADIENT instead,
+    which composes with every codec — use zero_stage=1."""
+    from repro.core.state_store import MomentState
+    if isinstance(state["v"], MomentState):
+        raise TypeError(
+            f"allreduce_states cannot psum {state['v'].codec}-coded second "
+            f"moments (the sum of codec state is not the state of the "
+            f"summed moments); run the shard_map DP engine with "
+            f"zero_stage=1 (row-range ZeRO-1 reduce-scatters fp32 "
+            f"gradients instead of states)")
     m = jax.tree.map(lambda x: jax.lax.psum(x, axis_names) / m_devices,
                      state["m"])
     v = jax.tree.map(lambda x: jax.lax.psum(x, axis_names) / (m_devices ** 2),
@@ -126,13 +153,13 @@ def finalize(params, state: State, *, lr, beta1: float, beta2: float,
     bc1 = 1 - beta1 ** t
     bc2 = 1 - beta2 ** t
     if is_arena_state(state):
-        from repro.kernels import fused_step
+        from repro.core import state_store
+        codec = state_store.codec_of(state["v"])
         layout = state["m"].layout
         p_arena = arena_mod.pack(params, layout)
-        p_new = fused_step.arena_apply(p_arena, state["m"].data,
-                                       state["v"].data, lr=lr, bc1=bc1,
-                                       bc2=bc2, eps=eps,
-                                       weight_decay=weight_decay)
+        p_new = codec.apply(p_arena, state["m"].data,
+                            codec.parts_of(state["v"]), lr=lr, bc1=bc1,
+                            bc2=bc2, eps=eps, weight_decay=weight_decay)
         return arena_mod.unpack(p_new, layout), state
     if use_pallas:
         from repro.kernels.ops import adam_apply_tree

@@ -141,7 +141,13 @@ def split_tree(tree):
     return [], tree
 
 
-def build_layout(tree) -> ArenaLayout:
+def build_layout(tree, n_shards: int = 1) -> ArenaLayout:
+    """Build the packed layout. `n_shards > 1` additionally pads the total
+    row count so the arena splits into `n_shards` equal, kernel-block-aligned
+    row ranges (core/zero.py::shard_rows) — ZeRO-1 over the arena is a
+    row-range shard of every state column, so each shard must itself satisfy
+    the fold/apply kernels' block-divisibility contract."""
+    assert n_shards >= 1, n_shards
     stack_items, rest_tree = split_tree(tree)
     row = 0
     stacks = []
@@ -162,6 +168,15 @@ def build_layout(tree) -> ArenaLayout:
     rest = RestSpec(rdef, rspecs, row, rest_rows)
     row += rest_rows
     total = _align(row, BLOCK_ROWS) if row > BLOCK_ROWS else max(row, ROW_ALIGN)
+    if n_shards > 1:
+        # equal shards, each a ROW_ALIGN multiple; whenever the padded total
+        # exceeds BLOCK_ROWS, each shard must itself be a BLOCK_ROWS multiple
+        # so both the whole-arena AND the per-shard fold/apply keep their
+        # block-divisibility contract
+        per = _align(_cdiv(total, n_shards), ROW_ALIGN)
+        if per * n_shards > BLOCK_ROWS:
+            per = _align(per, BLOCK_ROWS)
+        total = per * n_shards
     return ArenaLayout(tuple(stacks), rest, total)
 
 

@@ -11,6 +11,18 @@ Three DP variants (benchmarks/fig7_comm.py measures their collective bytes):
            and v (/M^2) at mini-batch end (Eqs. 7-8). Comm volume = 2*P,
            constant in N, and bit-consistent with single-device AdamA(N*M).
 
+With OptimizerConfig(zero_stage=1, arena=True) the adama variant runs the
+ZeRO-1 ROW-RANGE schedule over the flat state arena (the paper's Table-3
+"ZeRO-S1 + AdamA" row): device k persistently owns rows [k*R/M, (k+1)*R/M)
+of EVERY state column (m, the v payload, any codec scale column — all
+row-indexed, see core/state_store.py), each micro-batch's gradient arena is
+psum_scatter'd so the fold runs on 1/M of the state, and the mini-batch-end
+apply updates the owned param rows followed by one all-gather. Optimizer
+state per device drops to 1/M; the collectives move from states to
+gradients, so int8/factored codecs compose (nothing quantized is ever
+summed). Comm volume = N*P*(M-1)/M (gradient reduce-scatters) + P (param
+all-gather) per mini-batch.
+
 Manual axes = the DP axes ("data", and "pod" when multi-pod); the "model"
 axis (if present in the mesh) is left to GSPMD (auto) so tensor-parallel
 sharding composes.
@@ -28,6 +40,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.core import adama
+from repro.core import arena as arena_mod
+from repro.core import state_store
 from repro.core.accumulation import _fold_decay, _split_micro, make_loss
 from repro.optim import adam
 
@@ -58,6 +72,26 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
     loss = make_loss(cfg, remat=remat)
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
+    use_arena = opt.use_pallas and opt.arena
+    zero1 = opt.zero_stage == 1
+    if zero1 and not use_arena:
+        raise ValueError(
+            "zero_stage=1 in the shard_map DP engine requires the arena "
+            "state store (use_pallas=True, arena=True): ZeRO-1 here shards "
+            "the flat arena by row range; the per-leaf ZeRO-1 path lives in "
+            "the pjit engine (sharding/rules.opt_pspecs)")
+    if zero1 and variant != "adama":
+        raise ValueError(
+            f"zero_stage=1 row-range sharding is defined for the 'adama' "
+            f"variant only, got variant={variant!r}")
+    if use_arena and opt.state_codec != "fp32" and not zero1 and \
+            variant == "adama":
+        raise ValueError(
+            f"state_codec={opt.state_codec!r} with the shard_map DP engine "
+            f"requires zero_stage=1: the mini-batch-end state psum "
+            f"(Eqs. 7-8) cannot sum codec-encoded moments, while the "
+            f"row-range ZeRO-1 schedule reduce-scatters fp32 gradients "
+            f"instead")
 
     def local_step(params, opt_state, batch):
         micro = _split_micro(batch, n)
@@ -79,6 +113,48 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                                             beta1=b1, beta2=b2, eps=opt.eps,
                                             weight_decay=opt.weight_decay)
             return params, opt_state, {"loss": lax.pmean(lsum / n, dp_axes)}
+
+        if variant == "adama" and use_arena and zero1:
+            # ZeRO-1 row ranges: this device owns rows [idx*R/M, (idx+1)*R/M)
+            # of every state column. Gradients are reduce-scattered per fold
+            # (fully-reduced before entering v, so no M*beta2 pre-scale or
+            # /M^2 correction — the schedule equals single-device AdamA(N)
+            # over the full global micro-batch), params all-gathered once.
+            codec = state_store.get_codec(opt.state_codec)
+            lay = opt_state["m"].layout
+            rows_own = lay.rows // m_dev
+            state = dict(opt_state, step=opt_state["step"] + 1)
+
+            def body(carry, xs):
+                st, lsum = carry
+                i, mb = xs
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                g_own = lax.psum_scatter(arena_mod.pack(g, lay), dp_axes,
+                                         scatter_dimension=0, tiled=True)
+                m, vp = codec.fold(st["m"].data, codec.parts_of(st["v"]),
+                                   g_own, beta1=b1, beta2=b2,
+                                   scale=1.0 / (n * m_dev),
+                                   decay=_fold_decay(i, b1, b2, 1))
+                st = {"m": st["m"].with_data(m), "v": codec.wrap(lay, vp),
+                      "step": st["step"]}
+                return (st, lsum + l), None
+
+            (state, lsum), _ = lax.scan(body, (state, 0.0),
+                                        (jnp.arange(n), micro))
+            lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
+            t = state["step"].astype(jnp.float32)
+            idx = jnp.int32(0)
+            for a in dp_axes:
+                idx = idx * lax.psum(1, a) + lax.axis_index(a)
+            p_own = lax.dynamic_slice_in_dim(
+                arena_mod.pack(params, lay), idx * rows_own, rows_own, axis=0)
+            p_own = codec.apply(p_own, state["m"].data,
+                                codec.parts_of(state["v"]), lr=lr,
+                                bc1=1 - b1 ** t, bc2=1 - b2 ** t, eps=opt.eps,
+                                weight_decay=opt.weight_decay)
+            p_full = lax.all_gather(p_own, dp_axes, axis=0, tiled=True)
+            params = arena_mod.unpack(p_full, lay)
+            return params, state, {"loss": lax.pmean(lsum / n, dp_axes)}
 
         if variant == "naive":
             state = adama.begin_minibatch(opt_state, b1, b2, m_devices=1)
@@ -126,18 +202,23 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
 
     rep = P()
     bspec = P(dp_axes)
+    # ZeRO-1: every row-indexed state column is sharded over the dp axes;
+    # the replicated scalar step rides alongside
+    ospec = ({"m": P(dp_axes, None), "v": P(dp_axes, None), "step": rep}
+             if zero1 and variant == "adama" else rep)
 
     def step(params, opt_state, batch):
         f = _shard_map(local_step, mesh,
-                       in_specs=(rep, rep, bspec),
-                       out_specs=(rep, rep, rep), manual_axes=dp_axes)
+                       in_specs=(rep, ospec, bspec),
+                       out_specs=(rep, ospec, rep), manual_axes=dp_axes)
         return f(params, opt_state, batch)
 
     def init(params):
         if variant == "ga":
             return adam.init(params)
-        if opt.use_pallas and opt.arena:
-            return adama.init_arena(params)
+        if use_arena:
+            return adama.init_arena(params, codec=opt.state_codec,
+                                    n_shards=m_dev if zero1 else 1)
         return adama.init(params)
 
     return step, init

@@ -22,6 +22,11 @@ layer gradient tree into a single slab and folds it into the layer's arena
 slice with ONE offset-indexed kernel (kernels/fused_step.arena_fold_slice) —
 O(1) dispatches per layer instead of O(leaves) — and the begin-minibatch
 decay rides into micro-batch 0's folds as SMEM scalars.
+
+The second moment may be codec-encoded (core/state_store.py): the backward
+scan then carries the codec's column tuple (e.g. int8 codes + scale column)
+and the slice fold dequants/requants in the same single kernel, so the
+dispatch count per layer is unchanged for every codec.
 """
 from __future__ import annotations
 
@@ -137,9 +142,13 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     # outside the slice pass through aliased, so there is no re-write).
     arena_st = is_arena_state(state)
     if arena_st:
+        from repro.core import state_store
+        codec = state_store.codec_of(state["v"])
         lay = state["m"].layout
-        m_acc, v_acc = state["m"].data, state["v"].data
+        m_acc = state["m"].data
+        v_acc = codec.parts_of(state["v"])       # codec column tuple
     else:
+        codec = None
         new_m = dict(state["m"])
         new_v = dict(state["v"])
     for name, knd in reversed(stages):
@@ -155,7 +164,8 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
                 lp, xin)
             dlp, dxin = vjp((dx_c, scale))               # aux cotangent=scale
             m_c, v_c = _fold_layer(m_c, v_c, dlp, j, spec, lay if arena_st
-                                   else None, beta1, beta2, use_pallas, decay)
+                                   else None, beta1, beta2, use_pallas, decay,
+                                   codec)
             return (dxin, m_c, v_c), None
 
         carry0 = ((dx, m_acc, v_acc) if arena_st else
@@ -173,9 +183,9 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     d_rest = jax.tree.map(lambda a, b_: a + b_, d_rest_post, d_rest_pre)
     if arena_st:
         m_acc, v_acc = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
-                                  decay)
+                                  decay, codec)
         return loss, {"m": state["m"].with_data(m_acc),
-                      "v": state["v"].with_data(v_acc),
+                      "v": codec.wrap(lay, v_acc),
                       "step": state["step"]}
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
@@ -183,16 +193,17 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     return loss, {"m": new_m, "v": new_v, "step": state["step"]}
 
 
-def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay):
+def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
+                codec=None):
     """Fold one layer's gradient tree. Tree mode: per-leaf fold into row j of
     the (m, v) stacks. Arena mode: pack dlp into one slab and fold it into
-    the layer's arena row slice with a single offset-indexed kernel. Grads
-    arrive pre-scaled (via the VJP cotangent), so the kernel scale is 1."""
+    the layer's arena row slice with a single offset-indexed, codec-aware
+    kernel (v_c is the codec's column tuple). Grads arrive pre-scaled (via
+    the VJP cotangent), so the kernel scale is 1."""
     if lay is not None:
-        from repro.kernels import fused_step
         g2 = arena_mod.pack_layer(dlp, spec)
         off = spec.row + j * spec.layer_rows
-        return fused_step.arena_fold_slice(
+        return codec.fold_slice(
             m_c, v_c, g2, off, beta1=beta1, beta2=beta2,
             block=lay.slice_block(spec), decay=decay)
     m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
@@ -207,14 +218,13 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay):
     return m_c, v_c
 
 
-def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay):
-    """Arena mode: fold ALL non-stacked leaves' gradients with one kernel
-    over the contiguous rest region."""
-    from repro.kernels import fused_step
+def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec):
+    """Arena mode: fold ALL non-stacked leaves' gradients with one
+    codec-aware kernel over the contiguous rest region."""
     if not lay.rest.rows:
         return m_acc, v_acc
     g2 = arena_mod.pack_rest(d_rest, lay)
-    return fused_step.arena_fold_slice(
+    return codec.fold_slice(
         m_acc, v_acc, g2, lay.rest.row, beta1=beta1, beta2=beta2,
         block=lay.slice_block(lay.rest), decay=decay)
 
@@ -277,10 +287,13 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
 
     arena_st = is_arena_state(state)
     if arena_st:
+        from repro.core import state_store
+        codec = state_store.codec_of(state["v"])
         lay = state["m"].layout
-        m0, v0 = state["m"].data, state["v"].data
+        m0, v0 = state["m"].data, codec.parts_of(state["v"])
         dec_spec, enc_spec = lay.stack("blocks"), lay.stack("enc_blocks")
     else:
+        codec = None
         lay = dec_spec = enc_spec = None
         new_m = dict(state["m"])
         new_v = dict(state["v"])
@@ -293,7 +306,7 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         _, vjp = jax.vjp(dec_block, lp, xin, enc_out)
         dlp, dxin, denc_j = vjp((dx_c, scale))
         m_c, v_c = _fold_layer(m_c, v_c, dlp, j, dec_spec, lay, beta1, beta2,
-                               use_pallas, decay)
+                               use_pallas, decay, codec)
         return (dxin, denc + denc_j, m_c, v_c), None
 
     denc0 = jnp.zeros_like(enc_out)
@@ -319,7 +332,7 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                                          causal=False), lp, xin)
         dlp, dxin = vjp((dx_c, scale))
         m_c, v_c = _fold_layer(m_c, v_c, dlp, j, enc_spec, lay, beta1, beta2,
-                               use_pallas, decay)
+                               use_pallas, decay, codec)
         return (dxin, m_c, v_c), None
 
     ne = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
@@ -333,9 +346,9 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                           d_rest_post, d_rest_encn, d_rest_pre)
     if arena_st:
         m_new, v_new = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
-                                  decay)
+                                  decay, codec)
         return ce, {"m": state["m"].with_data(m_new),
-                    "v": state["v"].with_data(v_new),
+                    "v": codec.wrap(lay, v_new),
                     "step": state["step"]}
     new_m["enc_blocks"], new_v["enc_blocks"] = m_new, v_new
     for k in d_rest:

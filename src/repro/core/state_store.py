@@ -1,0 +1,276 @@
+"""State-store layer over the flat optimizer arena: pluggable second-moment
+codecs (the paper's Table-3 composition — AdamA for activation/gradient
+memory x optimizer-state reduction for (m, v)).
+
+The arena (core/arena.py) stores Adam's moments as flat (rows, LANES) fp32
+buffers. This module generalizes the SECOND moment into codec-encoded arena
+columns:
+
+  fp32      (rows, LANES) fp32                   exact; default behavior.
+            4 bytes/param for v.
+  int8      (rows, LANES) int8 + (rows, 1) fp32  per-row symmetric quant
+            scales                               (v >= 0 -> codes [0, 127]);
+            dequant/requant fused inside the fold/apply kernels. ~1 byte/
+            param for v; CEIL quantization, so the error is one-sided:
+            0 <= v_hat - v <= rowmax/127 per element per fold (updates are
+            damped, never amplified — see kernels/adama_accum.py).
+  factored  (rows, 1) fp32                       SM3-style per-row upper
+            bound (lane-dim max of the running statistic); 1/LANES the
+            memory (~0.004 bytes/param). The reconstruction
+            v_hat[i, j] = stat[i] >= v[i, j] is the SM3 cover-set
+            guarantee with one cover per arena row (rows never span
+            parameter leaves — every leaf starts on a fresh row — so the
+            statistic is leaf-consistent; cf. Anil et al., Memory-Efficient
+            Adaptive Optimization).
+
+The first moment m stays fp32: it is signed, carries the update direction,
+and the paper's composition compresses optimizer state via v. Every codec's
+sidecar state is ROW-INDEXED, which is what makes ZeRO-1 row-range sharding
+(core/zero.py::shard_rows) compose with every codec: a shard is rows
+[k*R/M, (k+1)*R/M) of every column, and the collectives are a gradient
+reduce-scatter plus a param all-gather over the same ranges.
+
+Dispatch stays O(1): each codec's fold and apply are single fused
+pallas_calls (kernels/fused_step.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arena as arena_mod
+from repro.core.arena import Arena, ArenaLayout
+from repro.kernels.adama_accum import LANES
+
+
+@jax.tree_util.register_pytree_node_class
+class MomentState:
+    """A codec-encoded second moment: a tuple of row-indexed arena columns
+    plus static (layout, codec name) aux data. Mirrors Arena's pytree
+    contract so it flows through jit / scan / donation / checkpointing."""
+
+    def __init__(self, parts: Tuple[jnp.ndarray, ...], layout: ArenaLayout,
+                 codec: str):
+        self.parts = tuple(parts)
+        self.layout = layout
+        self.codec = codec
+
+    def tree_flatten(self):
+        return self.parts, (self.layout, self.codec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children), *aux)
+
+    def with_parts(self, parts) -> "MomentState":
+        return MomentState(tuple(parts), self.layout, self.codec)
+
+    def decode(self) -> jnp.ndarray:
+        """Reconstruct the (rows, LANES) fp32 second-moment arena."""
+        return get_codec(self.codec).decode(self.parts)
+
+    def to_tree(self, dtype=None):
+        """Decode and unpack to the parameter-tree structure (parity/debug)."""
+        return arena_mod.unpack(self.decode(), self.layout, dtype)
+
+    def __repr__(self):
+        return (f"MomentState(codec={self.codec!r}, rows={self.layout.rows}, "
+                f"parts={[tuple(p.shape) for p in self.parts]})")
+
+
+class MomentCodec:
+    """Protocol for second-moment codecs. A codec owns (a) the storage
+    layout of v's arena columns and (b) the fused fold/apply kernels that
+    read and write them. `parts` is always a tuple of arrays so engines can
+    carry it through lax.scan without knowing the codec."""
+
+    name: str = "?"
+
+    def init(self, layout: ArenaLayout):
+        raise NotImplementedError
+
+    def parts_of(self, v) -> Tuple[jnp.ndarray, ...]:
+        raise NotImplementedError
+
+    def wrap(self, layout: ArenaLayout, parts):
+        raise NotImplementedError
+
+    def decode(self, parts) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def scale_state(self, v, c):
+        """v_hat <- c * v_hat, in codec space (begin-minibatch decay)."""
+        raise NotImplementedError
+
+    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
+        raise NotImplementedError
+
+    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
+                   scale=1.0, decay=None):
+        raise NotImplementedError
+
+    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
+        raise NotImplementedError
+
+
+class Fp32Codec(MomentCodec):
+    """Identity codec: v is a full-precision Arena (PR-1 behavior)."""
+
+    name = "fp32"
+
+    def init(self, layout):
+        return Arena.zeros(layout)
+
+    def parts_of(self, v):
+        return (v.data,)
+
+    def wrap(self, layout, parts):
+        return Arena(parts[0], layout)
+
+    def decode(self, parts):
+        return parts[0]
+
+    def scale_state(self, v, c):
+        return v.with_data(c * v.data)
+
+    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
+        from repro.kernels import fused_step
+        m, v = fused_step.arena_fold(m, parts[0], g, beta1=beta1, beta2=beta2,
+                                     scale=scale, decay=decay)
+        return m, (v,)
+
+    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
+                   scale=1.0, decay=None):
+        from repro.kernels import fused_step
+        m, v = fused_step.arena_fold_slice(m, parts[0], g, row_offset,
+                                           beta1=beta1, beta2=beta2,
+                                           block=block, scale=scale,
+                                           decay=decay)
+        return m, (v,)
+
+    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
+        from repro.kernels import fused_step
+        return fused_step.arena_apply(p, m, parts[0], lr=lr, bc1=bc1, bc2=bc2,
+                                      eps=eps, weight_decay=weight_decay)
+
+
+class Int8Codec(MomentCodec):
+    """v as (rows, LANES) int8 codes + (rows, 1) fp32 per-row scales."""
+
+    name = "int8"
+
+    def init(self, layout):
+        return MomentState((jnp.zeros((layout.rows, LANES), jnp.int8),
+                            jnp.zeros((layout.rows, 1), jnp.float32)),
+                           layout, self.name)
+
+    def parts_of(self, v):
+        return v.parts
+
+    def wrap(self, layout, parts):
+        return MomentState(tuple(parts), layout, self.name)
+
+    def decode(self, parts):
+        from repro.kernels.adama_accum import q8_decode_rows
+        return q8_decode_rows(parts[0], parts[1])
+
+    def scale_state(self, v, c):
+        # c * (q * s) == q * (c * s): decay touches only the scale column
+        return v.with_parts((v.parts[0], c * v.parts[1]))
+
+    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
+        from repro.kernels import fused_step
+        m, vq, vs = fused_step.arena_fold_q8(m, parts[0], parts[1], g,
+                                             beta1=beta1, beta2=beta2,
+                                             scale=scale, decay=decay)
+        return m, (vq, vs)
+
+    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
+                   scale=1.0, decay=None):
+        from repro.kernels import fused_step
+        m, vq, vs = fused_step.arena_fold_slice_q8(
+            m, parts[0], parts[1], g, row_offset, beta1=beta1, beta2=beta2,
+            block=block, scale=scale, decay=decay)
+        return m, (vq, vs)
+
+    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
+        from repro.kernels import fused_step
+        return fused_step.arena_apply_q8(p, m, parts[0], parts[1], lr=lr,
+                                         bc1=bc1, bc2=bc2, eps=eps,
+                                         weight_decay=weight_decay)
+
+
+class FactoredCodec(MomentCodec):
+    """v as a single (rows, 1) fp32 per-row statistic (SM3-style)."""
+
+    name = "factored"
+
+    def init(self, layout):
+        return MomentState((jnp.zeros((layout.rows, 1), jnp.float32),),
+                           layout, self.name)
+
+    def parts_of(self, v):
+        return v.parts
+
+    def wrap(self, layout, parts):
+        return MomentState(tuple(parts), layout, self.name)
+
+    def decode(self, parts):
+        return jnp.broadcast_to(parts[0], (parts[0].shape[0], LANES))
+
+    def scale_state(self, v, c):
+        return v.with_parts((c * v.parts[0],))
+
+    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
+        from repro.kernels import fused_step
+        m, vr = fused_step.arena_fold_fac(m, parts[0], g, beta1=beta1,
+                                          beta2=beta2, scale=scale,
+                                          decay=decay)
+        return m, (vr,)
+
+    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
+                   scale=1.0, decay=None):
+        from repro.kernels import fused_step
+        m, vr = fused_step.arena_fold_slice_fac(
+            m, parts[0], g, row_offset, beta1=beta1, beta2=beta2,
+            block=block, scale=scale, decay=decay)
+        return m, (vr,)
+
+    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
+        from repro.kernels import fused_step
+        return fused_step.arena_apply_fac(p, m, parts[0], lr=lr, bc1=bc1,
+                                          bc2=bc2, eps=eps,
+                                          weight_decay=weight_decay)
+
+
+_CODECS = {c.name: c for c in (Fp32Codec(), Int8Codec(), FactoredCodec())}
+
+
+def get_codec(name: str) -> MomentCodec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise KeyError(f"unknown state codec {name!r}; "
+                       f"available: {sorted(_CODECS)}") from None
+
+
+def codec_of(v) -> MomentCodec:
+    """The codec backing a second-moment state object."""
+    if isinstance(v, Arena):
+        return _CODECS["fp32"]
+    if isinstance(v, MomentState):
+        return _CODECS[v.codec]
+    raise TypeError(f"not an arena-backed second moment: {type(v)!r}")
+
+
+def optimizer_state_bytes(state) -> int:
+    """Measured bytes of an optimizer-state pytree (concrete arrays or
+    ShapeDtypeStructs both work) — the number Table 3's capacity math needs."""
+    import numpy as np
+    total = 0
+    for leaf in jax.tree.leaves(state):
+        n = int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+        total += n * np.dtype(leaf.dtype).itemsize
+    return total

@@ -1,16 +1,31 @@
 """ZeRO-1 (DeepSpeed P_os): shard the optimizer states over the data axis.
 
-In the pjit engine this is expressed as sharding constraints on (m, v):
-GSPMD then materializes exactly the ZeRO-1 schedule — gradients are
+Two representations:
+
+PER-LEAF (tree-backed states): sharding constraints on each (m, v) leaf —
+`zero1_state_sharding` adds the data axis to the largest divisible dim.
+GSPMD then materializes exactly the ZeRO-1 schedule: gradients are
 reduce-scattered into the owned shard, the param update runs on the shard,
-and the updated params are all-gathered. Combined with AdamA this is the
-paper's Table-3 "ZeRO-S1 + AdamA" configuration: activations 1/N (micro-
-batching), gradients transient (optimizer accumulation), optimizer states
-1/M_dp (this module).
+and the updated params are all-gathered.
+
+ROW-RANGE (arena-backed states): the flat (rows, LANES) arena makes ZeRO-1
+a shard of ONE buffer instead of a per-leaf carve-up — `shard_rows` splits
+the arena into equal, kernel-block-aligned row ranges; device k owns rows
+[k*R/M, (k+1)*R/M) of EVERY state column (m, the v payload, and any codec
+scale column — all row-indexed, see core/state_store.py), so the
+collectives are one gradient reduce-scatter per fold and one param
+all-gather per apply over the same ranges (core/dp_shardmap.py implements
+the manual schedule; sharding/rules.py emits the equivalent GSPMD
+row-sharding for the pjit engine).
+
+Combined with AdamA this is the paper's Table-3 "ZeRO-S1 + AdamA"
+configuration: activations 1/N (micro-batching), gradients transient
+(optimizer accumulation), optimizer states 1/M_dp (this module).
 """
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
@@ -42,3 +57,69 @@ def zero1_state_sharding(params_sharding_tree, abstract_params, mesh,
         return NamedSharding(mesh, _add_axis(spec, p.shape, mesh, axis))
     mv = jax.tree.map(leaf, params_sharding_tree, abstract_params)
     return mv
+
+
+# ---------------------------------------------------------------------------
+# Row-range sharding of the flat arena
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RowShard:
+    """One device's contiguous row range of the arena (and of every other
+    row-indexed state column: the int8 payload, scale columns, ...)."""
+    index: int
+    start: int
+    rows: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.rows
+
+
+def shard_rows(layout, n_shards: int) -> Tuple[RowShard, ...]:
+    """Split the arena into `n_shards` equal, kernel-block-aligned row
+    ranges. Each range satisfies the fold/apply kernels' divisibility
+    contract on its own, so a shard is a first-class arena: device k runs
+    the ordinary single-dispatch fold/apply over rows [k*R/M, (k+1)*R/M).
+
+    Raises ValueError when the layout was not built for this shard count —
+    the fix is `build_layout(tree, n_shards=M)`, which pads the tail."""
+    from repro.core.arena import ROW_ALIGN
+    from repro.kernels.adama_accum import BLOCK_ROWS
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    rows = layout.rows
+    if rows % n_shards:
+        raise ValueError(
+            f"arena rows ({rows}) not divisible into {n_shards} equal "
+            f"shards; rebuild the layout with build_layout(tree, "
+            f"n_shards={n_shards}) to pad the tail")
+    per = rows // n_shards
+    if per % ROW_ALIGN or (per > BLOCK_ROWS and per % BLOCK_ROWS):
+        raise ValueError(
+            f"shard size {per} violates kernel block alignment "
+            f"(ROW_ALIGN={ROW_ALIGN}, BLOCK_ROWS={BLOCK_ROWS}); rebuild the "
+            f"layout with build_layout(tree, n_shards={n_shards})")
+    return tuple(RowShard(k, k * per, per) for k in range(n_shards))
+
+
+def zero1_arena_pspec(layout, mesh, axes: Tuple[str, ...]) -> P:
+    """PartitionSpec sharding the arena's row dim over `axes` — the GSPMD
+    form of `shard_rows` for the pjit engine. Falls back to replicated when
+    the row count does not divide (the caller should then rebuild the layout
+    with build_layout(tree, n_shards=...))."""
+    axes = tuple(a for a in axes if a in mesh.shape)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if n <= 1:
+        return P()
+    try:
+        shard_rows(layout, n)
+    except ValueError as e:
+        import warnings
+        warnings.warn(f"arena row sharding requested over {n} devices but "
+                      f"the layout does not split ({e}); optimizer states "
+                      f"will be REPLICATED — build the state with "
+                      f"state_shards={n} to pad the layout", stacklevel=2)
+        return P()
+    return P(axes, None)

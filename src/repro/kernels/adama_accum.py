@@ -26,6 +26,40 @@ from jax.experimental import pallas as pl
 LANES = 1024          # 8 sublanes x 128 lanes
 BLOCK_ROWS = 256      # (256, 1024) fp32 = 1 MB per operand block in VMEM
 
+# int8 second-moment codec: per-row symmetric quantization of v (v >= 0, so
+# the code range is [0, 127]). The scale column is (rows, 1) fp32 — one
+# scalar per 1024-lane row — and every helper is pure jnp so the SAME math
+# runs inside the fused Pallas kernel bodies (kernels/fused_step.py) and on
+# the host (core/state_store.py decode paths, tests).
+Q8_MAX = 127.0
+
+
+def q8_encode_rows(v):
+    """(R, LANES) fp32, v >= 0 -> ((R, LANES) int8, (R, 1) fp32 scales).
+
+    Rounds UP (ceil), so v_hat >= v always: v sits under a square root in
+    the Adam denominator, and rounding v to a SMALLER value can amplify the
+    update without bound (a tiny v in a row with a large rowmax would
+    quantize to code 0 and divide by eps). Ceil gives the same never-amplify
+    guarantee as the factored codec's SM3 upper bound, at the cost of
+    damping small-v elements. Error: 0 <= v_hat - v <= scale = rowmax/127."""
+    s = jnp.max(v, axis=-1, keepdims=True) * (1.0 / Q8_MAX)
+    q = jnp.clip(jnp.ceil(v / jnp.where(s > 0.0, s, 1.0)), 0.0, Q8_MAX)
+    return q.astype(jnp.int8), s
+
+
+def q8_decode_rows(q, s):
+    """Inverse of q8_encode_rows (exact for the stored codes)."""
+    return q.astype(jnp.float32) * s
+
+
+def fac_row_stat(g2):
+    """Factored (SM3-style) per-row statistic: the lane-dim max of g^2.
+    Max (not mean) so a row's zero tail-padding never biases the statistic,
+    and the reconstruction v_hat[i, j] = stat[i] upper-bounds the true v —
+    the SM3 cover-set guarantee with one cover per arena row."""
+    return jnp.max(g2, axis=-1, keepdims=True)
+
 
 def _kernel(m_ref, v_ref, g_ref, mo_ref, vo_ref, *, beta1, beta2, scale):
     g = g_ref[...].astype(jnp.float32) * scale

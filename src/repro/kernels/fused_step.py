@@ -2,28 +2,38 @@
 (rows, LANES) fp32 buffer -> ONE `pallas_call` per micro-batch fold and ONE
 per mini-batch-end apply, independent of the number of parameter leaves.
 
-Three kernels:
+Per second-moment codec (core/state_store.py) there is a (fold, fold_slice,
+apply) kernel triple; every codec keeps the O(1)-dispatch contract — the
+codec transform (int8 dequant/requant, factored row-stat) is FUSED into the
+same pass, never a separate kernel:
 
-  arena_fold        m <- dm*m + (1-b1)*s*g ; v <- dv*v + (1-b2)*(s*g)^2
-                    over the full arena. The decay pair (dm, dv) is an SMEM
-                    scalar input: passing (beta1, M*beta2) on the FIRST fold
-                    of a mini-batch fuses `begin_minibatch` into it,
-                    eliminating an entire arena read+write pass (the decay
-                    pass the per-leaf path runs separately).
-  arena_fold_slice  Same fold restricted to rows [offset, offset+rows_g).
-                    `offset` is a TRACED scalar-prefetch argument feeding the
-                    BlockSpec index maps, so the layer-wise engine
-                    (Algorithm 2) folds layer j into its arena slice at
-                    `stack.row + j*layer_rows` from inside a lax.scan with a
-                    single kernel — no per-leaf dynamic_slice round-trips.
-                    Rows outside the slice keep their values (m, v are
-                    aliased input->output; untouched blocks are never
-                    copied through VMEM).
-  arena_apply       The bias-corrected parameter update over the packed
-                    param arena (reads p, m, v once, writes p once, aliased)
-                    — re-dispatches kernels/adam_apply.py on the arena.
+  arena_fold[_q8|_fac]        m <- dm*m + (1-b1)*s*g and the codec's v
+                              update over the full arena. The decay pair
+                              (dm, dv) is an SMEM scalar input: passing
+                              (beta1, M*beta2) on the FIRST fold of a
+                              mini-batch fuses `begin_minibatch` into it,
+                              eliminating an entire arena read+write pass.
+  arena_fold_slice[_q8|_fac]  Same fold restricted to rows
+                              [offset, offset+rows_g). `offset` is a TRACED
+                              scalar-prefetch argument feeding the BlockSpec
+                              index maps, so the layer-wise engine
+                              (Algorithm 2) folds layer j into its arena
+                              slice at `stack.row + j*layer_rows` from
+                              inside a lax.scan with a single kernel. Rows
+                              outside the slice keep their values (all
+                              state columns are aliased input->output).
+  arena_apply[_q8|_fac]       The bias-corrected parameter update over the
+                              packed param arena (reads p and the state
+                              columns once, writes p once, aliased).
 
-All operands are fp32 (the arena packs with a cast); scale/betas are static,
+Codec specifics, both fused in-pass:
+  int8      v rides as ((rows, LANES) int8, (rows, 1) fp32 scale) columns.
+            Fold: dequant -> decay+accumulate -> per-row requant (the row is
+            one block, so the row-max for the new scale is kernel-local).
+  factored  v rides as a single (rows, 1) fp32 per-row statistic (SM3-style
+            lane-max upper bound); fold updates it from max_j (s*g)^2.
+
+All fp32 operands are packed with a cast; scale/betas are static,
 step-dependent scalars ride in SMEM so one compiled kernel serves every step.
 """
 from __future__ import annotations
@@ -36,7 +46,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.adam_apply import adam_apply_2d
-from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+from repro.kernels.adama_accum import (BLOCK_ROWS, LANES, fac_row_stat,
+                                       q8_decode_rows, q8_encode_rows)
 from repro.kernels.ops import _interpret
 
 
@@ -117,3 +128,226 @@ def arena_apply(p, m, v, *, lr, bc1, bc2, eps: float = 1e-8,
                          weight_decay=weight_decay,
                          interpret=_interpret() if interpret is None
                          else interpret)
+
+
+# ---------------------------------------------------------------------------
+# int8 codec: v as (rows, LANES) int8 + (rows, 1) fp32 per-row scales
+# ---------------------------------------------------------------------------
+
+
+def _fold_q8_body(sc_ref, m_ref, vq_ref, vs_ref, g_ref,
+                  mo_ref, vqo_ref, vso_ref, *, beta1, beta2, scale):
+    g = g_ref[...] * scale
+    mo_ref[...] = sc_ref[0] * m_ref[...] + (1.0 - beta1) * g
+    v = sc_ref[1] * q8_decode_rows(vq_ref[...], vs_ref[...]) \
+        + (1.0 - beta2) * (g * g)
+    q, s = q8_encode_rows(v)
+    vqo_ref[...] = q
+    vso_ref[...] = s
+
+
+def arena_fold_q8(m, vq, vs, g, *, beta1: float, beta2: float,
+                  scale: float = 1.0, decay=None, interpret=None):
+    """Whole-arena int8-codec fold; m, g: (rows, LANES) fp32; vq int8;
+    vs (rows, 1) fp32. All state columns aliased in-place. The dequant,
+    decay, accumulate, and per-row requant are one fused pass — each block
+    spans all LANES, so the new row scale is a kernel-local reduction."""
+    rows = m.shape[0]
+    assert m.shape == vq.shape == g.shape and m.shape[1] == LANES, m.shape
+    assert vs.shape == (rows, 1), vs.shape
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0, (rows, block)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((block, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_fold_q8_body, beta1=beta1, beta2=beta2,
+                          scale=float(scale)),
+        grid=(rows // block,),
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,)), spec, spec, sspec, spec],
+        out_specs=[spec, spec, sspec],
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(vq.shape, jnp.int8),
+                   jax.ShapeDtypeStruct(vs.shape, jnp.float32)],
+        input_output_aliases={1: 0, 2: 1, 3: 2},
+        interpret=_interpret() if interpret is None else interpret,
+    )(_decay_scalars(decay), m, vq, vs, g)
+
+
+def _slice_fold_q8_body(off_ref, sc_ref, m_ref, vq_ref, vs_ref, g_ref,
+                        mo_ref, vqo_ref, vso_ref, *, beta1, beta2, scale):
+    del off_ref
+    _fold_q8_body(sc_ref, m_ref, vq_ref, vs_ref, g_ref, mo_ref, vqo_ref,
+                  vso_ref, beta1=beta1, beta2=beta2, scale=scale)
+
+
+def arena_fold_slice_q8(m, vq, vs, g, row_offset, *, beta1: float,
+                        beta2: float, block: int, scale: float = 1.0,
+                        decay=None, interpret=None):
+    """int8-codec fold restricted to rows [row_offset, row_offset+rows_g);
+    contract as arena_fold_slice, with the scale column sliced in lockstep."""
+    rows_g = g.shape[0]
+    assert m.shape == vq.shape and g.shape[1] == LANES
+    assert vs.shape == (m.shape[0], 1), vs.shape
+    assert rows_g % block == 0, (rows_g, block)
+    mv = pl.BlockSpec((block, LANES), lambda i, off, sc: (off[0] + i, 0))
+    sv = pl.BlockSpec((block, 1), lambda i, off, sc: (off[0] + i, 0))
+    gs = pl.BlockSpec((block, LANES), lambda i, off, sc: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # (row offset, decay pair)
+        grid=(rows_g // block,),
+        in_specs=[mv, mv, sv, gs],
+        out_specs=[mv, mv, sv],
+    )
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1) // block
+    return pl.pallas_call(
+        functools.partial(_slice_fold_q8_body, beta1=beta1, beta2=beta2,
+                          scale=float(scale)),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(vq.shape, jnp.int8),
+                   jax.ShapeDtypeStruct(vs.shape, jnp.float32)],
+        input_output_aliases={2: 0, 3: 1, 4: 2},  # m, vq, vs in place
+        interpret=_interpret() if interpret is None else interpret,
+    )(off, _decay_scalars(decay), m, vq, vs, g)
+
+
+def _apply_q8_body(sc_ref, p_ref, m_ref, vq_ref, vs_ref, po_ref, *,
+                   eps, weight_decay):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    p = p_ref[...].astype(jnp.float32)
+    mh = m_ref[...] / bc1
+    vh = q8_decode_rows(vq_ref[...], vs_ref[...]) / bc2
+    u = mh / (jnp.sqrt(vh) + eps)
+    if weight_decay:
+        u = u + weight_decay * p
+    po_ref[...] = (p - lr * u).astype(po_ref.dtype)
+
+
+def arena_apply_q8(p, m, vq, vs, *, lr, bc1, bc2, eps: float = 1e-8,
+                   weight_decay: float = 0.0, interpret=None):
+    """Bias-corrected apply with in-pass int8 dequant; p aliased in-place."""
+    rows = p.shape[0]
+    assert p.shape == m.shape == vq.shape and vs.shape == (rows, 1)
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(bc1, jnp.float32),
+                         jnp.asarray(bc2, jnp.float32)])
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((block, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_apply_q8_body, eps=eps, weight_decay=weight_decay),
+        grid=(rows // block,),
+        in_specs=[pl.BlockSpec((3,), lambda i: (0,)), spec, spec, spec, sspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        input_output_aliases={1: 0},
+        interpret=_interpret() if interpret is None else interpret,
+    )(scalars, p, m, vq, vs)
+
+
+# ---------------------------------------------------------------------------
+# factored codec: v as a (rows, 1) fp32 per-row statistic
+# ---------------------------------------------------------------------------
+
+
+def _fold_fac_body(sc_ref, m_ref, vr_ref, g_ref, mo_ref, vro_ref, *,
+                   beta1, beta2, scale):
+    g = g_ref[...] * scale
+    mo_ref[...] = sc_ref[0] * m_ref[...] + (1.0 - beta1) * g
+    vro_ref[...] = sc_ref[1] * vr_ref[...] \
+        + (1.0 - beta2) * fac_row_stat(g * g)
+
+
+def arena_fold_fac(m, vr, g, *, beta1: float, beta2: float,
+                   scale: float = 1.0, decay=None, interpret=None):
+    """Whole-arena factored-codec fold; vr: (rows, 1) fp32 row statistic."""
+    rows = m.shape[0]
+    assert m.shape == g.shape and m.shape[1] == LANES, m.shape
+    assert vr.shape == (rows, 1), vr.shape
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0, (rows, block)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((block, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_fold_fac_body, beta1=beta1, beta2=beta2,
+                          scale=float(scale)),
+        grid=(rows // block,),
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,)), spec, sspec, spec],
+        out_specs=[spec, sspec],
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(vr.shape, jnp.float32)],
+        input_output_aliases={1: 0, 2: 1},
+        interpret=_interpret() if interpret is None else interpret,
+    )(_decay_scalars(decay), m, vr, g)
+
+
+def _slice_fold_fac_body(off_ref, sc_ref, m_ref, vr_ref, g_ref,
+                         mo_ref, vro_ref, *, beta1, beta2, scale):
+    del off_ref
+    _fold_fac_body(sc_ref, m_ref, vr_ref, g_ref, mo_ref, vro_ref,
+                   beta1=beta1, beta2=beta2, scale=scale)
+
+
+def arena_fold_slice_fac(m, vr, g, row_offset, *, beta1: float, beta2: float,
+                         block: int, scale: float = 1.0, decay=None,
+                         interpret=None):
+    """Factored-codec fold over rows [row_offset, row_offset+rows_g)."""
+    rows_g = g.shape[0]
+    assert g.shape[1] == LANES and vr.shape == (m.shape[0], 1)
+    assert rows_g % block == 0, (rows_g, block)
+    mv = pl.BlockSpec((block, LANES), lambda i, off, sc: (off[0] + i, 0))
+    sv = pl.BlockSpec((block, 1), lambda i, off, sc: (off[0] + i, 0))
+    gs = pl.BlockSpec((block, LANES), lambda i, off, sc: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(rows_g // block,),
+        in_specs=[mv, sv, gs],
+        out_specs=[mv, sv],
+    )
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1) // block
+    return pl.pallas_call(
+        functools.partial(_slice_fold_fac_body, beta1=beta1, beta2=beta2,
+                          scale=float(scale)),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(m.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(vr.shape, jnp.float32)],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=_interpret() if interpret is None else interpret,
+    )(off, _decay_scalars(decay), m, vr, g)
+
+
+def _apply_fac_body(sc_ref, p_ref, m_ref, vr_ref, po_ref, *,
+                    eps, weight_decay):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    p = p_ref[...].astype(jnp.float32)
+    mh = m_ref[...] / bc1
+    vh = vr_ref[...] / bc2                        # broadcasts over lanes
+    u = mh / (jnp.sqrt(vh) + eps)
+    if weight_decay:
+        u = u + weight_decay * p
+    po_ref[...] = (p - lr * u).astype(po_ref.dtype)
+
+
+def arena_apply_fac(p, m, vr, *, lr, bc1, bc2, eps: float = 1e-8,
+                    weight_decay: float = 0.0, interpret=None):
+    """Bias-corrected apply with the per-row v_hat broadcast; p aliased."""
+    rows = p.shape[0]
+    assert p.shape == m.shape and vr.shape == (rows, 1)
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(bc1, jnp.float32),
+                         jnp.asarray(bc2, jnp.float32)])
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((block, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_apply_fac_body, eps=eps,
+                          weight_decay=weight_decay),
+        grid=(rows // block,),
+        in_specs=[pl.BlockSpec((3,), lambda i: (0,)), spec, spec, sspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        input_output_aliases={1: 0},
+        interpret=_interpret() if interpret is None else interpret,
+    )(scalars, p, m, vr)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.configs.base import STATE_CODECS
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, OptimizerConfig,
                            get_config, shape_supported)
 from repro.core.accumulation import make_train_step
@@ -45,10 +46,29 @@ def _cast_tree(tree, dtype):
                         if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
 
 
+def _sharded_bytes(tree, spec_tree, mesh) -> int:
+    """Per-device bytes of `tree` under `spec_tree` PartitionSpecs: each
+    leaf's size divided by the product of its spec's mesh-axis sizes
+    (replicated leaves count full-size on every device)."""
+    import numpy as np
+    leaves = jax.tree.leaves(tree)
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    total = 0
+    for leaf, spec in zip(leaves, specs):
+        n = 1
+        if isinstance(spec, P):
+            for e in spec:
+                for a in (e if isinstance(e, tuple) else (e,) if e else ()):
+                    n *= mesh.shape[a]
+        size = int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+        total += size * np.dtype(leaf.dtype).itemsize // n
+    return total
+
+
 def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
                   accum="adama", micro_batches=8, fsdp=True, remat=True,
                   use_pallas=False, optimizer="adama", zero1=False,
-                  profile="tp2d", extra_opt=None):
+                  profile="tp2d", extra_opt=None, info=None):
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     ok, why = shape_supported(cfg, shape)
@@ -61,10 +81,15 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
 
     if shape.kind == "train":
+        import numpy as np
         opt = OptimizerConfig(name=optimizer, accumulation=accum,
                               micro_batches=micro_batches,
                               use_pallas=use_pallas,
                               **(extra_opt or {}))
+        if zero1 and not opt.zero_stage:
+            opt = dataclasses.replace(opt, zero_stage=1)
+        dp_size = int(np.prod([mesh.shape[a] for a in rules.dp_axes()])) \
+            if rules.dp_axes() else 1
         if engine == "shardmap":
             from repro.core.dp_shardmap import make_dp_train_step
             dp = rules.dp_axes()
@@ -72,9 +97,22 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
                                                 "adama" if accum != "ga" else "ga",
                                                 remat=remat)
         else:
-            step, opt_init = make_train_step(cfg, opt, remat=remat)
+            step, opt_init = make_train_step(cfg, opt, remat=remat,
+                                             state_shards=dp_size)
         aopt = jax.eval_shape(opt_init, aparams)
         ospecs = rules.opt_pspecs(aopt, aparams, zero1=zero1)
+        if info is not None:
+            # measured optimizer-state footprint (the Table-3 row): global
+            # bytes of the abstract state the engine allocates, and the
+            # per-device share computed from the ACTUAL sharding specs —
+            # leaves ZeRO-1 leaves unsharded dims full-size (a leaf with no
+            # divisible dim stays replicated and costs every device its
+            # whole size)
+            from repro.core.state_store import optimizer_state_bytes
+            info["optimizer_state_bytes"] = optimizer_state_bytes(aopt)
+            info["optimizer_state_bytes_per_device"] = \
+                _sharded_bytes(aopt, ospecs, mesh)
+            info["state_codec"] = opt.state_codec
         osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
         batch = input_specs(cfg, shape)
         bspecs = rules.batch_pspecs(batch)
@@ -140,11 +178,14 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
             tag += f"__{k}-{v}"
         if k == "use_pallas" and v:
             tag += "__pallas"
+        if k == "extra_opt" and v and v.get("arena"):
+            tag += f"__arena-{v.get('state_codec', 'fp32')}"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
+    info = {}
     try:
         lowered, why = build_lowered(arch, shape_name, mesh,
-                                     **kw)
+                                     info=info, **kw)
     except Exception as e:
         traceback.print_exc()
         return {"tag": tag, "status": "LOWER_FAIL", "error": f"{type(e).__name__}: {e}"}
@@ -165,6 +206,8 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
     t_compile = time.time() - t0 - t_lower
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # jax<=0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     hlo = analyze_hlo(txt)
     coll = {k[5:]: v for k, v in hlo.items() if k.startswith("coll_")}
@@ -183,6 +226,9 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
                                       ma.output_size_in_bytes +
                                       ma.temp_size_in_bytes -
                                       ma.alias_size_in_bytes),
+            # train shapes only: measured optimizer-state footprint
+            # (global + ZeRO-1 per-device share) and its codec
+            **info,
         },
         "cost": {"flops": ca.get("flops", 0.0),
                  "bytes_accessed": ca.get("bytes accessed", 0.0),
@@ -224,15 +270,25 @@ def main():
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--profile", default="tp2d", choices=["tp2d", "dp"])
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--arena", action="store_true",
+                    help="flat optimizer-state arena (implies --use-pallas)")
+    ap.add_argument("--state-codec", default="fp32",
+                    choices=list(STATE_CODECS),
+                    help="second-moment codec over the arena")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
+    extra_opt = None
+    if args.arena or args.state_codec != "fp32":
+        extra_opt = {"arena": True, "state_codec": args.state_codec}
     kw = dict(engine=args.engine, accum=args.accum,
               micro_batches=args.micro_batches, fsdp=not args.no_fsdp,
               remat=not args.no_remat, zero1=args.zero1,
-              use_pallas=args.use_pallas, optimizer=args.optimizer,
-              profile=args.profile)
+              use_pallas=args.use_pallas or args.arena or
+              extra_opt is not None,
+              optimizer=args.optimizer,
+              profile=args.profile, extra_opt=extra_opt)
     combos = []
     if args.all:
         for a in ARCH_IDS:

@@ -14,6 +14,7 @@ import dataclasses
 import jax
 
 from repro.configs import INPUT_SHAPES, InputShape, OptimizerConfig, RunConfig, get_config
+from repro.configs.base import STATE_CODECS
 from repro.optim import schedule as sched
 from repro.train.loop import train
 
@@ -37,6 +38,13 @@ def main():
     ap.add_argument("--arena", action="store_true",
                     help="flat optimizer-state arena: O(1) kernel dispatches "
                          "per micro-batch (implies --use-pallas)")
+    ap.add_argument("--state-codec", default="fp32",
+                    choices=list(STATE_CODECS),
+                    help="second-moment codec over the arena "
+                         "(core/state_store.py); requires --arena")
+    ap.add_argument("--zero-stage", type=int, default=0, choices=[0, 1],
+                    help="ZeRO-1 optimizer-state sharding; with --arena the "
+                         "state shards by row range (no-op on one device)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -51,7 +59,8 @@ def main():
         optimizer=OptimizerConfig(
             name=args.optimizer, accumulation=args.accumulation,
             micro_batches=args.micro_batches, lr=args.lr,
-            use_pallas=args.use_pallas or args.arena, arena=args.arena),
+            use_pallas=args.use_pallas or args.arena, arena=args.arena,
+            state_codec=args.state_codec, zero_stage=args.zero_stage),
         shape=shape, seed=args.seed, steps=args.steps,
         log_every=args.log_every, checkpoint_dir=args.checkpoint_dir)
     lr_fn = sched.warmup_cosine(args.lr, args.warmup, args.steps)

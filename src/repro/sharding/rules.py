@@ -176,7 +176,25 @@ class Rules:
     def opt_pspecs(self, abstract_opt, abstract_params, zero1: bool = False):
         """Optimizer state mirrors params; ZeRO-1 additionally shards over the
         data axis (core/zero.py picks the dim). The "dp" profile always
-        ZeRO-1-shards the states (that's its point), over every mesh axis."""
+        ZeRO-1-shards the states (that's its point), over every mesh axis.
+
+        Arena-backed states (core/arena.py) are not per-leaf shardable —
+        they are ONE flat (rows, LANES) buffer per moment (plus row-indexed
+        codec columns). ZeRO-1 there is a ROW-RANGE shard: every m/v leaf
+        gets P(dp_axes, None), validated against the kernel block alignment
+        by core/zero.py::shard_rows (falls back to replicated when the row
+        count does not divide — rebuild with build_layout(n_shards=...))."""
+        from repro.core.arena import Arena
+        if isinstance(abstract_opt.get("m"), Arena):
+            from repro.core.zero import zero1_arena_pspec
+            if zero1 or self.profile == "dp":
+                spec = zero1_arena_pspec(abstract_opt["m"].layout, self.mesh,
+                                         self.dp_axes() or ("data",))
+            else:
+                spec = P()
+            return {k: P() if k == "step" else
+                    jax.tree.map(lambda _: spec, v)
+                    for k, v in abstract_opt.items()}
         pspecs = self.params_pspecs(abstract_params)
         if self.profile == "dp":
             zero1 = True

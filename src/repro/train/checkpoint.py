@@ -71,7 +71,13 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore(ckpt_dir: str, step: int, abstract_tree: Any) -> Any:
-    """Restore onto an abstract tree (shapes/dtypes validated)."""
+    """Restore onto an abstract tree (structure/shapes/dtypes validated).
+
+    The recorded `str(treedef)` is compared against the target tree's: for
+    arena-backed optimizer state (core/arena.py, core/state_store.py) the
+    treedef string embeds the static layout and codec aux data, so resuming
+    onto a different codec, layout, or tree structure fails loudly here
+    instead of silently mis-assembling leaves that happen to line up."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     with open(d / "structure.json") as f:
         info = json.load(f)
@@ -80,6 +86,13 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any) -> Any:
     if len(leaves) != info["n_leaves"]:
         raise ValueError(f"leaf count mismatch: tree {len(leaves)} vs "
                          f"checkpoint {info['n_leaves']}")
+    if info.get("treedef") not in (None, str(treedef)):
+        raise ValueError(
+            f"tree structure mismatch restoring step {step}:\n"
+            f"  checkpoint: {info['treedef']}\n"
+            f"  target:     {treedef}\n"
+            f"(same leaf count but different structure/aux — e.g. a "
+            f"different state codec or arena layout)")
     out = []
     for i, ref in enumerate(leaves):
         arr = data[f"a{i}"]

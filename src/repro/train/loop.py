@@ -2,6 +2,7 @@
 (any step_fn from core.accumulation / core.dp_shardmap)."""
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -23,8 +24,29 @@ def train(run: RunConfig, *, lr_schedule=None, log_fn=print,
     key = jax.random.key(run.seed)
     if params is None:
         params = init_params(cfg, key)
-    step_fn, opt_init = make_train_step(cfg, run.optimizer, remat=run.remat,
-                                        lr_schedule=lr_schedule)
+    # ZeRO-1 over the arena in this single-process loop: install a data-only
+    # mesh over the local devices and pad the arena layout for that many
+    # row-range shards — GSPMD then owns the reduce-scatter/all-gather
+    # schedule via _zero_constrain. One device: plain unsharded step.
+    opt = run.optimizer
+    state_shards = 1
+    mesh_ctx = contextlib.ExitStack()
+    if opt.zero_stage == 1 and opt.arena and jax.device_count() > 1:
+        from repro.launch.mesh import make_mesh
+        from repro.sharding import ctx as shard_ctx
+        state_shards = jax.device_count()
+        # size-1 "model" axis so the models' activation constraints (which
+        # name it) resolve on this data-only mesh
+        mesh_ctx.enter_context(shard_ctx.use_mesh(
+            make_mesh((state_shards, 1), ("data", "model")), ("data",)))
+    elif opt.zero_stage == 1 and jax.device_count() > 1:
+        log_fn("[train] note: zero_stage=1 without arena=True is a no-op in "
+               "this single-process loop (only the arena row-range path is "
+               "wired here); per-leaf ZeRO-1 runs via launch/dryrun.py or "
+               "a pjit launcher with sharding rules — pass --arena to shard")
+    step_fn, opt_init = make_train_step(cfg, opt, remat=run.remat,
+                                        lr_schedule=lr_schedule,
+                                        state_shards=state_shards)
     opt_state = opt_init(params)
     start = 0
     if run.checkpoint_dir:
@@ -42,17 +64,19 @@ def train(run: RunConfig, *, lr_schedule=None, log_fn=print,
     jstep = jax.jit(step_fn, donate_argnums=(0, 1))
     losses = []
     t0 = time.time()
-    for i in range(start, run.steps):
-        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-        params, opt_state, metrics = jstep(params, opt_state, batch)
-        losses.append(float(metrics["loss"]))
-        if (i + 1) % run.log_every == 0:
-            dt = (time.time() - t0) / (i + 1 - start)
-            log_fn(f"[train] step {i+1}/{run.steps} loss={losses[-1]:.4f} "
-                   f"({dt:.2f}s/step)")
-        if run.checkpoint_dir and (i + 1) % max(run.log_every * 5, 50) == 0:
-            ckpt.save(run.checkpoint_dir, i + 1,
-                      {"params": params, "opt": opt_state})
+    with mesh_ctx:                  # row-range sharding ctx (no-op if empty)
+        for i in range(start, run.steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if (i + 1) % run.log_every == 0:
+                dt = (time.time() - t0) / (i + 1 - start)
+                log_fn(f"[train] step {i+1}/{run.steps} "
+                       f"loss={losses[-1]:.4f} ({dt:.2f}s/step)")
+            if run.checkpoint_dir and \
+                    (i + 1) % max(run.log_every * 5, 50) == 0:
+                ckpt.save(run.checkpoint_dir, i + 1,
+                          {"params": params, "opt": opt_state})
     if run.checkpoint_dir:
         ckpt.save(run.checkpoint_dir, run.steps,
                   {"params": params, "opt": opt_state})

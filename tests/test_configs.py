@@ -1,0 +1,120 @@
+"""OptimizerConfig capability matrix (configs/base.py): the full
+codec x zero_stage x engine x arena grid either constructs or refuses with
+an ACTIONABLE message — never a silent misconfiguration. This replaces the
+old blanket `arena x zero_stage=1` ValueError (row-range sharding lifted
+that ban; see core/zero.py::shard_rows)."""
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.configs.base import (ACCUM_ENGINES, STATE_CODECS, ZERO_STAGES,
+                                OptimizerConfig, optimizer_capability,
+                                validate_optimizer_config)
+
+
+def _mk(**kw):
+    """Construct WITHOUT __post_init__ validation, so tests can probe
+    optimizer_capability on invalid points of the grid."""
+    opt = object.__new__(OptimizerConfig)
+    base = OptimizerConfig()
+    for f in dataclasses.fields(OptimizerConfig):
+        object.__setattr__(opt, f.name, kw.get(f.name, getattr(base, f.name)))
+    return opt
+
+
+def test_default_config_is_valid():
+    assert optimizer_capability(OptimizerConfig()) is None
+
+
+def test_matrix_dimensions_are_exported():
+    assert set(STATE_CODECS) == {"fp32", "int8", "factored"}
+    assert set(ZERO_STAGES) == {0, 1}
+    assert set(ACCUM_ENGINES) == {"ga", "adama", "adama_layerwise"}
+
+
+@pytest.mark.parametrize("codec", STATE_CODECS)
+@pytest.mark.parametrize("zero", ZERO_STAGES)
+@pytest.mark.parametrize("engine", ACCUM_ENGINES)
+def test_full_matrix_arena(codec, zero, engine):
+    """With the arena on (use_pallas implied), EVERY codec x zero x engine
+    cell is supported for the adama optimizer — the whole point of row-range
+    sharding and row-indexed codec state."""
+    opt = OptimizerConfig(name="adama", accumulation=engine, arena=True,
+                          use_pallas=True, state_codec=codec, zero_stage=zero)
+    assert optimizer_capability(opt) is None
+
+
+@pytest.mark.parametrize("codec", STATE_CODECS)
+@pytest.mark.parametrize("zero", ZERO_STAGES)
+@pytest.mark.parametrize("engine", ACCUM_ENGINES)
+def test_full_matrix_no_arena(codec, zero, engine):
+    """Without the arena: fp32 everywhere; compressed codecs refuse (they
+    are arena columns) and the message says how to fix it."""
+    opt = _mk(name="adama", accumulation=engine, arena=False,
+              use_pallas=False, state_codec=codec, zero_stage=zero)
+    reason = optimizer_capability(opt)
+    if codec == "fp32":
+        assert reason is None
+    else:
+        assert "arena=True" in reason and "state_codec" in reason
+
+
+def test_matrix_exhaustive_never_crashes():
+    """optimizer_capability is total over the declared grid (plus the
+    arena/use_pallas booleans): it returns None or a str, never raises."""
+    for codec, zero, engine, arena, pallas in itertools.product(
+            STATE_CODECS, ZERO_STAGES, ACCUM_ENGINES,
+            (False, True), (False, True)):
+        reason = optimizer_capability(_mk(
+            name="adama", accumulation=engine, state_codec=codec,
+            zero_stage=zero, arena=arena, use_pallas=pallas))
+        assert reason is None or isinstance(reason, str)
+
+
+def test_arena_requires_pallas_with_guidance():
+    reason = optimizer_capability(_mk(arena=True, use_pallas=False))
+    assert "use_pallas=True" in reason
+    with pytest.raises(ValueError, match="use_pallas=True"):
+        OptimizerConfig(arena=True, use_pallas=False)
+
+
+def test_codec_without_arena_names_the_fix():
+    with pytest.raises(ValueError, match="arena=True"):
+        OptimizerConfig(state_codec="int8")
+    with pytest.raises(ValueError, match="state_store"):
+        OptimizerConfig(state_codec="factored")
+
+
+def test_arena_zero1_is_now_supported():
+    """The PR-1 blanket ban is lifted: arena + zero_stage=1 row-shards."""
+    opt = OptimizerConfig(name="adama", accumulation="adama", arena=True,
+                          use_pallas=True, zero_stage=1)
+    assert optimizer_capability(opt) is None
+
+
+def test_unknown_values_rejected_with_alternatives():
+    assert "expected one of" in optimizer_capability(_mk(state_codec="fp16"))
+    assert "expected one of" in optimizer_capability(_mk(accumulation="nope"))
+    reason = optimizer_capability(_mk(zero_stage=3))
+    assert "zero_stage=3" in reason
+    with pytest.raises(ValueError, match="state_codec"):
+        OptimizerConfig(state_codec="fp16", arena=True, use_pallas=True)
+
+
+def test_arena_ga_engine_is_adam_only():
+    reason = optimizer_capability(_mk(name="sm3", accumulation="ga",
+                                      arena=True, use_pallas=True))
+    assert "adam" in reason and "sm3" in reason
+    # adam and adama themselves are fine
+    for name in ("adam", "adama"):
+        assert optimizer_capability(_mk(name=name, accumulation="ga",
+                                        arena=True, use_pallas=True)) is None
+
+
+def test_validate_raises_exactly_when_capability_says_so():
+    good = _mk(name="adama", arena=True, use_pallas=True, state_codec="int8")
+    validate_optimizer_config(good)        # no raise
+    bad = _mk(state_codec="int8", arena=False)
+    with pytest.raises(ValueError):
+        validate_optimizer_config(bad)

@@ -82,3 +82,78 @@ def test_zero1_adds_data_axis():
     # non-divisible dims stay unsharded
     spec = _add_axis(P(), (17, 33), mesh, "data")
     assert spec == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# zero1_state_sharding edge cases (per-leaf ZeRO-1 over an abstract mesh)
+# ---------------------------------------------------------------------------
+
+
+def _abstract_mesh(shape):
+    return jax.sharding.AbstractMesh(tuple(shape.items()))
+
+
+def _zero1(mesh, psh, aparams):
+    from repro.core.zero import zero1_state_sharding
+    return zero1_state_sharding(psh, aparams, mesh)
+
+
+def test_zero1_no_divisible_dim_stays_replicated():
+    """A leaf with no dim divisible by the data-axis size must come back
+    with its ORIGINAL spec — sharding it would fail at compile time."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _abstract_mesh({"data": 16, "model": 2})
+    ap = {"odd": jax.ShapeDtypeStruct((17, 33), np.float32)}
+    mv = _zero1(mesh, {"odd": NamedSharding(mesh, P())}, ap)
+    assert mv["odd"].spec == P(None, None)
+
+
+def test_zero1_already_fully_sharded_spec_unchanged():
+    """Every dim already carries a mesh axis: nothing left to shard; the
+    spec must pass through untouched (not doubled, not reordered)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _abstract_mesh({"data": 16, "model": 2})
+    ap = {"w": jax.ShapeDtypeStruct((64, 32), np.float32)}
+    mv = _zero1(mesh, {"w": NamedSharding(mesh, P("data", "model"))}, ap)
+    assert mv["w"].spec == P("data", "model")
+
+
+def test_zero1_scalar_leaf_stays_replicated():
+    """0-d leaves (step counters, scales) have no dim to shard."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _abstract_mesh({"data": 16, "model": 2})
+    ap = {"step": jax.ShapeDtypeStruct((), np.int32)}
+    mv = _zero1(mesh, {"step": NamedSharding(mesh, P())}, ap)
+    assert mv["step"].spec == P()
+
+
+def test_zero1_picks_largest_divisible_unsharded_dim():
+    """Mixed tree: the data axis lands on the LARGEST divisible dim that is
+    not already taken, per leaf, independently."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _abstract_mesh({"data": 16, "model": 2})
+    ap = {
+        "emb": jax.ShapeDtypeStruct((50304, 1024), np.float32),
+        "qkv": jax.ShapeDtypeStruct((1024, 3072), np.float32),
+        "bias": jax.ShapeDtypeStruct((640,), np.float32),
+    }
+    psh = {
+        "emb": NamedSharding(mesh, P(None, "model")),
+        "qkv": NamedSharding(mesh, P("model", None)),
+        "bias": NamedSharding(mesh, P()),
+    }
+    mv = _zero1(mesh, psh, ap)
+    assert mv["emb"].spec == P("data", "model")    # 50304 > 1024
+    assert mv["qkv"].spec == P("model", "data")    # dim 0 taken -> dim 1
+    assert mv["bias"].spec == P("data")            # 640 % 16 == 0
+
+
+def test_zero1_accepts_raw_pspec_leaves():
+    """The sharding tree may carry bare PartitionSpecs (pre-NamedSharding
+    rules output); the result is still NamedSharding on the given mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _abstract_mesh({"data": 4})
+    ap = {"w": jax.ShapeDtypeStruct((8, 3), np.float32)}
+    mv = _zero1(mesh, {"w": P()}, ap)
+    assert isinstance(mv["w"], NamedSharding)
+    assert mv["w"].spec == P("data", None)

@@ -1,0 +1,399 @@
+"""Second-moment codecs (core/state_store.py) + row-range sharding
+(core/zero.py::shard_rows): kernel-level quantization bounds, engine-level
+parity against the fp32 arena within DOCUMENTED tolerances, bitwise parity
+of the row-range-sharded fold/apply vs the unsharded arena, the O(1)
+dispatch guarantee for every codec, and checkpoint round-trips.
+
+Documented tolerances (see README "Optimizer-state codecs"):
+  int8      ceil-quantized per row: 0 <= v_hat - v <= rowmax/127 per fold
+            (K folds: <= K * rowmax/127). m is NOT quantized and matches
+            the fp32 arena to a few ulp. Because v_hat >= v, updates are
+            NEVER amplified — only damped — so the per-mini-batch parameter
+            drift vs the fp32 arena is bounded by the update magnitude
+            itself: |dp| <= 2*lr elementwise per step, loss curves track.
+  factored  v_hat[i, j] = stat[i] >= v[i, j] (SM3 upper bound): updates are
+            damped, never amplified — asserted structurally, not by parity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import batch_for, maxdiff, tiny
+from repro.configs import OptimizerConfig
+from repro.core import adama, arena, state_store
+from repro.core.accumulation import make_train_step
+from repro.core.arena import Arena
+from repro.core.state_store import MomentState
+from repro.core.zero import shard_rows
+from repro.kernels.adama_accum import LANES, Q8_MAX
+from repro.launch.hlo_analysis import count_jaxpr_primitives
+from repro.models.model import init_params
+from repro.train import checkpoint as ckpt
+
+TOL = dict(rtol=2e-6, atol=2e-6)
+
+
+def _tree():
+    return {
+        "a": jax.random.normal(jax.random.key(1), (7,), jnp.float32),
+        "b": jax.random.normal(jax.random.key(2), (300, 150)).astype(
+            jnp.bfloat16),
+        "blocks": {
+            "w": jax.random.normal(jax.random.key(3), (3, 257, 9),
+                                   jnp.float32),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# codec kernels: quantization bound / upper bound / fp32 equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_int8_fold_within_quantization_bound():
+    tree = _tree()
+    lay = arena.build_layout(tree)
+    g = arena.pack(tree, lay)
+    m = jnp.zeros_like(g)
+    c = state_store.get_codec("int8")
+    v = c.init(lay)
+    b2, sc = 0.999, 0.5
+    m2, parts = c.fold(m, c.parts_of(v), g, beta1=0.9, beta2=b2, scale=sc)
+    vref = np.asarray((1 - b2) * jnp.square(sc * g))
+    err = np.asarray(c.decode(parts)) - vref
+    # ceil quantization: one-sided up to fp32 rounding noise at the
+    # code boundary, 0 <= v_hat - v <= rowmax/127
+    bound = np.max(vref, axis=1, keepdims=True) / Q8_MAX
+    assert (err >= -1e-3 * bound - 1e-30).all(), err.min()
+    assert (err <= bound + 1e-12).all(), err.max()
+    # m is NOT quantized: bit-for-bit the fp32 fold's m
+    f = state_store.get_codec("fp32")
+    m_ref, _ = f.fold(m, f.parts_of(f.init(lay)), g, beta1=0.9, beta2=b2,
+                      scale=sc)
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m_ref))
+
+
+def test_factored_fold_is_sm3_upper_bound():
+    tree = _tree()
+    lay = arena.build_layout(tree)
+    g = arena.pack(tree, lay)
+    m = jnp.zeros_like(g)
+    c = state_store.get_codec("factored")
+    _, parts = c.fold(m, c.parts_of(c.init(lay)), g, beta1=0.9, beta2=0.999)
+    vref = (1 - 0.999) * jnp.square(g)
+    assert (np.asarray(c.decode(parts)) + 1e-12 >= np.asarray(vref)).all()
+    # the bound is tight on each row's max element
+    np.testing.assert_allclose(np.asarray(parts[0])[:, 0],
+                               np.max(np.asarray(vref), axis=1), **TOL)
+
+
+@pytest.mark.parametrize("codec", ["int8", "factored"])
+def test_slice_fold_matches_whole_fold_and_preserves_rest(codec):
+    tree = _tree()
+    lay = arena.build_layout(tree)
+    g = arena.pack(tree, lay)
+    m = jnp.zeros_like(g)
+    c = state_store.get_codec(codec)
+    v0 = c.parts_of(c.init(lay))
+    whole_m, whole_p = c.fold(m, v0, g, beta1=0.9, beta2=0.999)
+    st = lay.stack("blocks")
+    blk = lay.slice_block(st)
+
+    def fold_layer(carry, j):
+        md, vp = carry
+        layer = jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(
+            x, j, 0, keepdims=False), tree["blocks"])
+        slab = arena.pack_layer(layer, st)
+        return c.fold_slice(md, vp, slab, st.row + j * st.layer_rows,
+                            beta1=0.9, beta2=0.999, block=blk), None
+
+    (md, vp), _ = jax.jit(lambda md, vp: jax.lax.scan(
+        fold_layer, (md, vp), jnp.arange(st.n_layers)))(m, v0)
+    sl = slice(st.row, st.row + st.rows)
+    for i, (got, want) in enumerate(zip(vp, whole_p)):
+        np.testing.assert_allclose(np.asarray(got, np.float32)[sl],
+                                   np.asarray(want, np.float32)[sl], **TOL)
+        # untouched rows pass through the aliased output bit-exactly
+        np.testing.assert_array_equal(np.asarray(got)[st.row + st.rows:],
+                                      np.asarray(v0[i])[st.row + st.rows:])
+    np.testing.assert_allclose(np.asarray(md)[sl], np.asarray(whole_m)[sl],
+                               **TOL)
+
+
+# ---------------------------------------------------------------------------
+# row-range sharding: bitwise parity with the unsharded arena
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["fp32", "int8", "factored"])
+def test_row_sharded_fold_and_apply_bitwise(codec):
+    """The acceptance bar: folding/applying each row-range shard separately
+    and concatenating is BITWISE identical to the whole-arena kernels — the
+    fold/apply are row-local, so ZeRO-1 row sharding changes nothing."""
+    n_shards = 4
+    tree = _tree()
+    lay = arena.build_layout(tree, n_shards=n_shards)
+    shards = shard_rows(lay, n_shards)
+    g = arena.pack(tree, lay)
+    p = arena.pack(jax.tree.map(lambda x: x * 0.5, tree), lay)
+    m = 0.1 * g
+    c = state_store.get_codec(codec)
+    v0 = c.parts_of(c.init(lay))
+    # seed v with one fold so scales/statistics are non-trivial
+    m, v0 = c.fold(m, v0, g, beta1=0.9, beta2=0.999)
+
+    whole_m, whole_v = c.fold(m, v0, g, beta1=0.9, beta2=0.999,
+                              decay=(0.9, 0.999))
+    whole_p = c.apply(p, whole_m, whole_v, lr=1e-3, bc1=0.19, bc2=0.002)
+
+    parts_m, parts_v, parts_p = [], [], []
+    for sh in shards:
+        sl = slice(sh.start, sh.stop)
+        ms, vs = c.fold(m[sl], tuple(x[sl] for x in v0), g[sl],
+                        beta1=0.9, beta2=0.999, decay=(0.9, 0.999))
+        parts_m.append(ms)
+        parts_v.append(vs)
+        parts_p.append(c.apply(p[sl], ms, vs, lr=1e-3, bc1=0.19, bc2=0.002))
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(parts_m)),
+                                  np.asarray(whole_m))
+    for i in range(len(whole_v)):
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate([v[i] for v in parts_v])),
+            np.asarray(whole_v[i]))
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(parts_p)),
+                                  np.asarray(whole_p))
+
+
+def test_build_layout_n_shards_alignment():
+    tree = _tree()
+    for n in (1, 2, 3, 4, 8):
+        lay = arena.build_layout(tree, n_shards=n)
+        shards = shard_rows(lay, n)
+        assert len(shards) == n
+        assert shards[-1].stop == lay.rows
+        assert len({s.rows for s in shards}) == 1
+    # unpadded layouts refuse indivisible shard counts with guidance
+    lay1 = arena.build_layout(tree)
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_rows(lay1, 7)
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: int8/factored vs fp32 arena
+# ---------------------------------------------------------------------------
+
+
+def _steps(arch, accum, **over):
+    cfg = tiny(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    oc = OptimizerConfig(name="adama", accumulation=accum, micro_batches=2,
+                         use_pallas=True, arena=True, **over)
+    step, init = make_train_step(cfg, oc)
+    return params, batch, step, init
+
+
+@pytest.mark.parametrize("arch", ["bert_large", "stablelm_1_6b",
+                                  "whisper_base"])
+def test_int8_engine_matches_fp32_within_documented_tolerance(arch):
+    """The tentpole parity bar: one adama-engine mini-batch with the int8
+    codec vs the fp32 arena — m identical to a few ulp (never quantized),
+    v within the one-sided accumulated quantization bound, parameter
+    updates never AMPLIFIED and within 2*lr elementwise (ceil quantization
+    damps small-v elements; that is the documented semantic)."""
+    params, batch, step_f, init_f = _steps(arch, "adama")
+    _, _, step_q, init_q = _steps(arch, "adama", state_codec="int8")
+    pf, sf, mf = jax.jit(step_f)(params, init_f(params), batch)
+    pq, sq, mq = jax.jit(step_q)(params, init_q(params), batch)
+    assert isinstance(sq["v"], MomentState) and sq["v"].codec == "int8"
+    lr = 1e-3                                  # OptimizerConfig default
+    assert maxdiff(pf, pq) < 2 * lr
+    # never amplified: |dp_int8| <= |dp_fp32| elementwise
+    for a, b, p0 in zip(jax.tree.leaves(pq), jax.tree.leaves(pf),
+                        jax.tree.leaves(params)):
+        da = np.abs(np.asarray(a, np.float32) - np.asarray(p0, np.float32))
+        db = np.abs(np.asarray(b, np.float32) - np.asarray(p0, np.float32))
+        assert (da <= db + 1e-8).all()
+    # m never quantizes: identical to a few ulp (same fold order)
+    assert float(jnp.max(jnp.abs(sf["m"].data - sq["m"].data))) < 1e-7
+    v_f = np.asarray(sf["v"].data)
+    v_q = np.asarray(sq["v"].decode())
+    n_folds = 2
+    # one quantization step of the stored scale per fold (the scale is the
+    # ENCODED rowmax/127 — ceil inflation compounds into it)
+    bound = n_folds * np.max(v_q, axis=1, keepdims=True) / Q8_MAX
+    assert (v_q - v_f >= -1e-3 * bound - 1e-30).all()
+    assert (v_q - v_f <= 1.01 * bound + 1e-12).all()
+    assert abs(float(mf["loss"]) - float(mq["loss"])) < 1e-6
+
+
+def test_factored_engine_trains_and_damps():
+    params, batch, step_f, init_f = _steps("stablelm_1_6b", "adama")
+    _, _, step_c, init_c = _steps("stablelm_1_6b", "adama",
+                                  state_codec="factored")
+    pf, sf, _ = jax.jit(step_f)(params, init_f(params), batch)
+    pc, sc, mc = jax.jit(step_c)(params, init_c(params), batch)
+    assert np.isfinite(float(mc["loss"]))
+    assert maxdiff(params, pc) > 0                # it does update
+    # SM3 upper bound on v => update magnitudes never exceed fp32-Adam's
+    for a, b, p0 in zip(jax.tree.leaves(pc), jax.tree.leaves(pf),
+                        jax.tree.leaves(params)):
+        da = np.abs(np.asarray(a, np.float32) - np.asarray(p0, np.float32))
+        db = np.abs(np.asarray(b, np.float32) - np.asarray(p0, np.float32))
+        assert (da <= db + 1e-7).all()
+
+
+@pytest.mark.parametrize("codec,tol", [("int8", 2e-3), ("factored", 5e-6)])
+def test_layerwise_engine_runs_all_codecs(codec, tol):
+    params, batch, step, init = _steps("whisper_base", "adama_layerwise",
+                                       state_codec=codec)
+    p, s, m = jax.jit(step)(params, init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    assert isinstance(s["v"], MomentState)
+    # adama engine on the same codec agrees with layerwise on the same codec
+    # (int8 gets the wider bound: a ~1e-7 autodiff-path difference in g can
+    # flip a ceil-quantization boundary, moving v_hat by one code step)
+    _, _, step_a, init_a = _steps("whisper_base", "adama", state_codec=codec)
+    pa, sa, _ = jax.jit(step_a)(params, init_a(params), batch)
+    assert maxdiff(p, pa) < tol
+
+
+def test_int8_multi_step_training_stays_close_to_fp32():
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    oc_f = OptimizerConfig(name="adama", accumulation="adama",
+                           micro_batches=2, use_pallas=True, arena=True)
+    oc_q = dataclasses.replace(oc_f, state_codec="int8")
+    step_f, init_f = make_train_step(cfg, oc_f)
+    step_q, init_q = make_train_step(cfg, oc_q)
+    pf, sf = params, init_f(params)
+    pq, sq = params, init_q(params)
+    jf, jq = jax.jit(step_f), jax.jit(step_q)
+    for i in range(3):
+        batch = batch_for(cfg, 4, 16, jax.random.key(30 + i))
+        pf, sf, lf = jf(pf, sf, batch)
+        pq, sq, lq = jq(pq, sq, batch)
+    assert int(sq["step"]) == 3
+    # documented drift envelope: K mini-batches x 2*lr, loss curves track
+    assert maxdiff(pf, pq) < 3 * 2 * 1e-3
+    assert abs(float(lf["loss"]) - float(lq["loss"])) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# O(1) dispatch for every codec
+# ---------------------------------------------------------------------------
+
+
+def _dispatches(arch, accum, **over):
+    params, batch, step, init = _steps(arch, accum, **over)
+    jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
+    return (count_jaxpr_primitives(jaxpr, "pallas_call"),
+            len(jax.tree.leaves(params)))
+
+
+@pytest.mark.parametrize("codec", ["fp32", "int8", "factored"])
+def test_dispatch_count_constant_per_codec(codec):
+    """Every codec keeps the arena's O(1) contract: 1 fold (in the scan
+    body) + 1 apply for the adama engine; stacks+rest+apply for layerwise.
+    The codec transform is fused, never an extra kernel."""
+    n, leaves = _dispatches("stablelm_1_6b", "adama", state_codec=codec)
+    assert n == 2, (codec, n, leaves)
+    n_lw, _ = _dispatches("stablelm_1_6b", "adama_layerwise",
+                          state_codec=codec)
+    assert n_lw == 3, (codec, n_lw)              # blocks + rest + apply
+
+
+def test_zero1_pjit_single_device_matches_zero0():
+    """zero_stage=1 in the pjit engine adds only sharding constraints; on a
+    single device the step is bitwise the zero_stage=0 step."""
+    params, batch, step0, init0 = _steps("stablelm_1_6b", "adama")
+    _, _, step1, init1 = _steps("stablelm_1_6b", "adama", zero_stage=1)
+    p0, s0, _ = jax.jit(step0)(params, init0(params), batch)
+    p1, s1, _ = jax.jit(step1)(params, init1(params), batch)
+    assert maxdiff(p0, p1) == 0.0
+    np.testing.assert_array_equal(np.asarray(s0["m"].data),
+                                  np.asarray(s1["m"].data))
+
+
+# ---------------------------------------------------------------------------
+# codec-space decay + checkpoint round-trip (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_begin_minibatch_decays_in_codec_space():
+    tree = _tree()
+    c = state_store.get_codec("int8")
+    st = adama.init_arena(tree, codec="int8")
+    st = adama.accumulate(st, tree, 0.9, 0.999)
+    st2 = adama.begin_minibatch(st, 0.9, 0.999, m_devices=4)
+    # int8 codes untouched; only the scale column moves: c*(q*s) == q*(c*s)
+    np.testing.assert_array_equal(np.asarray(st2["v"].parts[0]),
+                                  np.asarray(st["v"].parts[0]))
+    np.testing.assert_allclose(np.asarray(st2["v"].parts[1]),
+                               4 * 0.999 * np.asarray(st["v"].parts[1]),
+                               **TOL)
+    assert int(st2["step"]) == int(st["step"]) + 1
+
+
+@pytest.mark.parametrize("codec", ["int8", "factored"])
+def test_allreduce_states_rejects_codec_state_with_guidance(codec):
+    """psum of int8 codes is meaningless; psum of factored row-maxima
+    UNDERestimates v (sum of maxima != max of sums) and would amplify
+    updates — both must refuse and point at zero_stage=1."""
+    st = adama.init_arena(_tree(), codec=codec)
+    with pytest.raises(TypeError, match="zero_stage=1"):
+        adama.allreduce_states(st, ("data",), 2)
+
+
+@pytest.mark.parametrize("codec", ["fp32", "int8", "factored"])
+def test_checkpoint_roundtrip_arena_state(codec, tmp_path):
+    """--arena runs can resume: params + arena state (and codec scale
+    columns) survive save/restore bit-for-bit, onto the eval_shape abstract
+    tree exactly as train/loop.py does."""
+    tree = _tree()
+    st = adama.init_arena(tree, codec=codec)
+    st = adama.accumulate(st, jax.tree.map(lambda x: 0.3 * x, tree),
+                          0.9, 0.999)
+    full = {"params": tree, "opt": st}
+    ckpt.save(str(tmp_path), 5, full)
+    restored = ckpt.restore(str(tmp_path), 5, jax.eval_shape(lambda: full))
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert restored["opt"]["m"].layout == st["m"].layout
+    assert isinstance(restored["opt"]["v"], type(st["v"]))
+
+
+def test_checkpoint_rejects_codec_mismatch(tmp_path):
+    """Same leaf COUNT, different codec: the recorded treedef string (which
+    embeds the codec aux data) must refuse the restore loudly."""
+    tree = _tree()
+    ckpt.save(str(tmp_path), 1,
+              {"opt": adama.init_arena(tree, codec="fp32")})
+    target = {"opt": adama.init_arena(tree, codec="factored")}
+    with pytest.raises(ValueError, match="structure mismatch"):
+        ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: target))
+
+
+def test_train_loop_resume_with_codec(tmp_path):
+    """End-to-end: a 2-step int8-arena run checkpoints, a fresh train()
+    restores and continues to step 4."""
+    from repro.configs import RunConfig
+    from repro.configs.base import InputShape
+    from repro.train.loop import train
+    cfg = tiny("stablelm_1_6b")
+    opt = OptimizerConfig(name="adama", accumulation="adama",
+                          micro_batches=2, use_pallas=True, arena=True,
+                          state_codec="int8")
+    mk = lambda steps: RunConfig(
+        model=cfg, optimizer=opt, shape=InputShape("t", 32, 4, "train"),
+        steps=steps, log_every=1, checkpoint_dir=str(tmp_path))
+    out1 = train(mk(2), log_fn=lambda *_: None)
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    out2 = train(mk(4), log_fn=lambda *_: None)
+    assert int(out2["opt_state"]["step"]) == 4
+    assert isinstance(out2["opt_state"]["v"], MomentState)
