@@ -6,12 +6,15 @@ column reports the HBM-traffic model for TPU: fused accumulate = 3 reads +
 
 Also a DISPATCH-COUNT REGRESSION GUARD: the arena train step must lower to
 O(1) pallas_calls in the number of parameter leaves (1 fold in the scan
-body + 1 apply) FOR EVERY STATE CODEC, and an OPTIMIZER-STATE-BYTES metric
-per codec (fp32 vs int8 vs factored) measured from the abstract state the
-engines actually allocate — the Table-3 memory win, measured not asserted.
-Both are emitted into the benchmark JSON (--json, default
-experiments/kernel_bench.json). `--check` runs only the guards (CI mode);
-exits non-zero on any regression."""
+body + 1 apply) FOR EVERY REGISTERED (m_codec, v_codec) COMBINATION, and an
+OPTIMIZER-STATE-BYTES metric per combination with SEPARATE m-bytes and
+v-bytes (so a regression in one moment's codec cannot hide behind the
+other's lump sum), measured from the abstract state the engines actually
+allocate — the Table-3 memory win, measured not asserted. Both are emitted
+into the benchmark JSON (--json, default experiments/kernel_bench.json).
+`--check` runs only the guards (CI mode); exits non-zero on any regression:
+dispatch count, int8 v <= 0.3x / factored v <= 0.01x / rowcol v <= 0.01x
+fp32 v, and int8 m <= 0.3x fp32 m."""
 from __future__ import annotations
 
 import argparse
@@ -23,10 +26,15 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, timed
-from repro.configs.base import STATE_CODECS as CODECS
+from repro.core.state_store import registered_combinations
 from repro.kernels import ops, ref
 
 N = 1 << 20     # 1M params
+
+# expected-bytes ratios vs the fp32 moment, with row-padding headroom for
+# reduced configs (nominal: int8 0.25x, factored ~0.001x, rowcol ~0.002x)
+V_RATIO_CEILING = {"int8": 0.3, "factored": 0.01, "rowcol": 0.01}
+M_RATIO_CEILING = {"int8": 0.3}
 
 
 def main(check_only: bool = False,
@@ -35,7 +43,7 @@ def main(check_only: bool = False,
     if not check_only:
         bench_kernels()
         arena_vs_per_leaf()
-    metrics["optimizer_state_bytes"] = sb = state_bytes_per_codec()
+    metrics["optimizer_state_bytes"] = sb = state_bytes_per_combination()
     ok, metrics["arena_dispatches"] = dispatch_count_guard()
     if json_path:
         Path(json_path).parent.mkdir(parents=True, exist_ok=True)
@@ -44,15 +52,23 @@ def main(check_only: bool = False,
         print(f"# wrote {json_path}")
     if not ok:
         raise RuntimeError("arena dispatch-count regression")
-    # state-bytes regression guard: compressed codecs must stay compressed
-    # (nominal ratios 0.25 / 0.001 + row-padding headroom on reduced cfgs)
-    fp32_v = sb["fp32"]["v_bytes"]
-    if sb["int8"]["v_bytes"] > 0.3 * fp32_v or \
-            sb["factored"]["v_bytes"] > 0.01 * fp32_v:
-        raise RuntimeError(
-            f"optimizer-state-bytes regression: v bytes per codec "
-            f"{ {c: d['v_bytes'] for c, d in sb.items()} } "
-            f"(want int8 <= 0.3x fp32, factored <= 0.01x fp32)")
+    # state-bytes regression guard, PER MOMENT: compressed codecs must stay
+    # compressed on their own moment's bytes
+    fp32_m = sb["fp32:fp32"]["m_bytes"]
+    fp32_v = sb["fp32:fp32"]["v_bytes"]
+    bad = []
+    for (mc, vc), key in ((k.split(":"), k) for k in sb):
+        ceil_v = V_RATIO_CEILING.get(vc)
+        if ceil_v is not None and sb[key]["v_bytes"] > ceil_v * fp32_v:
+            bad.append(f"v[{key}]={sb[key]['v_bytes']} > "
+                       f"{ceil_v}x fp32 ({fp32_v})")
+        ceil_m = M_RATIO_CEILING.get(mc)
+        if ceil_m is not None and sb[key]["m_bytes"] > ceil_m * fp32_m:
+            bad.append(f"m[{key}]={sb[key]['m_bytes']} > "
+                       f"{ceil_m}x fp32 ({fp32_m})")
+    if bad:
+        raise RuntimeError("optimizer-state-bytes regression: "
+                           + "; ".join(bad))
 
 
 def bench_kernels():
@@ -132,11 +148,14 @@ def _bench_setup(arch: str):
     return cfg, params, batch
 
 
-def state_bytes_per_codec(arch: str = "stablelm_1_6b"):
-    """MEASURED optimizer-state bytes per codec: eval_shape the exact state
-    the arena engines allocate (m + codec-encoded v + step) and sum the
-    array bytes — no formula, the number Table 3's capacity math composes
-    with AdamA's activation/gradient savings. Returns the JSON metric."""
+def state_bytes_per_combination(arch: str = "stablelm_1_6b"):
+    """MEASURED optimizer-state bytes per (m_codec, v_codec) combination:
+    eval_shape the exact state the arena engines allocate (codec-encoded m
+    + codec-encoded v + step) and sum the array bytes PER MOMENT — no
+    formula, the numbers Table 3's capacity math composes with AdamA's
+    activation/gradient savings, with m and v reported separately so a
+    regression in one moment's codec cannot hide behind the other's lump
+    sum. Returns the JSON metric keyed "m_codec:v_codec"."""
     from repro.configs import OptimizerConfig
     from repro.core.accumulation import make_train_step
     from repro.core.state_store import optimizer_state_bytes
@@ -144,30 +163,32 @@ def state_bytes_per_codec(arch: str = "stablelm_1_6b"):
     cfg, params, _ = _bench_setup(arch)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     out = {}
-    for codec in CODECS:
+    for m_codec, v_codec in registered_combinations():
         oc = OptimizerConfig(name="adama", accumulation="adama",
                              micro_batches=2, use_pallas=True, arena=True,
-                             state_codec=codec)
+                             state_codec=v_codec, m_codec=m_codec)
         _, init = make_train_step(cfg, oc)
         aopt = jax.eval_shape(init, params)
-        total = optimizer_state_bytes(aopt)
-        v = optimizer_state_bytes(aopt["v"])
         m = optimizer_state_bytes(aopt["m"])
-        out[codec] = {"arch": arch, "n_params": int(n_params),
-                      "total_bytes": total, "m_bytes": m, "v_bytes": v,
-                      "v_bytes_per_param": round(v / n_params, 4)}
-        row(f"kernels/state_bytes_{codec}", float(total),
-            f"arch={arch};v_bytes={v};v_bytes_per_param={v / n_params:.4f};"
-            f"v_vs_fp32={v / out['fp32']['v_bytes']:.4f}" if codec != "fp32"
-            else f"arch={arch};v_bytes={v};"
-                 f"v_bytes_per_param={v / n_params:.4f}")
+        v = optimizer_state_bytes(aopt["v"])
+        key = f"{m_codec}:{v_codec}"
+        out[key] = {"arch": arch, "n_params": int(n_params),
+                    "total_bytes": optimizer_state_bytes(aopt),
+                    "m_bytes": m, "v_bytes": v,
+                    "m_bytes_per_param": round(m / n_params, 4),
+                    "v_bytes_per_param": round(v / n_params, 4)}
+        row(f"kernels/state_bytes_{m_codec}_{v_codec}",
+            float(out[key]["total_bytes"]),
+            f"arch={arch};m_bytes={m};v_bytes={v};"
+            f"m_per_param={m / n_params:.4f};v_per_param={v / n_params:.4f}")
     return out
 
 
 def dispatch_count_guard():
     """Assert the arena train step's pallas_call count is CONSTANT in leaf
-    count (1 fold + 1 apply) FOR EVERY CODEC by counting eqns in the
-    lowered jaxpr. Returns (ok, counts-dict for the benchmark JSON)."""
+    count (1 fold + 1 apply) FOR EVERY (m_codec, v_codec) COMBINATION by
+    counting eqns in the lowered jaxpr. Returns (ok, counts-dict for the
+    benchmark JSON)."""
     from repro.configs import OptimizerConfig
     from repro.core.accumulation import make_train_step
     from repro.launch.hlo_analysis import count_jaxpr_primitives
@@ -177,17 +198,17 @@ def dispatch_count_guard():
     for arch in ("stablelm_1_6b", "whisper_base"):
         cfg, params, batch = _bench_setup(arch)
         leaves = len(jax.tree.leaves(params))
-        for codec in CODECS:
+        for m_codec, v_codec in registered_combinations():
             oc = OptimizerConfig(name="adama", accumulation="adama",
                                  micro_batches=2, use_pallas=True, arena=True,
-                                 state_codec=codec)
+                                 state_codec=v_codec, m_codec=m_codec)
             step, init = make_train_step(cfg, oc)
             jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
             n = count_jaxpr_primitives(jaxpr, "pallas_call")
-            counts[f"{arch}/{codec}"] = n
+            counts[f"{arch}/{m_codec}:{v_codec}"] = n
             ok &= (n == 2)
-            row(f"kernels/arena_dispatches_{arch}_{codec}", float(n),
-                f"leaves={leaves};expected=2")
+            row(f"kernels/arena_dispatches_{arch}_{m_codec}_{v_codec}",
+                float(n), f"leaves={leaves};expected=2")
     if not ok:
         print("DISPATCH-COUNT REGRESSION: arena step no longer O(1) "
               f"pallas_calls (got {counts}, want 2 everywhere)",

@@ -222,9 +222,17 @@ class OptimizerConfig:
     #   fp32     exact, 4 B/param for v (default)
     #   int8     per-row quantized codes + fp32 scale column, ~1 B/param
     #   factored SM3-style per-row statistic, ~4/1024 B/param
-    # Codecs are arena columns: they require arena=True. All codec state is
-    # row-indexed, so every codec composes with zero_stage=1 row sharding.
+    #   rowcol   Adafactor-style rank-1 row x col marginals, ~2/1024 the
+    #            memory of fp32 v (row sums row-indexed + one replicated
+    #            (1, LANES) column-sum block)
+    # Codecs are arena columns: they require arena=True. All codec state
+    # except rowcol's column sums is row-indexed, so every codec composes
+    # with zero_stage=1 row sharding (the column sums are replicated and
+    # psum-combined once per mini-batch).
     state_codec: str = "fp32"
+    # first-moment codec (fp32 | int8 = signed per-row quantization rounding
+    # toward zero, never-amplify); requires arena=True when not fp32.
+    m_codec: str = "fp32"
     grad_clip: Optional[float] = None
 
     def __post_init__(self):
@@ -233,21 +241,23 @@ class OptimizerConfig:
 
 # Capability matrix for the optimizer-state store, consulted by
 # validate_optimizer_config and mirrored in tests/test_configs.py and the
-# README table. Keys: (codec, zero_stage, accumulation engine) dimensions
-# that are NOT universally supported, with the actionable reason.
-STATE_CODECS = ("fp32", "int8", "factored")
+# README table. Keys: (m_codec, v_codec, zero_stage, accumulation engine)
+# dimensions that are NOT universally supported, with the actionable reason.
+STATE_CODECS = ("fp32", "int8", "factored", "rowcol")    # second moment (v)
+M_CODECS = ("fp32", "int8")                              # first moment (m)
 ZERO_STAGES = (0, 1)
 ACCUM_ENGINES = ("ga", "adama", "adama_layerwise")
 
 
 def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
     """None when the configuration is supported, else an actionable error
-    message. The full matrix is codec x zero_stage x engine:
+    message. The full matrix is m_codec x v_codec x zero_stage x engine:
 
-      codec fp32      : any engine, any zero stage, arena or per-leaf.
-      codec int8/fact.: require arena=True (codecs are arena columns) —
+      fp32 x fp32     : any engine, any zero stage, arena or per-leaf.
+      compressed codec: requires arena=True (codecs are arena columns) —
                         then any engine and any zero stage (codec state is
-                        row-indexed, so row-range ZeRO composes).
+                        row-indexed, so row-range ZeRO composes; rowcol's
+                        replicated column sums psum-combine per mini-batch).
       zero_stage=1    : per-leaf states shard via zero1_state_sharding;
                         arena states shard by row range (shard_rows).
       arena=True      : requires use_pallas=True; the 'ga' engine's fused
@@ -256,10 +266,10 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
     One engine-selection caveat lives outside this matrix (engine choice is
     not an OptimizerConfig field): the shard_map DP engine
     (core/dp_shardmap.make_dp_train_step) additionally requires
-    zero_stage=1 for int8/factored — its mini-batch-end state psum cannot
-    sum codec-encoded moments, while the row-range ZeRO-1 schedule
-    reduce-scatters fp32 gradients instead. It raises its own actionable
-    error at construction.
+    zero_stage=1 for any compressed m/v codec — its mini-batch-end state
+    psum cannot sum codec-encoded moments, while the row-range ZeRO-1
+    schedule reduce-scatters fp32 gradients instead. It raises its own
+    actionable error at construction.
     """
     if opt.accumulation not in ACCUM_ENGINES:
         return (f"unknown accumulation engine {opt.accumulation!r}; "
@@ -267,6 +277,9 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
     if opt.state_codec not in STATE_CODECS:
         return (f"unknown state_codec {opt.state_codec!r}; expected one of "
                 f"{STATE_CODECS}")
+    if opt.m_codec not in M_CODECS:
+        return (f"unknown m_codec {opt.m_codec!r}; expected one of "
+                f"{M_CODECS}")
     if opt.zero_stage not in ZERO_STAGES:
         return (f"zero_stage={opt.zero_stage} unsupported; expected one of "
                 f"{ZERO_STAGES} (ZeRO-2/3 shard gradients/params, which "
@@ -278,6 +291,10 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
         return (f"state_codec={opt.state_codec!r} requires arena=True: "
                 f"codecs are columns of the flat state arena "
                 f"(core/state_store.py); pass arena=True use_pallas=True")
+    if opt.m_codec != "fp32" and not opt.arena:
+        return (f"m_codec={opt.m_codec!r} requires arena=True: codecs are "
+                f"columns of the flat state arena (core/state_store.py); "
+                f"pass arena=True use_pallas=True")
     if opt.arena and opt.accumulation == "ga" and \
             opt.name not in ("adam", "adama"):
         return (f"arena=True with accumulation='ga' supports the adam/adama "

@@ -22,12 +22,13 @@ optimizer path over the flat state arena (core/arena.py): one fused
 SMEM scalars on the first fold) and one per mini-batch-end apply — O(1)
 kernel dispatches per micro-batch instead of O(param leaves).
 
-OptimizerConfig.state_codec selects the second-moment codec
-(core/state_store.py: fp32 | int8 | factored); the codec transform is fused
-into the same kernels, so the dispatch count is unchanged. With
-zero_stage=1 the arena state is constrained to ZeRO-1 row-range sharding
-(core/zero.py) — under a multi-device mesh GSPMD materializes the
-reduce-scatter/all-gather schedule; on a single device it is a no-op.
+OptimizerConfig.state_codec / m_codec select the per-moment codecs
+(core/state_store.py: v in fp32 | int8 | factored | rowcol, m in fp32 |
+int8); both codec transforms are fused into the same kernels, so the
+dispatch count is unchanged for every combination. With zero_stage=1 the
+arena state is constrained to ZeRO-1 row-range sharding (core/zero.py) —
+under a multi-device mesh GSPMD materializes the reduce-scatter/all-gather
+schedule; on a single device it is a no-op.
 """
 from __future__ import annotations
 
@@ -58,19 +59,24 @@ def _arena_init(opt: OptimizerConfig, state_shards: int = 1):
     rows are zeros that no kernel result depends on, so over-padding is
     always safe while an unpadded layout makes shard_rows refuse."""
     return functools.partial(adama.init_arena, codec=opt.state_codec,
+                             m_codec=opt.m_codec,
                              n_shards=max(1, state_shards))
 
 
 def _zero_constrain(opt: OptimizerConfig, state):
-    """ZeRO-1 over the arena in the pjit engine: constrain every row-indexed
-    state column to row-range sharding over the dp axes. GSPMD then owns the
-    reduce-scatter/all-gather schedule; without an installed mesh this is a
-    no-op (single-device runs, unit tests)."""
+    """ZeRO-1 over the arena in the pjit engine: constrain every ROW-INDEXED
+    state column to row-range sharding over the dp axes (replicated codec
+    columns — e.g. the rowcol column sums, whose leading dim is 1 — stay
+    unconstrained). GSPMD then owns the reduce-scatter/all-gather schedule;
+    without an installed mesh this is a no-op (single-device runs, tests)."""
     if opt.zero_stage != 1 or not _use_arena(opt):
         return state
+    from repro.core.state_store import row_indexed_mask
     from repro.sharding.ctx import maybe_shard
-    return {k: (jax.tree.map(lambda x: maybe_shard(x, "dp", None), v)
-                if k in ("m", "v") else v)
+    mask = row_indexed_mask(state)
+    return {k: (jax.tree.map(
+                lambda x, ri: maybe_shard(x, "dp", None) if ri else x,
+                v, mask[k]) if k in ("m", "v") else v)
             for k, v in state.items()}
 
 
@@ -137,20 +143,16 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
         lr = lr_schedule(opt_state["step"]) if lr_schedule else opt.lr
         if use_arena:
             from repro.core import state_store
-            codec = state_store.codec_of(opt_state["v"])
             step_c = opt_state["step"] + 1
             t = step_c.astype(jnp.float32)
-            m, vparts = codec.fold(
-                opt_state["m"].data, codec.parts_of(opt_state["v"]), grads,
-                beta1=opt.beta1, beta2=opt.beta2,
-                decay=(opt.beta1, opt.beta2))
-            p_new = codec.apply(
-                arena_mod.pack(params, layout), m, vparts, lr=lr,
+            opt_state = state_store.fold_state(
+                dict(opt_state, step=step_c), grads, beta1=opt.beta1,
+                beta2=opt.beta2, decay=(opt.beta1, opt.beta2))
+            p_new = state_store.apply_state(
+                arena_mod.pack(params, layout), opt_state, lr=lr,
                 bc1=1 - opt.beta1 ** t, bc2=1 - opt.beta2 ** t, eps=opt.eps,
                 weight_decay=opt.weight_decay)
             params = arena_mod.unpack(p_new, layout)
-            opt_state = {"m": opt_state["m"].with_data(m),
-                         "v": codec.wrap(layout, vparts), "step": step_c}
             return params, _zero_constrain(opt, opt_state), {"loss": lsum / n}
         kw = dict(lr=lr, weight_decay=opt.weight_decay)
         if opt_mod is adam:

@@ -37,20 +37,22 @@ def init(params) -> State:
             "step": jnp.zeros((), jnp.int32)}
 
 
-def init_arena(params, codec: str = "fp32", n_shards: int = 1) -> State:
-    """Arena-backed state: m is a flat (rows, LANES) fp32 buffer and v is
-    `codec`-encoded arena columns (core/state_store.py), so each fold/apply
-    is ONE kernel dispatch. `n_shards` pads the layout for ZeRO-1 row-range
-    sharding (core/zero.py::shard_rows)."""
+def init_arena(params, codec: str = "fp32", m_codec: str = "fp32",
+               n_shards: int = 1) -> State:
+    """Arena-backed state: both moments are codec-encoded arena columns
+    (core/state_store.py; `codec` selects v's codec, `m_codec` m's), so each
+    fold/apply is ONE kernel dispatch for every registered pair. `n_shards`
+    pads the layout for ZeRO-1 row-range sharding (core/zero.py::shard_rows)."""
     from repro.core import state_store
     layout = arena_mod.build_layout(params, n_shards=n_shards)
-    return {"m": Arena.zeros(layout),
-            "v": state_store.get_codec(codec).init(layout),
+    return {"m": state_store.get_codec(m_codec, "m").init(layout),
+            "v": state_store.get_codec(codec, "v").init(layout),
             "step": jnp.zeros((), jnp.int32)}
 
 
 def is_arena_state(state: State) -> bool:
-    return isinstance(state["m"], Arena)
+    from repro.core.state_store import is_arena_backed
+    return is_arena_backed(state["m"])
 
 
 def begin_minibatch(state: State, beta1: float, beta2: float,
@@ -65,9 +67,9 @@ def begin_minibatch(state: State, beta1: float, beta2: float,
     touched)."""
     if is_arena_state(state):
         from repro.core import state_store
-        codec = state_store.codec_of(state["v"])
-        return {"m": state["m"].with_data(beta1 * state["m"].data),
-                "v": codec.scale_state(state["v"], m_devices * beta2),
+        mc, vc = state_store.state_codecs(state)
+        return {"m": mc.scale_state(state["m"], beta1),
+                "v": vc.scale_state(state["v"], m_devices * beta2),
                 "step": state["step"] + 1}
     return {
         "m": jax.tree.map(lambda m: beta1 * m, state["m"]),
@@ -86,14 +88,9 @@ def accumulate(state: State, grads, beta1: float, beta2: float,
     decay into this call (pass it on the first micro-batch only)."""
     if is_arena_state(state):
         from repro.core import state_store
-        codec = state_store.codec_of(state["v"])
-        layout = state["m"].layout
-        g = arena_mod.pack(grads, layout)
-        m, parts = codec.fold(state["m"].data, codec.parts_of(state["v"]), g,
-                              beta1=beta1, beta2=beta2, scale=scale,
-                              decay=decay)
-        return {"m": state["m"].with_data(m),
-                "v": codec.wrap(layout, parts), "step": state["step"]}
+        g = arena_mod.pack(grads, state["m"].layout)
+        return state_store.fold_state(state, g, beta1=beta1, beta2=beta2,
+                                      scale=scale, decay=decay)
     if decay is not None:
         state = {"m": jax.tree.map(lambda m: decay[0] * m, state["m"]),
                  "v": jax.tree.map(lambda v: decay[1] * v, state["v"]),
@@ -130,13 +127,14 @@ def allreduce_states(state: State, axis_names: Sequence[str],
     ZeRO-1 row-range schedule reduce-scatters the fp32 GRADIENT instead,
     which composes with every codec — use zero_stage=1."""
     from repro.core.state_store import MomentState
-    if isinstance(state["v"], MomentState):
-        raise TypeError(
-            f"allreduce_states cannot psum {state['v'].codec}-coded second "
-            f"moments (the sum of codec state is not the state of the "
-            f"summed moments); run the shard_map DP engine with "
-            f"zero_stage=1 (row-range ZeRO-1 reduce-scatters fp32 "
-            f"gradients instead of states)")
+    for k in ("m", "v"):
+        if isinstance(state[k], MomentState):
+            raise TypeError(
+                f"allreduce_states cannot psum {state[k].codec}-coded "
+                f"{'first' if k == 'm' else 'second'} moments (the sum of "
+                f"codec state is not the state of the summed moments); run "
+                f"the shard_map DP engine with zero_stage=1 (row-range "
+                f"ZeRO-1 reduce-scatters fp32 gradients instead of states)")
     m = jax.tree.map(lambda x: jax.lax.psum(x, axis_names) / m_devices,
                      state["m"])
     v = jax.tree.map(lambda x: jax.lax.psum(x, axis_names) / (m_devices ** 2),
@@ -154,12 +152,10 @@ def finalize(params, state: State, *, lr, beta1: float, beta2: float,
     bc2 = 1 - beta2 ** t
     if is_arena_state(state):
         from repro.core import state_store
-        codec = state_store.codec_of(state["v"])
         layout = state["m"].layout
-        p_arena = arena_mod.pack(params, layout)
-        p_new = codec.apply(p_arena, state["m"].data,
-                            codec.parts_of(state["v"]), lr=lr, bc1=bc1,
-                            bc2=bc2, eps=eps, weight_decay=weight_decay)
+        p_new = state_store.apply_state(
+            arena_mod.pack(params, layout), state, lr=lr, bc1=bc1, bc2=bc2,
+            eps=eps, weight_decay=weight_decay)
         return arena_mod.unpack(p_new, layout), state
     if use_pallas:
         from repro.kernels.ops import adam_apply_tree

@@ -14,10 +14,14 @@ Three DP variants (benchmarks/fig7_comm.py measures their collective bytes):
 With OptimizerConfig(zero_stage=1, arena=True) the adama variant runs the
 ZeRO-1 ROW-RANGE schedule over the flat state arena (the paper's Table-3
 "ZeRO-S1 + AdamA" row): device k persistently owns rows [k*R/M, (k+1)*R/M)
-of EVERY state column (m, the v payload, any codec scale column — all
-row-indexed, see core/state_store.py), each micro-batch's gradient arena is
-psum_scatter'd so the fold runs on 1/M of the state, and the mini-batch-end
-apply updates the owned param rows followed by one all-gather. Optimizer
+of EVERY row-indexed state column (both moments' payloads and any codec
+scale column, for every (m_codec, v_codec) pair — see core/state_store.py),
+each micro-batch's gradient arena is psum_scatter'd so the fold runs on 1/M
+of the state, and the mini-batch-end apply updates the owned param rows
+followed by one all-gather. The one non-row-indexed column (the rowcol
+codec's (1, LANES) column sums) is replicated: each shard accumulates its
+partial with the decay pre-divided by M, and a single tiny psum per
+mini-batch restores the exact global statistic. Optimizer
 state per device drops to 1/M; the collectives move from states to
 gradients, so int8/factored codecs compose (nothing quantized is ever
 summed). Comm volume = N*P*(M-1)/M (gradient reduce-scatters) + P (param
@@ -84,14 +88,14 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
         raise ValueError(
             f"zero_stage=1 row-range sharding is defined for the 'adama' "
             f"variant only, got variant={variant!r}")
-    if use_arena and opt.state_codec != "fp32" and not zero1 and \
-            variant == "adama":
+    if use_arena and not zero1 and variant == "adama" and \
+            (opt.state_codec != "fp32" or opt.m_codec != "fp32"):
         raise ValueError(
-            f"state_codec={opt.state_codec!r} with the shard_map DP engine "
-            f"requires zero_stage=1: the mini-batch-end state psum "
-            f"(Eqs. 7-8) cannot sum codec-encoded moments, while the "
-            f"row-range ZeRO-1 schedule reduce-scatters fp32 gradients "
-            f"instead")
+            f"m_codec={opt.m_codec!r}/state_codec={opt.state_codec!r} with "
+            f"the shard_map DP engine requires zero_stage=1: the "
+            f"mini-batch-end state psum (Eqs. 7-8) cannot sum codec-encoded "
+            f"moments, while the row-range ZeRO-1 schedule reduce-scatters "
+            f"fp32 gradients instead")
 
     def local_step(params, opt_state, batch):
         micro = _split_micro(batch, n)
@@ -116,11 +120,14 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
 
         if variant == "adama" and use_arena and zero1:
             # ZeRO-1 row ranges: this device owns rows [idx*R/M, (idx+1)*R/M)
-            # of every state column. Gradients are reduce-scattered per fold
-            # (fully-reduced before entering v, so no M*beta2 pre-scale or
-            # /M^2 correction — the schedule equals single-device AdamA(N)
-            # over the full global micro-batch), params all-gathered once.
-            codec = state_store.get_codec(opt.state_codec)
+            # of every ROW-INDEXED state column. Gradients are reduce-
+            # scattered per fold (fully-reduced before entering v, so no
+            # M*beta2 pre-scale or /M^2 correction — the schedule equals
+            # single-device AdamA(N) over the full global micro-batch),
+            # params all-gathered once. Replicated codec columns (rowcol's
+            # column sums) accumulate per-shard partials with their decay
+            # pre-divided by M, so ONE tiny psum at mini-batch end restores
+            # the exact global statistic (state_store.psum_replicated_state).
             lay = opt_state["m"].layout
             rows_own = lay.rows // m_dev
             state = dict(opt_state, step=opt_state["step"] + 1)
@@ -131,16 +138,17 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                 l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
                 g_own = lax.psum_scatter(arena_mod.pack(g, lay), dp_axes,
                                          scatter_dimension=0, tiled=True)
-                m, vp = codec.fold(st["m"].data, codec.parts_of(st["v"]),
-                                   g_own, beta1=b1, beta2=b2,
-                                   scale=1.0 / (n * m_dev),
-                                   decay=_fold_decay(i, b1, b2, 1))
-                st = {"m": st["m"].with_data(m), "v": codec.wrap(lay, vp),
-                      "step": st["step"]}
+                decay = _fold_decay(i, b1, b2, 1)
+                st = state_store.fold_state(
+                    st, g_own, beta1=b1, beta2=b2, scale=1.0 / (n * m_dev),
+                    decay=decay,
+                    replicated_decay=(decay[0],
+                                      jnp.where(i == 0, b2 / m_dev, 1.0)))
                 return (st, lsum + l), None
 
             (state, lsum), _ = lax.scan(body, (state, 0.0),
                                         (jnp.arange(n), micro))
+            state = state_store.psum_replicated_state(state, dp_axes)
             lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
             t = state["step"].astype(jnp.float32)
             idx = jnp.int32(0)
@@ -148,10 +156,9 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                 idx = idx * lax.psum(1, a) + lax.axis_index(a)
             p_own = lax.dynamic_slice_in_dim(
                 arena_mod.pack(params, lay), idx * rows_own, rows_own, axis=0)
-            p_own = codec.apply(p_own, state["m"].data,
-                                codec.parts_of(state["v"]), lr=lr,
-                                bc1=1 - b1 ** t, bc2=1 - b2 ** t, eps=opt.eps,
-                                weight_decay=opt.weight_decay)
+            p_own = state_store.apply_state(
+                p_own, state, lr=lr, bc1=1 - b1 ** t, bc2=1 - b2 ** t,
+                eps=opt.eps, weight_decay=opt.weight_decay)
             p_full = lax.all_gather(p_own, dp_axes, axis=0, tiled=True)
             params = arena_mod.unpack(p_full, lay)
             return params, state, {"loss": lax.pmean(lsum / n, dp_axes)}
@@ -202,12 +209,20 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
 
     rep = P()
     bspec = P(dp_axes)
-    # ZeRO-1: every row-indexed state column is sharded over the dp axes;
-    # the replicated scalar step rides alongside
-    ospec = ({"m": P(dp_axes, None), "v": P(dp_axes, None), "step": rep}
-             if zero1 and variant == "adama" else rep)
+
+    def _zero1_ospec(opt_state):
+        """ZeRO-1: every ROW-INDEXED state column (per the codec's declared
+        column list) is sharded over the dp axes; replicated codec columns
+        (rowcol's (1, LANES) column sums) and the scalar step ride
+        alongside replicated."""
+        mask = state_store.row_indexed_mask(opt_state)
+        return {k: (jax.tree.map(lambda ri: P(dp_axes, None) if ri else rep,
+                                 mask[k]) if k in ("m", "v") else rep)
+                for k in opt_state}
 
     def step(params, opt_state, batch):
+        ospec = (_zero1_ospec(opt_state)
+                 if zero1 and variant == "adama" else rep)
         f = _shard_map(local_step, mesh,
                        in_specs=(rep, ospec, bspec),
                        out_specs=(rep, ospec, rep), manual_axes=dp_axes)
@@ -218,6 +233,7 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             return adam.init(params)
         if use_arena:
             return adama.init_arena(params, codec=opt.state_codec,
+                                    m_codec=opt.m_codec,
                                     n_shards=m_dev if zero1 else 1)
         return adama.init(params)
 

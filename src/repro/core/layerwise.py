@@ -23,10 +23,13 @@ slice with ONE offset-indexed kernel (kernels/fused_step.arena_fold_slice) —
 O(1) dispatches per layer instead of O(leaves) — and the begin-minibatch
 decay rides into micro-batch 0's folds as SMEM scalars.
 
-The second moment may be codec-encoded (core/state_store.py): the backward
-scan then carries the codec's column tuple (e.g. int8 codes + scale column)
-and the slice fold dequants/requants in the same single kernel, so the
-dispatch count per layer is unchanged for every codec.
+BOTH moments may be codec-encoded (core/state_store.py): the backward scan
+carries each codec's column tuple (e.g. int8 codes + scale column) and the
+slice fold dequants/requants both moments in the same single kernel, so the
+dispatch count per layer is unchanged for every (m_codec, v_codec) pair.
+Replicated codec columns (rowcol's column sums) are decayed once per
+micro-batch before the scan — a slice fold sees only its rows and must not
+decay shared state per layer.
 """
 from __future__ import annotations
 
@@ -143,10 +146,17 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     arena_st = is_arena_state(state)
     if arena_st:
         from repro.core import state_store
-        codec = state_store.codec_of(state["v"])
+        mc, vc = state_store.state_codecs(state)
+        codec = (mc, vc)
         lay = state["m"].layout
-        m_acc = state["m"].data
-        v_acc = codec.parts_of(state["v"])       # codec column tuple
+        m_acc = mc.parts_of(state["m"])          # codec column tuples
+        v_acc = vc.parts_of(state["v"])
+        if decay is not None:
+            # replicated codec columns (e.g. rowcol's column sums) decay
+            # ONCE per micro-batch here — the per-layer slice folds below
+            # each see only part of the rows and must not decay them again
+            m_acc = mc.begin_micro(m_acc, decay[0])
+            v_acc = vc.begin_micro(v_acc, decay[1])
     else:
         codec = None
         new_m = dict(state["m"])
@@ -184,8 +194,8 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     if arena_st:
         m_acc, v_acc = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
                                   decay, codec)
-        return loss, {"m": state["m"].with_data(m_acc),
-                      "v": codec.wrap(lay, v_acc),
+        return loss, {"m": mc.wrap(lay, m_acc),
+                      "v": vc.wrap(lay, v_acc),
                       "step": state["step"]}
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
@@ -197,14 +207,16 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
                 codec=None):
     """Fold one layer's gradient tree. Tree mode: per-leaf fold into row j of
     the (m, v) stacks. Arena mode: pack dlp into one slab and fold it into
-    the layer's arena row slice with a single offset-indexed, codec-aware
-    kernel (v_c is the codec's column tuple). Grads arrive pre-scaled (via
-    the VJP cotangent), so the kernel scale is 1."""
+    the layer's arena row slice with a single offset-indexed kernel fusing
+    BOTH moments' codec transforms (codec is the (m_codec, v_codec) pair;
+    m_c/v_c their column tuples). Grads arrive pre-scaled (via the VJP
+    cotangent), so the kernel scale is 1."""
     if lay is not None:
+        from repro.core import state_store
         g2 = arena_mod.pack_layer(dlp, spec)
         off = spec.row + j * spec.layer_rows
-        return codec.fold_slice(
-            m_c, v_c, g2, off, beta1=beta1, beta2=beta2,
+        return state_store.fold_slice(
+            codec[0], codec[1], m_c, v_c, g2, off, beta1=beta1, beta2=beta2,
             block=lay.slice_block(spec), decay=decay)
     m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
         s, j, 0, keepdims=False), m_c)
@@ -223,10 +235,11 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec):
     codec-aware kernel over the contiguous rest region."""
     if not lay.rest.rows:
         return m_acc, v_acc
+    from repro.core import state_store
     g2 = arena_mod.pack_rest(d_rest, lay)
-    return codec.fold_slice(
-        m_acc, v_acc, g2, lay.rest.row, beta1=beta1, beta2=beta2,
-        block=lay.slice_block(lay.rest), decay=decay)
+    return state_store.fold_slice(
+        codec[0], codec[1], m_acc, v_acc, g2, lay.rest.row, beta1=beta1,
+        beta2=beta2, block=lay.slice_block(lay.rest), decay=decay)
 
 
 # ---------------------------------------------------------------------------
@@ -288,9 +301,13 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
     arena_st = is_arena_state(state)
     if arena_st:
         from repro.core import state_store
-        codec = state_store.codec_of(state["v"])
+        mc, vc = state_store.state_codecs(state)
+        codec = (mc, vc)
         lay = state["m"].layout
-        m0, v0 = state["m"].data, codec.parts_of(state["v"])
+        m0, v0 = mc.parts_of(state["m"]), vc.parts_of(state["v"])
+        if decay is not None:            # replicated columns: once per micro
+            m0 = mc.begin_micro(m0, decay[0])
+            v0 = vc.begin_micro(v0, decay[1])
         dec_spec, enc_spec = lay.stack("blocks"), lay.stack("enc_blocks")
     else:
         codec = None
@@ -347,8 +364,8 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
     if arena_st:
         m_new, v_new = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
                                   decay, codec)
-        return ce, {"m": state["m"].with_data(m_new),
-                    "v": codec.wrap(lay, v_new),
+        return ce, {"m": mc.wrap(lay, m_new),
+                    "v": vc.wrap(lay, v_new),
                     "step": state["step"]}
     new_m["enc_blocks"], new_v["enc_blocks"] = m_new, v_new
     for k in d_rest:

@@ -1,41 +1,60 @@
-"""State-store layer over the flat optimizer arena: pluggable second-moment
-codecs (the paper's Table-3 composition — AdamA for activation/gradient
-memory x optimizer-state reduction for (m, v)).
+"""State-store layer over the flat optimizer arena: pluggable codecs for
+BOTH Adam moments (the paper's Table-3 composition — AdamA for
+activation/gradient memory x optimizer-state reduction for (m, v)).
 
-The arena (core/arena.py) stores Adam's moments as flat (rows, LANES) fp32
-buffers. This module generalizes the SECOND moment into codec-encoded arena
-columns:
+The arena (core/arena.py) stores Adam's moments as flat (rows, LANES)
+buffers. This module generalizes EACH moment into codec-encoded arena
+columns; a training configuration picks an (m_codec, v_codec) pair and every
+registered pair runs through the same three builder-generated kernels
+(kernels/fused_step.py) at O(1) dispatches per micro-batch.
 
-  fp32      (rows, LANES) fp32                   exact; default behavior.
-            4 bytes/param for v.
+First-moment codecs (m is SIGNED and carries the update direction):
+
+  fp32      (rows, LANES) fp32                   exact; default. 4 B/param.
   int8      (rows, LANES) int8 + (rows, 1) fp32  per-row symmetric quant
-            scales                               (v >= 0 -> codes [0, 127]);
-            dequant/requant fused inside the fold/apply kernels. ~1 byte/
-            param for v; CEIL quantization, so the error is one-sided:
-            0 <= v_hat - v <= rowmax/127 per element per fold (updates are
-            damped, never amplified — see kernels/adama_accum.py).
+            scales                               over codes [-127, 127],
+            rounding TOWARD ZERO so |m_hat| <= |m| — the update magnitude
+            is only ever damped, never amplified (cf. MicroAdam, Modoranu
+            et al. 2024). ~1 B/param; error one-sided toward zero,
+            |m - m_hat| <= rowmax(|m|)/127 per element per fold.
+
+Second-moment codecs (v >= 0, sits under the square root):
+
+  fp32      (rows, LANES) fp32                   exact; default.
+  int8      (rows, LANES) int8 + (rows, 1) fp32  CEIL quantization, codes
+            [0, 127]: 0 <= v_hat - v <= rowmax/127 (never-amplify).
   factored  (rows, 1) fp32                       SM3-style per-row upper
-            bound (lane-dim max of the running statistic); 1/LANES the
-            memory (~0.004 bytes/param). The reconstruction
-            v_hat[i, j] = stat[i] >= v[i, j] is the SM3 cover-set
-            guarantee with one cover per arena row (rows never span
-            parameter leaves — every leaf starts on a fresh row — so the
-            statistic is leaf-consistent; cf. Anil et al., Memory-Efficient
-            Adaptive Optimization).
+            bound (lane-dim max); ~4/1024 B/param. v_hat >= v is the SM3
+            cover-set guarantee, one cover per arena row.
+  rowcol    (rows, 1) + (1, LANES) fp32          TRUE row x col rank-1
+            factorization (Adafactor, Shazeer & Stern 2018): row sums
+            (row-indexed) + column sums (a replicated accumulator), with
+            v_hat = vr vc^T / sum(vc). ~2/1024 the memory of fp32 v at the
+            full-matrix accuracy bound (exact when v is rank one; marginals
+            always preserved exactly). The column sums are the ONE state
+            column that is not row-indexed: under ZeRO-1 each row-range
+            shard keeps a replica and contributes its partial column sums,
+            combined by a single tiny (1, LANES) psum per mini-batch
+            (core/dp_shardmap.py); its decay is applied OUTSIDE the kernel,
+            once per micro-batch, so per-layer slice folds cannot decay the
+            shared column twice.
 
-The first moment m stays fp32: it is signed, carries the update direction,
-and the paper's composition compresses optimizer state via v. Every codec's
-sidecar state is ROW-INDEXED, which is what makes ZeRO-1 row-range sharding
-(core/zero.py::shard_rows) compose with every codec: a shard is rows
-[k*R/M, (k+1)*R/M) of every column, and the collectives are a gradient
-reduce-scatter plus a param all-gather over the same ranges.
+All OTHER codec state is row-indexed, which is what makes ZeRO-1 row-range
+sharding (core/zero.py::shard_rows) compose with every codec: a shard is
+rows [k*R/M, (k+1)*R/M) of every row-indexed column, and the collectives are
+a gradient reduce-scatter plus a param all-gather over the same ranges.
 
-Dispatch stays O(1): each codec's fold and apply are single fused
-pallas_calls (kernels/fused_step.py).
+Each codec also DECLARES its conformance contract (`Conformance`): the
+documented Adam-parity drift, whether updates can never be amplified, and
+whether all its state is row-local. tests/test_codec_conformance.py is
+parameterized over `registered_combinations()` and enforces exactly the
+declared contract — adding a codec means adding a registry entry with
+tolerances, not new tests.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,222 +66,372 @@ from repro.kernels.adama_accum import LANES
 
 @jax.tree_util.register_pytree_node_class
 class MomentState:
-    """A codec-encoded second moment: a tuple of row-indexed arena columns
-    plus static (layout, codec name) aux data. Mirrors Arena's pytree
-    contract so it flows through jit / scan / donation / checkpointing."""
+    """A codec-encoded Adam moment: a tuple of codec columns plus static
+    (layout, codec name, moment) aux data. Mirrors Arena's pytree contract
+    so it flows through jit / scan / donation / checkpointing — and because
+    the aux data rides in the treedef, restoring a checkpoint onto a
+    different codec (or onto the other moment) fails loudly."""
 
     def __init__(self, parts: Tuple[jnp.ndarray, ...], layout: ArenaLayout,
-                 codec: str):
+                 codec: str, moment: str = "v"):
         self.parts = tuple(parts)
         self.layout = layout
         self.codec = codec
+        self.moment = moment
 
     def tree_flatten(self):
-        return self.parts, (self.layout, self.codec)
+        return self.parts, (self.layout, self.codec, self.moment)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(tuple(children), *aux)
 
     def with_parts(self, parts) -> "MomentState":
-        return MomentState(tuple(parts), self.layout, self.codec)
+        return MomentState(tuple(parts), self.layout, self.codec, self.moment)
 
     def decode(self) -> jnp.ndarray:
-        """Reconstruct the (rows, LANES) fp32 second-moment arena."""
-        return get_codec(self.codec).decode(self.parts)
+        """Reconstruct the (rows, LANES) fp32 moment arena."""
+        return get_codec(self.codec, self.moment).decode(self.parts)
 
     def to_tree(self, dtype=None):
         """Decode and unpack to the parameter-tree structure (parity/debug)."""
         return arena_mod.unpack(self.decode(), self.layout, dtype)
 
     def __repr__(self):
-        return (f"MomentState(codec={self.codec!r}, rows={self.layout.rows}, "
+        return (f"MomentState({self.moment}_codec={self.codec!r}, "
+                f"rows={self.layout.rows}, "
                 f"parts={[tuple(p.shape) for p in self.parts]})")
 
 
+@dataclass(frozen=True)
+class Conformance:
+    """The codec's DECLARED accuracy contract, enforced verbatim by
+    tests/test_codec_conformance.py on every registered combination."""
+    # elementwise |p - p_fp32| after one mini-batch, in units of lr;
+    # None = no elementwise parity bound (lossy statistic codec — the
+    # harness falls back to the structural contracts below)
+    drift_lr: Optional[float]
+    # |p_new - p_0| <= |p_new_fp32 - p_0| elementwise (updates only damped).
+    # This is a PER-FOLD guarantee: a signed m shrunk toward zero on fold i
+    # can overshoot the fp32 trajectory past zero when fold i+1's gradient
+    # flips sign, so the harness checks it on single-fold mini-batches;
+    # multi-fold drift is bounded by drift_lr instead.
+    never_amplify: bool
+    # every column row-indexed -> bitwise row-range shard parity
+    row_local: bool
+    # adama vs adama_layerwise engine parity on the same codec pair
+    engine_tol: float
+
+
 class MomentCodec:
-    """Protocol for second-moment codecs. A codec owns (a) the storage
-    layout of v's arena columns and (b) the fused fold/apply kernels that
-    read and write them. `parts` is always a tuple of arrays so engines can
-    carry it through lax.scan without knowing the codec."""
+    """Host-side half of a codec: storage init/wrap/decode and the
+    codec-space decay. The kernel-side half (column list + fold/decode
+    fragments) is `self.kernel`, consumed by the fused_step builders.
+    `parts` is always a tuple of arrays so engines can carry it through
+    lax.scan without knowing the codec."""
 
     name: str = "?"
+    moment: str = "?"
+    conformance: Conformance = None
+
+    @property
+    def kernel(self):
+        from repro.kernels.fused_step import kernel_codec
+        return kernel_codec(self.moment, self.name)
 
     def init(self, layout: ArenaLayout):
         raise NotImplementedError
 
-    def parts_of(self, v) -> Tuple[jnp.ndarray, ...]:
+    def parts_of(self, state) -> Tuple[jnp.ndarray, ...]:
         raise NotImplementedError
 
     def wrap(self, layout: ArenaLayout, parts):
         raise NotImplementedError
 
     def decode(self, parts) -> jnp.ndarray:
+        """Full (rows, LANES) fp32 reconstruction (host/debug/parity)."""
+        rows = parts[0].shape[0]
+        return jnp.broadcast_to(self.kernel.decode(tuple(parts)),
+                                (rows, LANES))
+
+    def scale_state(self, state, c):
+        """state <- c * state, in codec space (begin-minibatch decay)."""
         raise NotImplementedError
 
-    def scale_state(self, v, c):
-        """v_hat <- c * v_hat, in codec space (begin-minibatch decay)."""
-        raise NotImplementedError
+    def begin_micro(self, parts, decay):
+        """Decay the REPLICATED (non-row-indexed) columns, once per
+        micro-batch. Row-indexed columns decay inside the fold kernel (each
+        row is folded exactly once per micro-batch); a shared column would
+        be decayed once per slice fold, so it is decayed here instead.
+        Identity for codecs whose state is fully row-indexed."""
+        del decay
+        return parts
 
-    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
-        raise NotImplementedError
-
-    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
-                   scale=1.0, decay=None):
-        raise NotImplementedError
-
-    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
-        raise NotImplementedError
+    def psum_replicated(self, parts, axis_names):
+        """Sum the replicated columns' per-shard partials across a device
+        axis (ZeRO-1 row-range schedule). Identity for row-local codecs."""
+        del axis_names
+        return parts
 
 
 class Fp32Codec(MomentCodec):
-    """Identity codec: v is a full-precision Arena (PR-1 behavior)."""
+    """Identity codec: the moment is a full-precision Arena (PR-1 form)."""
 
     name = "fp32"
+    conformance = Conformance(drift_lr=0.0, never_amplify=True,
+                              row_local=True, engine_tol=5e-6)
+
+    def __init__(self, moment: str):
+        self.moment = moment
 
     def init(self, layout):
         return Arena.zeros(layout)
 
-    def parts_of(self, v):
-        return (v.data,)
+    def parts_of(self, state):
+        return (state.data,)
 
     def wrap(self, layout, parts):
         return Arena(parts[0], layout)
 
-    def decode(self, parts):
-        return parts[0]
-
-    def scale_state(self, v, c):
-        return v.with_data(c * v.data)
-
-    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
-        from repro.kernels import fused_step
-        m, v = fused_step.arena_fold(m, parts[0], g, beta1=beta1, beta2=beta2,
-                                     scale=scale, decay=decay)
-        return m, (v,)
-
-    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
-                   scale=1.0, decay=None):
-        from repro.kernels import fused_step
-        m, v = fused_step.arena_fold_slice(m, parts[0], g, row_offset,
-                                           beta1=beta1, beta2=beta2,
-                                           block=block, scale=scale,
-                                           decay=decay)
-        return m, (v,)
-
-    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
-        from repro.kernels import fused_step
-        return fused_step.arena_apply(p, m, parts[0], lr=lr, bc1=bc1, bc2=bc2,
-                                      eps=eps, weight_decay=weight_decay)
+    def scale_state(self, state, c):
+        return state.with_data(c * state.data)
 
 
 class Int8Codec(MomentCodec):
-    """v as (rows, LANES) int8 codes + (rows, 1) fp32 per-row scales."""
+    """(rows, LANES) int8 codes + (rows, 1) fp32 per-row scales. The m
+    variant quantizes toward zero over [-127, 127]; the v variant CEILs
+    over [0, 127] — both one-sided, both never-amplify."""
 
     name = "int8"
+    conformance = Conformance(drift_lr=2.0, never_amplify=True,
+                              row_local=True, engine_tol=2e-3)
+
+    def __init__(self, moment: str):
+        self.moment = moment
 
     def init(self, layout):
         return MomentState((jnp.zeros((layout.rows, LANES), jnp.int8),
                             jnp.zeros((layout.rows, 1), jnp.float32)),
-                           layout, self.name)
+                           layout, self.name, self.moment)
 
-    def parts_of(self, v):
-        return v.parts
+    def parts_of(self, state):
+        return state.parts
 
     def wrap(self, layout, parts):
-        return MomentState(tuple(parts), layout, self.name)
+        return MomentState(tuple(parts), layout, self.name, self.moment)
 
-    def decode(self, parts):
-        from repro.kernels.adama_accum import q8_decode_rows
-        return q8_decode_rows(parts[0], parts[1])
-
-    def scale_state(self, v, c):
+    def scale_state(self, state, c):
         # c * (q * s) == q * (c * s): decay touches only the scale column
-        return v.with_parts((v.parts[0], c * v.parts[1]))
-
-    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
-        from repro.kernels import fused_step
-        m, vq, vs = fused_step.arena_fold_q8(m, parts[0], parts[1], g,
-                                             beta1=beta1, beta2=beta2,
-                                             scale=scale, decay=decay)
-        return m, (vq, vs)
-
-    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
-                   scale=1.0, decay=None):
-        from repro.kernels import fused_step
-        m, vq, vs = fused_step.arena_fold_slice_q8(
-            m, parts[0], parts[1], g, row_offset, beta1=beta1, beta2=beta2,
-            block=block, scale=scale, decay=decay)
-        return m, (vq, vs)
-
-    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
-        from repro.kernels import fused_step
-        return fused_step.arena_apply_q8(p, m, parts[0], parts[1], lr=lr,
-                                         bc1=bc1, bc2=bc2, eps=eps,
-                                         weight_decay=weight_decay)
+        return state.with_parts((state.parts[0], c * state.parts[1]))
 
 
 class FactoredCodec(MomentCodec):
     """v as a single (rows, 1) fp32 per-row statistic (SM3-style)."""
 
     name = "factored"
+    conformance = Conformance(drift_lr=None, never_amplify=True,
+                              row_local=True, engine_tol=5e-6)
+
+    moment = "v"
 
     def init(self, layout):
         return MomentState((jnp.zeros((layout.rows, 1), jnp.float32),),
-                           layout, self.name)
+                           layout, self.name, self.moment)
 
-    def parts_of(self, v):
-        return v.parts
+    def parts_of(self, state):
+        return state.parts
 
     def wrap(self, layout, parts):
-        return MomentState(tuple(parts), layout, self.name)
+        return MomentState(tuple(parts), layout, self.name, self.moment)
 
-    def decode(self, parts):
-        return jnp.broadcast_to(parts[0], (parts[0].shape[0], LANES))
-
-    def scale_state(self, v, c):
-        return v.with_parts((c * v.parts[0],))
-
-    def fold(self, m, parts, g, *, beta1, beta2, scale=1.0, decay=None):
-        from repro.kernels import fused_step
-        m, vr = fused_step.arena_fold_fac(m, parts[0], g, beta1=beta1,
-                                          beta2=beta2, scale=scale,
-                                          decay=decay)
-        return m, (vr,)
-
-    def fold_slice(self, m, parts, g, row_offset, *, beta1, beta2, block,
-                   scale=1.0, decay=None):
-        from repro.kernels import fused_step
-        m, vr = fused_step.arena_fold_slice_fac(
-            m, parts[0], g, row_offset, beta1=beta1, beta2=beta2,
-            block=block, scale=scale, decay=decay)
-        return m, (vr,)
-
-    def apply(self, p, m, parts, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
-        from repro.kernels import fused_step
-        return fused_step.arena_apply_fac(p, m, parts[0], lr=lr, bc1=bc1,
-                                          bc2=bc2, eps=eps,
-                                          weight_decay=weight_decay)
+    def scale_state(self, state, c):
+        return state.with_parts((c * state.parts[0],))
 
 
-_CODECS = {c.name: c for c in (Fp32Codec(), Int8Codec(), FactoredCodec())}
+class RowColCodec(MomentCodec):
+    """v as its rank-1 marginals: (rows, 1) row sums + (1, LANES) column
+    sums, v_hat = vr vc^T / sum(vc). The rank-1 reconstruction can sit
+    UNDER the true v elementwise (exact only for rank-one v), so this codec
+    does NOT declare never-amplify; its contracts are the Adafactor ones —
+    exact marginals and exact reconstruction of rank-one moments (pinned by
+    tests/test_codec_properties.py)."""
+
+    name = "rowcol"
+    conformance = Conformance(drift_lr=None, never_amplify=False,
+                              row_local=False, engine_tol=2e-3)
+
+    moment = "v"
+
+    def init(self, layout):
+        return MomentState((jnp.zeros((layout.rows, 1), jnp.float32),
+                            jnp.zeros((1, LANES), jnp.float32)),
+                           layout, self.name, self.moment)
+
+    def parts_of(self, state):
+        return state.parts
+
+    def wrap(self, layout, parts):
+        return MomentState(tuple(parts), layout, self.name, self.moment)
+
+    def scale_state(self, state, c):
+        # both marginals are linear in v
+        return state.with_parts((c * state.parts[0], c * state.parts[1]))
+
+    def begin_micro(self, parts, decay):
+        return (parts[0], decay * parts[1])
+
+    def psum_replicated(self, parts, axis_names):
+        return (parts[0], jax.lax.psum(parts[1], axis_names))
 
 
-def get_codec(name: str) -> MomentCodec:
+M_CODECS = {c.name: c for c in (Fp32Codec("m"), Int8Codec("m"))}
+V_CODECS = {c.name: c for c in (Fp32Codec("v"), Int8Codec("v"),
+                                FactoredCodec(), RowColCodec())}
+_REGISTRIES = {"m": M_CODECS, "v": V_CODECS}
+
+
+def get_codec(name: str, moment: str = "v") -> MomentCodec:
+    if isinstance(name, MomentCodec):
+        return name
+    reg = _REGISTRIES[moment]
     try:
-        return _CODECS[name]
+        return reg[name]
     except KeyError:
-        raise KeyError(f"unknown state codec {name!r}; "
-                       f"available: {sorted(_CODECS)}") from None
+        raise KeyError(f"unknown {moment}-codec {name!r}; "
+                       f"available: {sorted(reg)}") from None
 
 
-def codec_of(v) -> MomentCodec:
-    """The codec backing a second-moment state object."""
-    if isinstance(v, Arena):
-        return _CODECS["fp32"]
-    if isinstance(v, MomentState):
-        return _CODECS[v.codec]
-    raise TypeError(f"not an arena-backed second moment: {type(v)!r}")
+def codec_of(state, moment: str = "v") -> MomentCodec:
+    """The codec backing an arena-backed moment state object."""
+    if isinstance(state, Arena):
+        return _REGISTRIES[moment]["fp32"]
+    if isinstance(state, MomentState):
+        return _REGISTRIES[state.moment][state.codec]
+    raise TypeError(f"not an arena-backed moment: {type(state)!r}")
+
+
+def is_arena_backed(state) -> bool:
+    return isinstance(state, (Arena, MomentState))
+
+
+def registered_combinations() -> Tuple[Tuple[str, str], ...]:
+    """Every (m_codec, v_codec) pair the store supports — the conformance
+    suite, kernel_bench guards and capability matrix all iterate this."""
+    return tuple((m, v) for m in sorted(M_CODECS) for v in sorted(V_CODECS))
+
+
+# ---------------------------------------------------------------------------
+# Pair-level fused ops: ONE kernel updates both moments
+# ---------------------------------------------------------------------------
+
+
+def _decay_pair(decay):
+    return (1.0, 1.0) if decay is None else decay
+
+
+def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
+         decay=None, replicated_decay=None):
+    """Whole-arena fold of one micro-batch's gradient arena into both
+    moments: one fused pallas_call. `decay=(dm, dv)` fuses the
+    begin-minibatch decay (row-indexed columns decay in-kernel; replicated
+    columns decay here, outside). `replicated_decay` overrides the decay of
+    replicated columns only — the ZeRO-1 schedule passes dv/M so that the
+    per-shard partial column sums psum to the exact global statistic."""
+    mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
+    if decay is not None or replicated_decay is not None:
+        rdm, rdv = _decay_pair(decay if replicated_decay is None
+                               else replicated_decay)
+        m_parts = mc.begin_micro(tuple(m_parts), rdm)
+        v_parts = vc.begin_micro(tuple(v_parts), rdv)
+    from repro.kernels import fused_step
+    return fused_step.arena_fold(tuple(m_parts), tuple(v_parts), g,
+                                 beta1=beta1, beta2=beta2, scale=scale,
+                                 decay=decay, m_codec=mc.kernel,
+                                 v_codec=vc.kernel)
+
+
+def fold_slice(m_codec, v_codec, m_parts, v_parts, g, row_offset, *,
+               beta1, beta2, block, scale=1.0, decay=None):
+    """Fold a gradient slab into rows [row_offset, row_offset+rows_g).
+    Unlike `fold`, replicated columns are NOT decayed here — a micro-batch
+    is many slice folds, so the engine decays them once per micro-batch via
+    `codec.begin_micro` (see core/layerwise.py)."""
+    mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
+    from repro.kernels import fused_step
+    return fused_step.arena_fold_slice(tuple(m_parts), tuple(v_parts), g,
+                                       row_offset, beta1=beta1, beta2=beta2,
+                                       block=block, scale=scale, decay=decay,
+                                       m_codec=mc.kernel, v_codec=vc.kernel)
+
+
+def apply(m_codec, v_codec, p, m_parts, v_parts, *, lr, bc1, bc2, eps=1e-8,
+          weight_decay=0.0):
+    """Bias-corrected apply over the packed param arena, decoding both
+    moments in-pass; p aliased in-place."""
+    mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
+    from repro.kernels import fused_step
+    return fused_step.arena_apply(p, tuple(m_parts), tuple(v_parts), lr=lr,
+                                  bc1=bc1, bc2=bc2, eps=eps,
+                                  weight_decay=weight_decay,
+                                  m_codec=mc.kernel, v_codec=vc.kernel)
+
+
+# ---------------------------------------------------------------------------
+# State-dict-level helpers (state = {"m": ..., "v": ..., "step": ...})
+# ---------------------------------------------------------------------------
+
+
+def state_codecs(state) -> Tuple[MomentCodec, MomentCodec]:
+    return codec_of(state["m"], "m"), codec_of(state["v"], "v")
+
+
+def fold_state(state, g, *, beta1, beta2, scale=1.0, decay=None,
+               replicated_decay=None):
+    """One fused fold of a packed gradient arena into the state dict."""
+    mc, vc = state_codecs(state)
+    layout = state["m"].layout
+    m_parts, v_parts = fold(mc, vc, mc.parts_of(state["m"]),
+                            vc.parts_of(state["v"]), g, beta1=beta1,
+                            beta2=beta2, scale=scale, decay=decay,
+                            replicated_decay=replicated_decay)
+    return {"m": mc.wrap(layout, m_parts), "v": vc.wrap(layout, v_parts),
+            "step": state["step"]}
+
+
+def apply_state(p, state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
+    """One fused bias-corrected apply of the state dict onto a param arena."""
+    mc, vc = state_codecs(state)
+    return apply(mc, vc, p, mc.parts_of(state["m"]), vc.parts_of(state["v"]),
+                 lr=lr, bc1=bc1, bc2=bc2, eps=eps, weight_decay=weight_decay)
+
+
+def row_indexed_mask(state):
+    """{"m": ..., "v": ...} mirroring the state's pytree structure with a
+    bool per codec column: True where the column is ROW-INDEXED (shards and
+    slices with the arena rows), False for replicated accumulators (e.g.
+    rowcol's column sums). Derived from each codec's DECLARED kernel
+    columns — the single source of truth the sharding sites (pjit
+    constraints, shard_map specs, GSPMD pspecs) must agree with."""
+    mc, vc = state_codecs(state)
+
+    def mask(codec, s):
+        flags = [c.row_indexed for c in codec.kernel.cols]
+        return jax.tree.unflatten(jax.tree.structure(s), flags)
+
+    return {"m": mask(mc, state["m"]), "v": mask(vc, state["v"])}
+
+
+def psum_replicated_state(state, axis_names):
+    """Combine per-shard partials of replicated codec columns (a no-op for
+    fully row-local codec pairs) — the ZeRO-1 schedule calls this once per
+    mini-batch, before the apply."""
+    mc, vc = state_codecs(state)
+    layout = state["m"].layout
+    return {"m": mc.wrap(layout, mc.psum_replicated(
+                mc.parts_of(state["m"]), axis_names)),
+            "v": vc.wrap(layout, vc.psum_replicated(
+                vc.parts_of(state["v"]), axis_names)),
+            "step": state["step"]}
 
 
 def optimizer_state_bytes(state) -> int:

@@ -42,8 +42,15 @@ def q8_encode_rows(v):
     update without bound (a tiny v in a row with a large rowmax would
     quantize to code 0 and divide by eps). Ceil gives the same never-amplify
     guarantee as the factored codec's SM3 upper bound, at the cost of
-    damping small-v elements. Error: 0 <= v_hat - v <= scale = rowmax/127."""
-    s = jnp.max(v, axis=-1, keepdims=True) * (1.0 / Q8_MAX)
+    damping small-v elements. Error: 0 <= v_hat - v <= scale = rowmax/127.
+
+    Denormal rows: XLA flushes denormal RESULTS to zero (CPU and TPU), so a
+    row whose rowmax/127 is denormal would get scale 0 and silently decode
+    to zeros — amplifying. The fallback scale is rowmax itself (codes
+    collapse to {0, 1}), keeping the one-sided error <= scale contract."""
+    rowmax = jnp.max(v, axis=-1, keepdims=True)
+    s = rowmax * (1.0 / Q8_MAX)
+    s = jnp.where((s == 0.0) & (rowmax > 0.0), rowmax, s)
     q = jnp.clip(jnp.ceil(v / jnp.where(s > 0.0, s, 1.0)), 0.0, Q8_MAX)
     return q.astype(jnp.int8), s
 
@@ -51,6 +58,47 @@ def q8_encode_rows(v):
 def q8_decode_rows(q, s):
     """Inverse of q8_encode_rows (exact for the stored codes)."""
     return q.astype(jnp.float32) * s
+
+
+def q8s_encode_rows(m):
+    """(R, LANES) fp32, SIGNED -> ((R, LANES) int8, (R, 1) fp32 scales).
+
+    The first-moment counterpart of q8_encode_rows: per-row symmetric
+    quantization over codes [-127, 127] with rounding TOWARD ZERO, so
+    |m_hat| <= |m| always (sign preserved, magnitude only ever shrunk).
+    m sits in the Adam numerator, so shrinking |m| can only DAMP the
+    parameter update — the same never-amplify contract the v codecs give,
+    from the opposite side of the division. Error: one-sided toward zero,
+    |m - m_hat| <= scale = rowmax(|m|)/127 per element per fold.
+
+    Denormal rows fall back to scale = rowmax (codes {-1, 0, 1}) exactly as
+    q8_encode_rows — truncation keeps |m_hat| <= |m| there too."""
+    rowmax = jnp.max(jnp.abs(m), axis=-1, keepdims=True)
+    s = rowmax * (1.0 / Q8_MAX)
+    s = jnp.where((s == 0.0) & (rowmax > 0.0), rowmax, s)
+    q = jnp.clip(jnp.trunc(m / jnp.where(s > 0.0, s, 1.0)), -Q8_MAX, Q8_MAX)
+    return q.astype(jnp.int8), s
+
+
+def q8s_decode_rows(q, s):
+    """Inverse of q8s_encode_rows (exact for the stored codes)."""
+    return q.astype(jnp.float32) * s
+
+
+def rowcol_decode(vr, vc):
+    """Rank-1 reconstruction of the arena second moment from its marginal
+    sums (Adafactor, Shazeer & Stern 2018): vr[i] = sum_j v[i, j] (row-
+    indexed, (R, 1)), vc[j] = sum_i v[i, j] ((1, LANES), replicated), and
+
+        v_hat[i, j] = vr[i] * vc[j] / sum_j vc[j].
+
+    Exact when v is rank one; marginals are always preserved exactly
+    (sum_j v_hat[i, :] == vr[i], sum_i v_hat[:, j] == vc[j]). Zero rows
+    (arena padding) reconstruct to exactly zero. The normalizer comes from
+    vc — not vr — so a row-range shard (which holds only its vr rows but
+    the full vc) reconstructs identically to the unsharded arena."""
+    total = jnp.sum(vc, axis=-1, keepdims=True)
+    return vr * (vc / jnp.maximum(total, jnp.float32(1e-30)))
 
 
 def fac_row_stat(g2):

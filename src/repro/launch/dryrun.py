@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import STATE_CODECS
+from repro.configs.base import M_CODECS, STATE_CODECS
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, OptimizerConfig,
                            get_config, shape_supported)
 from repro.core.accumulation import make_train_step
@@ -110,9 +110,16 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
             # whole size)
             from repro.core.state_store import optimizer_state_bytes
             info["optimizer_state_bytes"] = optimizer_state_bytes(aopt)
+            # per-moment breakdown: a regression in one codec must not hide
+            # behind the other moment's bytes in the lump sum
+            info["optimizer_state_m_bytes"] = optimizer_state_bytes(
+                aopt.get("m", ()))
+            info["optimizer_state_v_bytes"] = optimizer_state_bytes(
+                aopt.get("v", ()))
             info["optimizer_state_bytes_per_device"] = \
                 _sharded_bytes(aopt, ospecs, mesh)
             info["state_codec"] = opt.state_codec
+            info["m_codec"] = opt.m_codec
         osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
         batch = input_specs(cfg, shape)
         bspecs = rules.batch_pspecs(batch)
@@ -180,6 +187,8 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
             tag += "__pallas"
         if k == "extra_opt" and v and v.get("arena"):
             tag += f"__arena-{v.get('state_codec', 'fp32')}"
+            if v.get("m_codec", "fp32") != "fp32":
+                tag += f"__m-{v['m_codec']}"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     info = {}
@@ -275,13 +284,16 @@ def main():
     ap.add_argument("--state-codec", default="fp32",
                     choices=list(STATE_CODECS),
                     help="second-moment codec over the arena")
+    ap.add_argument("--m-codec", default="fp32", choices=list(M_CODECS),
+                    help="first-moment codec over the arena")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
     extra_opt = None
-    if args.arena or args.state_codec != "fp32":
-        extra_opt = {"arena": True, "state_codec": args.state_codec}
+    if args.arena or args.state_codec != "fp32" or args.m_codec != "fp32":
+        extra_opt = {"arena": True, "state_codec": args.state_codec,
+                     "m_codec": args.m_codec}
     kw = dict(engine=args.engine, accum=args.accum,
               micro_batches=args.micro_batches, fsdp=not args.no_fsdp,
               remat=not args.no_remat, zero1=args.zero1,

@@ -14,7 +14,7 @@ import dataclasses
 import jax
 
 from repro.configs import INPUT_SHAPES, InputShape, OptimizerConfig, RunConfig, get_config
-from repro.configs.base import STATE_CODECS
+from repro.configs.base import M_CODECS, STATE_CODECS
 from repro.optim import schedule as sched
 from repro.train.loop import train
 
@@ -42,6 +42,9 @@ def main():
                     choices=list(STATE_CODECS),
                     help="second-moment codec over the arena "
                          "(core/state_store.py); requires --arena")
+    ap.add_argument("--m-codec", default="fp32", choices=list(M_CODECS),
+                    help="first-moment codec over the arena "
+                         "(core/state_store.py); requires --arena")
     ap.add_argument("--zero-stage", type=int, default=0, choices=[0, 1],
                     help="ZeRO-1 optimizer-state sharding; with --arena the "
                          "state shards by row range (no-op on one device)")
@@ -60,7 +63,8 @@ def main():
             name=args.optimizer, accumulation=args.accumulation,
             micro_batches=args.micro_batches, lr=args.lr,
             use_pallas=args.use_pallas or args.arena, arena=args.arena,
-            state_codec=args.state_codec, zero_stage=args.zero_stage),
+            state_codec=args.state_codec, m_codec=args.m_codec,
+            zero_stage=args.zero_stage),
         shape=shape, seed=args.seed, steps=args.steps,
         log_every=args.log_every, checkpoint_dir=args.checkpoint_dir)
     lr_fn = sched.warmup_cosine(args.lr, args.warmup, args.steps)

@@ -184,17 +184,20 @@ class Rules:
         gets P(dp_axes, None), validated against the kernel block alignment
         by core/zero.py::shard_rows (falls back to replicated when the row
         count does not divide — rebuild with build_layout(n_shards=...))."""
-        from repro.core.arena import Arena
-        if isinstance(abstract_opt.get("m"), Arena):
+        from repro.core.state_store import is_arena_backed, row_indexed_mask
+        if is_arena_backed(abstract_opt.get("m")):
             from repro.core.zero import zero1_arena_pspec
             if zero1 or self.profile == "dp":
                 spec = zero1_arena_pspec(abstract_opt["m"].layout, self.mesh,
                                          self.dp_axes() or ("data",))
             else:
                 spec = P()
+            # only ROW-INDEXED columns (per the codec's declared column
+            # list) row-shard; replicated codec columns stay P()
+            mask = row_indexed_mask(abstract_opt)
             return {k: P() if k == "step" else
-                    jax.tree.map(lambda _: spec, v)
-                    for k, v in abstract_opt.items()}
+                    jax.tree.map(lambda ri: spec if ri else P(), mask[k])
+                    for k in abstract_opt}
         pspecs = self.params_pspecs(abstract_params)
         if self.profile == "dp":
             zero1 = True

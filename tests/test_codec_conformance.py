@@ -1,0 +1,307 @@
+"""Codec conformance harness: ONE parameterized suite that every registered
+(m_codec, v_codec) combination must pass. The contracts enforced here are
+the ones each codec DECLARES in its `Conformance` record
+(core/state_store.py) — a fifth codec is a registry entry plus declared
+tolerances, not new tests:
+
+  - Adam parity within the declared drift on bert_large / stablelm_1_6b
+    (and structural finiteness/update checks for statistic codecs that
+    declare no elementwise bound);
+  - never-amplify: |p_new - p_0| elementwise never exceeds the fp32
+    baseline's, when both codecs declare it;
+  - moment independence: the m columns are BITWISE independent of the
+    v codec and vice versa (the builder fuses both moments into one kernel;
+    this pins that the fragments do not interact);
+  - O(1) dispatch: 2 pallas_calls for the adama engine, 3 for layerwise,
+    for every combination;
+  - row-range shard parity: row-indexed columns bitwise, replicated
+    columns (declared row_local=False) via the documented sum-of-partials
+    contract within fp tolerance;
+  - adama vs adama_layerwise engine parity within the declared engine_tol;
+  - checkpoint round-trip, and REFUSAL to restore onto any other
+    combination (the treedef embeds the codec + moment aux data).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import batch_for, maxdiff, tiny
+from repro.configs import OptimizerConfig
+from repro.core import adama, arena, state_store
+from repro.core.accumulation import make_train_step
+from repro.core.state_store import get_codec, registered_combinations
+from repro.core.zero import shard_rows
+from repro.launch.hlo_analysis import count_jaxpr_primitives
+from repro.models.model import init_params
+from repro.train import checkpoint as ckpt
+
+COMBOS = registered_combinations()
+LR = 1e-3                                        # OptimizerConfig default
+
+
+def _conf(m_codec, v_codec):
+    return (get_codec(m_codec, "m").conformance,
+            get_codec(v_codec, "v").conformance)
+
+
+# ---------------------------------------------------------------------------
+# one engine run per (arch, combo, engine), cached across the whole module
+# ---------------------------------------------------------------------------
+
+_RUNS = {}
+
+
+def run_combo(arch, m_codec, v_codec, accum="adama", micro_batches=2):
+    key = (arch, m_codec, v_codec, accum, micro_batches)
+    if key not in _RUNS:
+        cfg = tiny(arch)
+        params = init_params(cfg, jax.random.key(0))
+        batch = batch_for(cfg, 4, 16)
+        oc = OptimizerConfig(name="adama", accumulation=accum,
+                             micro_batches=micro_batches, use_pallas=True,
+                             arena=True, state_codec=v_codec,
+                             m_codec=m_codec)
+        step, init = make_train_step(cfg, oc)
+        p, s, metrics = jax.jit(step)(params, init(params), batch)
+        _RUNS[key] = (params, p, s, metrics)
+    return _RUNS[key]
+
+
+# ---------------------------------------------------------------------------
+# Adam parity / never-amplify / moment independence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["bert_large", "stablelm_1_6b"])
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_adam_parity_within_declared_tolerance(arch, m_codec, v_codec):
+    """One adama-engine mini-batch per combination vs the fp32 x fp32
+    baseline: loss identical (the forward never sees the codec), params
+    finite and within the combination's declared drift when both codecs
+    declare one."""
+    params, p_f, s_f, met_f = run_combo(arch, "fp32", "fp32")
+    _, p_c, s_c, met_c = run_combo(arch, m_codec, v_codec)
+    assert np.isfinite(float(met_c["loss"]))
+    assert abs(float(met_f["loss"]) - float(met_c["loss"])) < 1e-6
+    if (m_codec, v_codec) != ("fp32", "fp32"):
+        assert maxdiff(params, p_c) > 0          # it does update
+    mc, vc = _conf(m_codec, v_codec)
+    if mc.drift_lr is not None and vc.drift_lr is not None:
+        assert maxdiff(p_f, p_c) <= (mc.drift_lr + vc.drift_lr) * LR + 1e-7, \
+            (m_codec, v_codec, maxdiff(p_f, p_c))
+
+
+@pytest.mark.parametrize("arch", ["bert_large", "stablelm_1_6b"])
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_never_amplify_when_declared(arch, m_codec, v_codec):
+    """Combinations whose codecs both declare never_amplify must produce
+    updates elementwise no larger than the fp32 baseline's: the int8 m
+    codec truncates |m| toward zero, the int8/factored v codecs only ever
+    over-estimate v — both sides can only shrink |m|/sqrt(v).
+
+    The guarantee is PER FOLD, so this runs a single-fold mini-batch: a
+    signed m shrunk toward zero on fold i can overshoot the fp32 value past
+    zero when fold i+1's gradient flips sign (v codecs, being monotone
+    accumulations of non-negatives, dominate across folds too). Multi-fold
+    drift is the drift_lr bound's job, not this one's."""
+    mc, vc = _conf(m_codec, v_codec)
+    if not (mc.never_amplify and vc.never_amplify):
+        pytest.skip(f"{m_codec} x {v_codec} does not declare never-amplify")
+    params, p_f, _, _ = run_combo(arch, "fp32", "fp32", micro_batches=1)
+    _, p_c, _, _ = run_combo(arch, m_codec, v_codec, micro_batches=1)
+    for a, b, p0 in zip(jax.tree.leaves(p_c), jax.tree.leaves(p_f),
+                        jax.tree.leaves(params)):
+        da = np.abs(np.asarray(a, np.float32) - np.asarray(p0, np.float32))
+        db = np.abs(np.asarray(b, np.float32) - np.asarray(p0, np.float32))
+        assert (da <= db + 1e-8).all(), (m_codec, v_codec)
+
+
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_moments_are_codec_independent(m_codec, v_codec):
+    """m's update never reads v and vice versa: every combination's m
+    columns must be BITWISE the (m_codec, fp32) run's, and its v columns
+    bitwise the (fp32, v_codec) run's — pinning that the builder's fused
+    kernel keeps the two codec fragments independent."""
+    _, _, s_c, _ = run_combo("stablelm_1_6b", m_codec, v_codec)
+    _, _, s_m, _ = run_combo("stablelm_1_6b", m_codec, "fp32")
+    _, _, s_v, _ = run_combo("stablelm_1_6b", "fp32", v_codec)
+    mc = state_store.codec_of(s_c["m"], "m")
+    vc = state_store.codec_of(s_c["v"], "v")
+    for a, b in zip(mc.parts_of(s_c["m"]), mc.parts_of(s_m["m"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(vc.parts_of(s_c["v"]), vc.parts_of(s_v["v"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# O(1) dispatch + engine parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_dispatch_count_constant_per_combination(m_codec, v_codec):
+    """Every combination keeps the arena's O(1) contract: 1 fold (in the
+    scan body) + 1 apply for the adama engine; stacks+rest+apply for
+    layerwise. The codec transforms are fused, never an extra kernel."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    for accum, want in (("adama", 2), ("adama_layerwise", 3)):
+        oc = OptimizerConfig(name="adama", accumulation=accum,
+                             micro_batches=2, use_pallas=True, arena=True,
+                             state_codec=v_codec, m_codec=m_codec)
+        step, init = make_train_step(cfg, oc)
+        jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
+        n = count_jaxpr_primitives(jaxpr, "pallas_call")
+        assert n == want, (m_codec, v_codec, accum, n)
+
+
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_layerwise_engine_matches_adama(m_codec, v_codec):
+    """Algorithm 2 (per-layer slice folds) and Algorithm 1 (whole-arena
+    folds) agree within the combination's declared engine tolerance (codec
+    rounding can differ across fold granularities: a ~1e-7 autodiff-path
+    difference can flip a quantization boundary; rowcol's column sums
+    accumulate in a different order)."""
+    _, p_a, s_a, _ = run_combo("stablelm_1_6b", m_codec, v_codec, "adama")
+    _, p_l, s_l, met_l = run_combo("stablelm_1_6b", m_codec, v_codec,
+                                   "adama_layerwise")
+    assert np.isfinite(float(met_l["loss"]))
+    mc, vc = _conf(m_codec, v_codec)
+    tol = max(mc.engine_tol, vc.engine_tol)
+    assert maxdiff(p_a, p_l) < tol, (m_codec, v_codec, maxdiff(p_a, p_l))
+    assert int(s_l["step"]) == int(s_a["step"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# row-range shard parity
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "a": jax.random.normal(jax.random.key(1), (7,), jnp.float32),
+        "b": jax.random.normal(jax.random.key(2), (300, 150)).astype(
+            jnp.bfloat16),
+        "blocks": {
+            "w": jax.random.normal(jax.random.key(3), (3, 257, 9),
+                                   jnp.float32),
+        },
+    }
+
+
+def _shard_parts(parts, codec, sl):
+    """A shard's view: row-indexed columns sliced, replicated columns whole."""
+    return tuple(x[sl] if c.row_indexed else x
+                 for x, c in zip(parts, codec.kernel.cols))
+
+
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_row_shard_parity_per_declared_contract(m_codec, v_codec):
+    """Folding+applying each row-range shard separately reproduces the
+    whole-arena kernels: BITWISE on every row-indexed column (the declared
+    row_local contract), and for replicated columns (rowcol's column sums)
+    via the documented schedule — each shard folds with the replicated
+    decay pre-divided by the shard count, and the partials SUM to the
+    whole-arena statistic (the psum core/dp_shardmap.py issues once per
+    mini-batch) within fp tolerance."""
+    n_shards = 4
+    mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
+    tree = _tree()
+    lay = arena.build_layout(tree, n_shards=n_shards)
+    shards = shard_rows(lay, n_shards)
+    g = arena.pack(tree, lay)
+    p = arena.pack(jax.tree.map(lambda x: x * 0.5, tree), lay)
+    m0 = mc.parts_of(mc.init(lay))
+    v0 = vc.parts_of(vc.init(lay))
+    # seed both moments with one fold so scales/statistics are non-trivial
+    m0, v0 = state_store.fold(mc, vc, m0, v0, 0.1 * g, beta1=0.9, beta2=0.999)
+
+    decay = (0.9, 0.999)
+    whole_m, whole_v = state_store.fold(mc, vc, m0, v0, g, beta1=0.9,
+                                        beta2=0.999, decay=decay)
+    whole_p = state_store.apply(mc, vc, p, whole_m, whole_v, lr=LR,
+                                bc1=0.19, bc2=0.002)
+
+    parts_m, parts_v, parts_p = [], [], []
+    for sh in shards:
+        sl = slice(sh.start, sh.stop)
+        # replicated columns: decay / n_shards so the partials psum exactly
+        rep = (decay[0], decay[1] / n_shards)
+        ms, vs = state_store.fold(mc, vc, _shard_parts(m0, mc, sl),
+                                  _shard_parts(v0, vc, sl), g[sl],
+                                  beta1=0.9, beta2=0.999, decay=decay,
+                                  replicated_decay=rep)
+        parts_m.append(ms)
+        parts_v.append(vs)
+        parts_p.append((sh, ms, vs))
+
+    def check(codec, whole, shard_list):
+        for i, col in enumerate(codec.kernel.cols):
+            got_parts = [s[i] for s in shard_list]
+            if col.row_indexed:
+                np.testing.assert_array_equal(
+                    np.asarray(jnp.concatenate(got_parts)),
+                    np.asarray(whole[i]))
+            else:
+                summed = np.sum([np.asarray(x, np.float64)
+                                 for x in got_parts], axis=0)
+                np.testing.assert_allclose(summed, np.asarray(whole[i]),
+                                           rtol=1e-5, atol=1e-12)
+
+    check(mc, whole_m, parts_m)
+    check(vc, whole_v, parts_v)
+
+    # apply on each shard with the COMBINED replicated columns (post-psum)
+    applied = []
+    for sh, ms, vs in parts_p:
+        sl = slice(sh.start, sh.stop)
+        vs_comb = tuple(
+            x if c.row_indexed else whole_v[i]
+            for i, (x, c) in enumerate(zip(vs, vc.kernel.cols)))
+        applied.append(state_store.apply(mc, vc, p[sl], ms, vs_comb, lr=LR,
+                                         bc1=0.19, bc2=0.002))
+    got = np.asarray(jnp.concatenate(applied))
+    want = np.asarray(whole_p)
+    if mc.conformance.row_local and vc.conformance.row_local:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip + cross-combination refusal
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_checkpoint_roundtrip_and_cross_combo_refusal(m_codec, v_codec,
+                                                      tmp_path):
+    """Every combination's state survives save/restore bit-for-bit onto the
+    eval_shape abstract tree, and restoring onto ANY other combination
+    refuses loudly (the treedef string embeds codec + moment aux data)."""
+    tree = _tree()
+    st = adama.init_arena(tree, codec=v_codec, m_codec=m_codec)
+    st = adama.accumulate(st, jax.tree.map(lambda x: 0.3 * x, tree),
+                          0.9, 0.999)
+    full = {"params": tree, "opt": st}
+    ckpt.save(str(tmp_path), 5, full)
+    restored = ckpt.restore(str(tmp_path), 5, jax.eval_shape(lambda: full))
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert restored["opt"]["m"].layout == st["m"].layout
+    assert isinstance(restored["opt"]["v"], type(st["v"]))
+    # restoring onto ANY other combination refuses ("leaf count mismatch"
+    # when the column counts differ, "structure mismatch" otherwise — the
+    # treedef string embeds the codec + moment aux data)
+    for om, ov in COMBOS:
+        if (om, ov) == (m_codec, v_codec):
+            continue
+        target = {"params": tree,
+                  "opt": adama.init_arena(tree, codec=ov, m_codec=om)}
+        with pytest.raises(ValueError, match="mismatch"):
+            ckpt.restore(str(tmp_path), 5,
+                         jax.eval_shape(lambda t=target: t))

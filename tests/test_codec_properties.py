@@ -1,0 +1,152 @@
+"""Property-based tests for the codec primitives (via _hypothesis_compat:
+a deterministic boundary grid when hypothesis is absent, real randomized
+exploration when installed):
+
+  - int8 v (unsigned, CEIL): quantize-dequantize round-trip bounds,
+    one-sided error, zero rows, denormal scales;
+  - int8 m (signed, TOWARD ZERO): magnitude never grows, sign preserved,
+    one-sided-toward-zero error, all-negative rows, denormal scales;
+  - rowcol: rank-1 reconstruction is exact, marginals are preserved
+    identically, and the reconstruction error against the dense reference
+    is bounded by min(row sum, column sum) elementwise.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels.adama_accum import (LANES, Q8_MAX, q8_decode_rows,
+                                       q8_encode_rows, q8s_encode_rows,
+                                       rowcol_decode)
+
+ROWS = 6
+
+
+def _rows_matrix(seed: int, scale_exp: float, signed: bool,
+                 zero_row: bool, all_negative: bool) -> np.ndarray:
+    """A (ROWS, LANES) matrix with magnitudes in [0.2, 1) * 10**scale_exp
+    (kept NORMAL in fp32 — values below ~1.2e-38 are flushed to zero by XLA
+    itself, for every codec alike), optionally with a zero row and an
+    all-negative row. scale_exp=-37 makes the quantizer SCALE rowmax/127
+    denormal, exercising the flush-to-zero fallback in q8*_encode_rows."""
+    rng = np.random.RandomState(seed)
+    x = (0.2 + 0.8 * rng.rand(ROWS, LANES).astype(np.float32)) * \
+        np.float32(10.0) ** np.float32(scale_exp)
+    if signed:
+        x = x * rng.choice([-1.0, 1.0], size=x.shape).astype(np.float32)
+    if all_negative:
+        x[1] = -np.abs(x[1])
+    if zero_row:
+        x[0] = 0.0
+    return x
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale_exp=st.floats(-37.0, 3.0),
+       zero_row=st.booleans())
+def test_q8_unsigned_roundtrip_bounds(seed, scale_exp, zero_row):
+    """CEIL quantization of v: 0 <= v_hat - v <= rowmax/127 elementwise,
+    zero rows stay exactly zero, and re-encoding the decoded values is a
+    fixed point (the codes are exactly representable)."""
+    v = np.abs(_rows_matrix(seed, scale_exp, False, zero_row, False))
+    q, s = q8_encode_rows(jnp.asarray(v))
+    vhat = np.asarray(q8_decode_rows(q, s), np.float64)
+    s64 = np.asarray(s, np.float64)              # the DOCUMENTED bound:
+    err = vhat - v.astype(np.float64)            # error <= stored scale
+    assert np.isfinite(vhat).all()
+    assert (err >= -1e-6 * s64 - 1e-42).all(), err.min()
+    assert (err <= s64 * (1 + 1e-5) + 1e-42).all(), err.max()
+    # the stored scale is rowmax/127, EXCEPT where that flushes to zero
+    # (denormal): there the documented fallback is scale = rowmax
+    rowmax = v.max(axis=1, keepdims=True)
+    bound = rowmax / Q8_MAX
+    assert (s64 >= bound * (1 - 1e-5) - 1.5e-45).all()
+    assert (s64 <= rowmax * (1 + 1e-5) + 1.5e-45).all()
+    assert ((s64 > 0) == (rowmax > 0)).all()     # never silently zeroed
+    if zero_row:
+        assert (vhat[0] == 0).all() and float(np.asarray(s)[0, 0]) == 0.0
+    # idempotence: the decoded values re-encode to the same codes/scales
+    # (up to one code step / denormal ulps at the tiniest scales)
+    q2, s2 = q8_encode_rows(q8_decode_rows(q, s))
+    np.testing.assert_allclose(np.asarray(q2, np.int32),
+                               np.asarray(q, np.int32), atol=1)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s), rtol=1e-5,
+                               atol=1.5e-45)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale_exp=st.floats(-37.0, 3.0),
+       zero_row=st.booleans(),
+       all_negative=st.booleans())
+def test_q8_signed_never_grows_magnitude(seed, scale_exp, zero_row,
+                                         all_negative):
+    """TOWARD-ZERO quantization of m: |m_hat| <= |m| elementwise with the
+    sign preserved (or flushed to zero), error one-sided toward zero and
+    bounded by rowmax(|m|)/127 — including all-negative rows and
+    denormal-adjacent scales."""
+    m = _rows_matrix(seed, scale_exp, True, zero_row, all_negative)
+    q, s = q8s_encode_rows(jnp.asarray(m))
+    mhat = np.asarray(q8_decode_rows(q, s), np.float64)
+    m64 = m.astype(np.float64)
+    s64 = np.asarray(s, np.float64)
+    assert np.isfinite(mhat).all()
+    assert (np.abs(mhat) <= np.abs(m64) * (1 + 1e-6) + 1e-42).all()
+    assert (mhat * m64 >= 0).all()               # sign preserved or zeroed
+    assert (np.abs(m64 - mhat) <= s64 * (1 + 1e-5) + 1e-42).all()
+    rowmax = np.abs(m64).max(axis=1, keepdims=True)
+    assert (s64 >= rowmax / Q8_MAX * (1 - 1e-5) - 1.5e-45).all()
+    assert (s64 <= rowmax * (1 + 1e-5) + 1.5e-45).all()
+    assert ((s64 > 0) == (rowmax > 0)).all()     # never silently zeroed
+    if zero_row:
+        assert (mhat[0] == 0).all()
+    if all_negative:
+        assert (mhat[1] <= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale_exp=st.floats(-20.0, 3.0),
+       zero_row=st.booleans())
+def test_rowcol_rank1_reconstruction_exact(seed, scale_exp, zero_row):
+    """The Adafactor guarantee: when v IS rank one (an outer product of
+    non-negative vectors), the (row sums, column sums) marginals
+    reconstruct it exactly."""
+    rng = np.random.RandomState(seed)
+    r = rng.rand(ROWS).astype(np.float32) * np.float32(10.0) ** \
+        np.float32(scale_exp)
+    c = rng.rand(LANES).astype(np.float32)
+    if zero_row:
+        r[0] = 0.0
+    v = np.outer(r, c).astype(np.float32)
+    vr = v.sum(axis=1, keepdims=True)
+    vc = v.sum(axis=0, keepdims=True)
+    vhat = np.asarray(rowcol_decode(jnp.asarray(vr), jnp.asarray(vc)))
+    np.testing.assert_allclose(vhat, v, rtol=2e-4, atol=1e-30)
+    if zero_row:
+        assert (vhat[0] == 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale_exp=st.floats(-20.0, 3.0),
+       rank=st.integers(1, 8))
+def test_rowcol_marginals_and_error_bound(seed, scale_exp, rank):
+    """For GENERAL non-negative v the rank-1 reconstruction preserves both
+    marginals exactly and its elementwise error against the dense reference
+    is bounded: v and v_hat both lie in [0, min(vr_i, vc_j)], so
+    |v_hat - v| <= min(row sum, column sum)."""
+    rng = np.random.RandomState(seed)
+    scale = np.float64(10.0) ** np.float64(scale_exp)
+    v = sum(np.outer(rng.rand(ROWS), rng.rand(LANES)) for _ in range(rank))
+    v = (v * scale).astype(np.float64)
+    vr = v.sum(axis=1, keepdims=True)
+    vc = v.sum(axis=0, keepdims=True)
+    vhat = np.asarray(rowcol_decode(jnp.asarray(vr, jnp.float32),
+                                    jnp.asarray(vc, jnp.float32)), np.float64)
+    assert (vhat >= 0).all()
+    np.testing.assert_allclose(vhat.sum(axis=1), vr[:, 0], rtol=1e-3)
+    np.testing.assert_allclose(vhat.sum(axis=0), vc[0], rtol=1e-3)
+    cap = np.minimum(vr, vc)                     # broadcasts to (ROWS, LANES)
+    assert (np.abs(vhat - v) <= cap * (1 + 1e-3) + 1e-30).all()

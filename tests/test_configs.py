@@ -8,8 +8,9 @@ import itertools
 
 import pytest
 
-from repro.configs.base import (ACCUM_ENGINES, STATE_CODECS, ZERO_STAGES,
-                                OptimizerConfig, optimizer_capability,
+from repro.configs.base import (ACCUM_ENGINES, M_CODECS, STATE_CODECS,
+                                ZERO_STAGES, OptimizerConfig,
+                                optimizer_capability,
                                 validate_optimizer_config)
 
 
@@ -28,47 +29,63 @@ def test_default_config_is_valid():
 
 
 def test_matrix_dimensions_are_exported():
-    assert set(STATE_CODECS) == {"fp32", "int8", "factored"}
+    assert set(STATE_CODECS) == {"fp32", "int8", "factored", "rowcol"}
+    assert set(M_CODECS) == {"fp32", "int8"}
     assert set(ZERO_STAGES) == {0, 1}
     assert set(ACCUM_ENGINES) == {"ga", "adama", "adama_layerwise"}
 
 
+def test_matrix_matches_state_store_registry():
+    """The config-level codec tuples and the state_store registries are the
+    same sets — a codec registered in one place but not the other is a bug."""
+    from repro.core.state_store import M_CODECS as M_REG, V_CODECS as V_REG
+    assert set(STATE_CODECS) == set(V_REG)
+    assert set(M_CODECS) == set(M_REG)
+
+
+@pytest.mark.parametrize("m_codec", M_CODECS)
 @pytest.mark.parametrize("codec", STATE_CODECS)
 @pytest.mark.parametrize("zero", ZERO_STAGES)
 @pytest.mark.parametrize("engine", ACCUM_ENGINES)
-def test_full_matrix_arena(codec, zero, engine):
-    """With the arena on (use_pallas implied), EVERY codec x zero x engine
-    cell is supported for the adama optimizer — the whole point of row-range
-    sharding and row-indexed codec state."""
+def test_full_matrix_arena(m_codec, codec, zero, engine):
+    """With the arena on (use_pallas implied), EVERY m_codec x v_codec x
+    zero x engine cell is supported for the adama optimizer — the whole
+    point of row-range sharding and row-indexed codec state."""
     opt = OptimizerConfig(name="adama", accumulation=engine, arena=True,
-                          use_pallas=True, state_codec=codec, zero_stage=zero)
+                          use_pallas=True, state_codec=codec,
+                          m_codec=m_codec, zero_stage=zero)
     assert optimizer_capability(opt) is None
 
 
+@pytest.mark.parametrize("m_codec", M_CODECS)
 @pytest.mark.parametrize("codec", STATE_CODECS)
 @pytest.mark.parametrize("zero", ZERO_STAGES)
 @pytest.mark.parametrize("engine", ACCUM_ENGINES)
-def test_full_matrix_no_arena(codec, zero, engine):
+def test_full_matrix_no_arena(m_codec, codec, zero, engine):
     """Without the arena: fp32 everywhere; compressed codecs refuse (they
     are arena columns) and the message says how to fix it."""
     opt = _mk(name="adama", accumulation=engine, arena=False,
-              use_pallas=False, state_codec=codec, zero_stage=zero)
+              use_pallas=False, state_codec=codec, m_codec=m_codec,
+              zero_stage=zero)
     reason = optimizer_capability(opt)
-    if codec == "fp32":
+    if codec == "fp32" and m_codec == "fp32":
         assert reason is None
-    else:
+    elif codec != "fp32":
         assert "arena=True" in reason and "state_codec" in reason
+    else:
+        assert "arena=True" in reason and "m_codec" in reason
 
 
 def test_matrix_exhaustive_never_crashes():
     """optimizer_capability is total over the declared grid (plus the
     arena/use_pallas booleans): it returns None or a str, never raises."""
-    for codec, zero, engine, arena, pallas in itertools.product(
-            STATE_CODECS, ZERO_STAGES, ACCUM_ENGINES,
+    for codec, m_codec, zero, engine, arena, pallas in itertools.product(
+            STATE_CODECS, M_CODECS, ZERO_STAGES, ACCUM_ENGINES,
             (False, True), (False, True)):
         reason = optimizer_capability(_mk(
             name="adama", accumulation=engine, state_codec=codec,
-            zero_stage=zero, arena=arena, use_pallas=pallas))
+            m_codec=m_codec, zero_stage=zero, arena=arena,
+            use_pallas=pallas))
         assert reason is None or isinstance(reason, str)
 
 
@@ -95,11 +112,19 @@ def test_arena_zero1_is_now_supported():
 
 def test_unknown_values_rejected_with_alternatives():
     assert "expected one of" in optimizer_capability(_mk(state_codec="fp16"))
+    assert "expected one of" in optimizer_capability(_mk(m_codec="fp16"))
     assert "expected one of" in optimizer_capability(_mk(accumulation="nope"))
     reason = optimizer_capability(_mk(zero_stage=3))
     assert "zero_stage=3" in reason
     with pytest.raises(ValueError, match="state_codec"):
         OptimizerConfig(state_codec="fp16", arena=True, use_pallas=True)
+    with pytest.raises(ValueError, match="m_codec"):
+        OptimizerConfig(m_codec="factored", arena=True, use_pallas=True)
+
+
+def test_m_codec_without_arena_names_the_fix():
+    with pytest.raises(ValueError, match="arena=True"):
+        OptimizerConfig(m_codec="int8")
 
 
 def test_arena_ga_engine_is_adam_only():

@@ -96,8 +96,11 @@ def test_dp_zero1_row_range_schedule_all_codecs():
     """The ZeRO-1 row-range schedule (psum_scatter gradient fold on owned
     rows, dynamic-slice apply, param all-gather — dp_shardmap.py) matches
     single-device AdamA over the same global micro-batch grouping, for
-    every codec: fp32/factored to fp tolerance, int8 within its documented
-    quantization drift (<= 2*lr per step)."""
+    (m_codec, v_codec) combinations covering every codec: fp32/factored to
+    fp tolerance, int8 m/v within the documented quantization drift
+    (<= 2*lr per step), rowcol to fp tolerance (its replicated column sums
+    are per-shard partials combined by one psum per mini-batch — same math
+    as unsharded, different fp summation order)."""
     out = run_sub("""
         import dataclasses, jax, jax.numpy as jnp
         from repro.launch.mesh import make_mesh
@@ -119,11 +122,15 @@ def test_dp_zero1_row_range_schedule_all_codecs():
         idx = jnp.array([k*(B//M) + i*b + j
                          for i in range(N) for k in range(M) for j in range(b)])
         ref_batch = {kk: v[idx] for kk, v in batch.items()}
-        for codec, tol in (('fp32', 1e-5), ('int8', 2e-3), ('factored', 1e-5)):
+        combos = (('fp32', 'fp32', 1e-5), ('fp32', 'int8', 2e-3),
+                  ('fp32', 'factored', 1e-5), ('fp32', 'rowcol', 1e-4),
+                  ('int8', 'fp32', 2e-3), ('int8', 'int8', 4e-3),
+                  ('int8', 'rowcol', 2e-3))
+        for m_codec, v_codec, tol in combos:
             # reference: one device folds the SAME N global micro-batches
             oc = OptimizerConfig(name='adama', accumulation='adama',
                                  micro_batches=N, use_pallas=True, arena=True,
-                                 state_codec=codec)
+                                 state_codec=v_codec, m_codec=m_codec)
             step_s, init_s = make_train_step(cfg, oc)
             p_s, st_s, _ = jax.jit(step_s)(params, init_s(params), ref_batch)
             ocz = dataclasses.replace(oc, zero_stage=1)
@@ -133,12 +140,13 @@ def test_dp_zero1_row_range_schedule_all_codecs():
                 p_z, st_z, _ = jax.jit(step_z)(params, init_z(params), batch)
             d = max(float(jnp.max(jnp.abs(a - b)))
                     for a, b in zip(jax.tree.leaves(p_s), jax.tree.leaves(p_z)))
-            print('CODEC', codec, 'PDIFF', d)
-            assert d < tol, (codec, d, tol)
+            print('CODEC', m_codec + ':' + v_codec, 'PDIFF', d)
+            assert d < tol, (m_codec, v_codec, d, tol)
             assert int(st_z['step']) == 1
-    """, devices=4)
-    for codec in ("fp32", "int8", "factored"):
-        assert f"CODEC {codec}" in out
+    """, devices=4, timeout=1800)
+    for combo in ("fp32:fp32", "fp32:int8", "fp32:factored", "fp32:rowcol",
+                  "int8:fp32", "int8:int8", "int8:rowcol"):
+        assert f"CODEC {combo}" in out
 
 
 def test_dp_comm_schedule_volumes():

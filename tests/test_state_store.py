@@ -53,6 +53,12 @@ def _tree():
 # ---------------------------------------------------------------------------
 
 
+def _vfold(codec, m, v_parts, g, **kw):
+    """Pair-API fold with an fp32 first moment (the PR-2 shape of the API)."""
+    (m2,), vp = state_store.fold("fp32", codec, (m,), v_parts, g, **kw)
+    return m2, vp
+
+
 def test_int8_fold_within_quantization_bound():
     tree = _tree()
     lay = arena.build_layout(tree)
@@ -61,7 +67,8 @@ def test_int8_fold_within_quantization_bound():
     c = state_store.get_codec("int8")
     v = c.init(lay)
     b2, sc = 0.999, 0.5
-    m2, parts = c.fold(m, c.parts_of(v), g, beta1=0.9, beta2=b2, scale=sc)
+    m2, parts = _vfold("int8", m, c.parts_of(v), g, beta1=0.9, beta2=b2,
+                       scale=sc)
     vref = np.asarray((1 - b2) * jnp.square(sc * g))
     err = np.asarray(c.decode(parts)) - vref
     # ceil quantization: one-sided up to fp32 rounding noise at the
@@ -71,8 +78,8 @@ def test_int8_fold_within_quantization_bound():
     assert (err <= bound + 1e-12).all(), err.max()
     # m is NOT quantized: bit-for-bit the fp32 fold's m
     f = state_store.get_codec("fp32")
-    m_ref, _ = f.fold(m, f.parts_of(f.init(lay)), g, beta1=0.9, beta2=b2,
-                      scale=sc)
+    m_ref, _ = _vfold("fp32", m, f.parts_of(f.init(lay)), g, beta1=0.9,
+                      beta2=b2, scale=sc)
     np.testing.assert_array_equal(np.asarray(m2), np.asarray(m_ref))
 
 
@@ -82,7 +89,8 @@ def test_factored_fold_is_sm3_upper_bound():
     g = arena.pack(tree, lay)
     m = jnp.zeros_like(g)
     c = state_store.get_codec("factored")
-    _, parts = c.fold(m, c.parts_of(c.init(lay)), g, beta1=0.9, beta2=0.999)
+    _, parts = _vfold("factored", m, c.parts_of(c.init(lay)), g, beta1=0.9,
+                      beta2=0.999)
     vref = (1 - 0.999) * jnp.square(g)
     assert (np.asarray(c.decode(parts)) + 1e-12 >= np.asarray(vref)).all()
     # the bound is tight on each row's max element
@@ -90,7 +98,31 @@ def test_factored_fold_is_sm3_upper_bound():
                                np.max(np.asarray(vref), axis=1), **TOL)
 
 
-@pytest.mark.parametrize("codec", ["int8", "factored"])
+def test_rowcol_fold_keeps_exact_marginals():
+    """The rowcol codec's contract: vr/vc are the EXACT row/column sums of
+    the dense v it replaces, and the rank-1 reconstruction reproduces those
+    marginals identically (Adafactor's invariant)."""
+    tree = _tree()
+    lay = arena.build_layout(tree)
+    g = arena.pack(tree, lay)
+    m = jnp.zeros_like(g)
+    c = state_store.get_codec("rowcol")
+    _, parts = _vfold("rowcol", m, c.parts_of(c.init(lay)), g, beta1=0.9,
+                      beta2=0.999)
+    vref = np.asarray((1 - 0.999) * jnp.square(g), np.float64)
+    np.testing.assert_allclose(np.asarray(parts[0])[:, 0],
+                               vref.sum(axis=1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(parts[1])[0],
+                               vref.sum(axis=0), rtol=1e-4)
+    vhat = np.asarray(c.decode(parts), np.float64)
+    np.testing.assert_allclose(vhat.sum(axis=1), vref.sum(axis=1), rtol=1e-3)
+    assert (vhat >= 0).all()
+    # padding rows (zero row sums) reconstruct to exactly zero
+    zero_rows = vref.sum(axis=1) == 0
+    assert (vhat[zero_rows] == 0).all()
+
+
+@pytest.mark.parametrize("codec", ["int8", "factored", "rowcol"])
 def test_slice_fold_matches_whole_fold_and_preserves_rest(codec):
     tree = _tree()
     lay = arena.build_layout(tree)
@@ -98,7 +130,7 @@ def test_slice_fold_matches_whole_fold_and_preserves_rest(codec):
     m = jnp.zeros_like(g)
     c = state_store.get_codec(codec)
     v0 = c.parts_of(c.init(lay))
-    whole_m, whole_p = c.fold(m, v0, g, beta1=0.9, beta2=0.999)
+    whole_m, whole_p = _vfold(codec, m, v0, g, beta1=0.9, beta2=0.999)
     st = lay.stack("blocks")
     blk = lay.slice_block(st)
 
@@ -107,13 +139,20 @@ def test_slice_fold_matches_whole_fold_and_preserves_rest(codec):
         layer = jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(
             x, j, 0, keepdims=False), tree["blocks"])
         slab = arena.pack_layer(layer, st)
-        return c.fold_slice(md, vp, slab, st.row + j * st.layer_rows,
-                            beta1=0.9, beta2=0.999, block=blk), None
+        (md,), vp = state_store.fold_slice(
+            "fp32", codec, (md,), vp, slab, st.row + j * st.layer_rows,
+            beta1=0.9, beta2=0.999, block=blk)
+        return (md, vp), None
 
     (md, vp), _ = jax.jit(lambda md, vp: jax.lax.scan(
         fold_layer, (md, vp), jnp.arange(st.n_layers)))(m, v0)
     sl = slice(st.row, st.row + st.rows)
+    rows = lay.rows
     for i, (got, want) in enumerate(zip(vp, whole_p)):
+        if got.shape[0] != rows:          # replicated column (rowcol vc):
+            # the slices saw only the "blocks" rows; the whole fold saw the
+            # whole arena, whose other regions also contribute column sums
+            continue
         np.testing.assert_allclose(np.asarray(got, np.float32)[sl],
                                    np.asarray(want, np.float32)[sl], **TOL)
         # untouched rows pass through the aliased output bit-exactly
@@ -121,6 +160,12 @@ def test_slice_fold_matches_whole_fold_and_preserves_rest(codec):
                                       np.asarray(v0[i])[st.row + st.rows:])
     np.testing.assert_allclose(np.asarray(md)[sl], np.asarray(whole_m)[sl],
                                **TOL)
+    if codec == "rowcol":
+        # vc accumulated exactly the slices' column sums
+        g2 = np.asarray(jnp.square(g), np.float64)
+        want_vc = (1 - 0.999) * g2[sl].sum(axis=0)
+        np.testing.assert_allclose(np.asarray(vp[1])[0], want_vc, rtol=1e-3,
+                                   atol=1e-12)
 
 
 # ---------------------------------------------------------------------------
@@ -130,9 +175,12 @@ def test_slice_fold_matches_whole_fold_and_preserves_rest(codec):
 
 @pytest.mark.parametrize("codec", ["fp32", "int8", "factored"])
 def test_row_sharded_fold_and_apply_bitwise(codec):
-    """The acceptance bar: folding/applying each row-range shard separately
-    and concatenating is BITWISE identical to the whole-arena kernels — the
-    fold/apply are row-local, so ZeRO-1 row sharding changes nothing."""
+    """The acceptance bar for row-local codecs: folding/applying each
+    row-range shard separately and concatenating is BITWISE identical to
+    the whole-arena kernels — the fold/apply are row-local, so ZeRO-1 row
+    sharding changes nothing. (The rowcol codec's replicated column sums
+    are NOT row-local; their shard contract is pinned by
+    tests/test_codec_conformance.py instead.)"""
     n_shards = 4
     tree = _tree()
     lay = arena.build_layout(tree, n_shards=n_shards)
@@ -143,20 +191,22 @@ def test_row_sharded_fold_and_apply_bitwise(codec):
     c = state_store.get_codec(codec)
     v0 = c.parts_of(c.init(lay))
     # seed v with one fold so scales/statistics are non-trivial
-    m, v0 = c.fold(m, v0, g, beta1=0.9, beta2=0.999)
+    m, v0 = _vfold(codec, m, v0, g, beta1=0.9, beta2=0.999)
 
-    whole_m, whole_v = c.fold(m, v0, g, beta1=0.9, beta2=0.999,
+    whole_m, whole_v = _vfold(codec, m, v0, g, beta1=0.9, beta2=0.999,
                               decay=(0.9, 0.999))
-    whole_p = c.apply(p, whole_m, whole_v, lr=1e-3, bc1=0.19, bc2=0.002)
+    whole_p = state_store.apply("fp32", codec, p, (whole_m,), whole_v,
+                                lr=1e-3, bc1=0.19, bc2=0.002)
 
     parts_m, parts_v, parts_p = [], [], []
     for sh in shards:
         sl = slice(sh.start, sh.stop)
-        ms, vs = c.fold(m[sl], tuple(x[sl] for x in v0), g[sl],
+        ms, vs = _vfold(codec, m[sl], tuple(x[sl] for x in v0), g[sl],
                         beta1=0.9, beta2=0.999, decay=(0.9, 0.999))
         parts_m.append(ms)
         parts_v.append(vs)
-        parts_p.append(c.apply(p[sl], ms, vs, lr=1e-3, bc1=0.19, bc2=0.002))
+        parts_p.append(state_store.apply("fp32", codec, p[sl], (ms,), vs,
+                                         lr=1e-3, bc1=0.19, bc2=0.002))
     np.testing.assert_array_equal(np.asarray(jnp.concatenate(parts_m)),
                                   np.asarray(whole_m))
     for i in range(len(whole_v)):
