@@ -233,6 +233,18 @@ class OptimizerConfig:
     # first-moment codec (fp32 | int8 = signed per-row quantization rounding
     # toward zero, never-amplify); requires arena=True when not fp32.
     m_codec: str = "fp32"
+    # Bucketed ZeRO-1 schedule in the shard_map DP engine (core/buckets.py):
+    # stream per-layer / size-capped gradient reduce-scatters into the
+    # slice-fold instead of packing the FULL gradient arena before one
+    # monolithic psum_scatter. Peak live packed-gradient memory drops from
+    # the arena to one bucket and the collectives overlap the folds; results
+    # are bitwise identical to the full-pack schedule (row-local codecs).
+    # False restores the legacy full-pack schedule. Consulted only when
+    # zero_stage=1 under core/dp_shardmap.make_dp_train_step.
+    zero_bucketed: bool = True
+    # rest-region bucket cap in arena rows (0 = core/buckets.py default,
+    # 4096 rows = 16 MiB fp32 slab); per-layer stack buckets are uncapped.
+    zero_bucket_rows: int = 0
     grad_clip: Optional[float] = None
 
     def __post_init__(self):
@@ -259,7 +271,16 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
                         row-indexed, so row-range ZeRO composes; rowcol's
                         replicated column sums psum-combine per mini-batch).
       zero_stage=1    : per-leaf states shard via zero1_state_sharding;
-                        arena states shard by row range (shard_rows).
+                        arena states shard by row range (shard_rows). In
+                        the shard_map DP engine the row-range schedule is
+                        BUCKETED by default (zero_bucketed=True: per-layer /
+                        size-capped gradient reduce-scatters streamed into
+                        the slice-fold, state resident in partition order —
+                        core/buckets.py); zero_bucketed=False restores the
+                        full-arena pack+scatter. Both fields are inert
+                        outside that engine. The 'adama_layerwise' shard_map
+                        variant exists only in bucketed ZeRO-1 form (the
+                        stream IS its schedule).
       arena=True      : requires use_pallas=True; the 'ga' engine's fused
                         update supports the adam/adama optimizer only.
 
@@ -300,6 +321,9 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
         return (f"arena=True with accumulation='ga' supports the adam/adama "
                 f"optimizer only (the fused arena update is Adam), got "
                 f"name={opt.name!r}; drop arena or switch optimizer")
+    if opt.zero_bucket_rows < 0:
+        return (f"zero_bucket_rows must be >= 0 (0 = default cap), got "
+                f"{opt.zero_bucket_rows}")
     return None
 
 

@@ -28,6 +28,7 @@ single arena and a single dispatch.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -43,6 +44,14 @@ STACK_KEYS = ("blocks", "dense_blocks", "enc_blocks")
 
 ROW_ALIGN = 8        # fp32 sublane multiple: every region is 8-row aligned
 
+# Documented minimum row-block for offset-indexed slice-fold kernels.
+# slice_block() is a gcd over region stride / offset — with regions only
+# ROW_ALIGN-aligned it can legally collapse to 8 rows (32 KB blocks), a
+# ~10x launch-overhead hit on the per-layer fold path. build_layout pads
+# every region stride to a MIN_SLICE_BLOCK multiple so the gcd never drops
+# below it; slice_block warns if handed a layout that was not.
+MIN_SLICE_BLOCK = 64
+
 
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
@@ -50,6 +59,19 @@ def _cdiv(a: int, b: int) -> int:
 
 def _align(n: int, mult: int) -> int:
     return _cdiv(n, mult) * mult
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def region_grain(n_shards: int = 1) -> int:
+    """Row granularity of every region boundary/stride in a layout built
+    with `build_layout(tree, n_shards=...)`: the lcm of the slice-fold
+    block minimum and the ZeRO-1 scatter unit (each bucket of
+    core/buckets.py must split into `n_shards` equal ROW_ALIGN-aligned
+    slices, so per-layer strides must be n_shards*ROW_ALIGN-divisible)."""
+    return _lcm(MIN_SLICE_BLOCK, ROW_ALIGN * max(1, n_shards))
 
 
 @dataclass(frozen=True)
@@ -106,12 +128,25 @@ class ArenaLayout:
     def slice_block(self, spec) -> int:
         """Row-block for offset-indexed slice kernels over `spec` (a
         StackSpec or RestSpec): must divide both the region stride and every
-        possible row offset. All are ROW_ALIGN multiples, so >= 8."""
+        possible row offset. Layouts from build_layout pad every region to a
+        MIN_SLICE_BLOCK multiple, so this is >= MIN_SLICE_BLOCK there; a
+        hand-built layout with an odd stride can still gcd below it, which
+        is correct but destroys slice-fold throughput — warn instead of
+        silently dispatching tiny blocks."""
         if isinstance(spec, StackSpec):
             stride = spec.layer_rows
         else:
             stride = spec.rows
-        return math.gcd(math.gcd(stride, spec.row), BLOCK_ROWS)
+        blk = math.gcd(math.gcd(stride, spec.row), BLOCK_ROWS)
+        if blk < MIN_SLICE_BLOCK:
+            warnings.warn(
+                f"slice_block={blk} < MIN_SLICE_BLOCK={MIN_SLICE_BLOCK} for "
+                f"region at row {spec.row} (stride {stride}): tiny row "
+                f"blocks destroy slice-fold kernel throughput. Layouts from "
+                f"build_layout are padded to avoid this — rebuild the "
+                f"layout instead of constructing specs by hand.",
+                stacklevel=2)
+        return blk
 
 
 # ---------------------------------------------------------------------------
@@ -146,8 +181,15 @@ def build_layout(tree, n_shards: int = 1) -> ArenaLayout:
     row count so the arena splits into `n_shards` equal, kernel-block-aligned
     row ranges (core/zero.py::shard_rows) — ZeRO-1 over the arena is a
     row-range shard of every state column, so each shard must itself satisfy
-    the fold/apply kernels' block-divisibility contract."""
+    the fold/apply kernels' block-divisibility contract.
+
+    Every region stride/boundary is padded to `region_grain(n_shards)` rows
+    (lcm of MIN_SLICE_BLOCK and n_shards*ROW_ALIGN): the slice-fold block
+    never gcds below MIN_SLICE_BLOCK, and each per-layer row range splits
+    into n_shards equal aligned slices — the unit the bucketed ZeRO-1
+    schedule (core/buckets.py) reduce-scatters."""
     assert n_shards >= 1, n_shards
+    grain = region_grain(n_shards)
     stack_items, rest_tree = split_tree(tree)
     row = 0
     stacks = []
@@ -159,12 +201,12 @@ def build_layout(tree, n_shards: int = 1) -> ArenaLayout:
                 f"stacked leaf in {name!r} has leading dim {x.shape[0]} != {n_layers}"
         specs, used = _leaf_specs([jax.ShapeDtypeStruct(x.shape[1:], x.dtype)
                                    for x in leaves])
-        layer_rows = max(ROW_ALIGN, _align(used, ROW_ALIGN))
+        layer_rows = max(grain, _align(used, grain))
         stacks.append(StackSpec(name, tdef, n_layers, specs, layer_rows, row))
         row += n_layers * layer_rows
     rleaves, rdef = jax.tree.flatten(rest_tree)
     rspecs, rused = _leaf_specs(rleaves)
-    rest_rows = _align(max(rused, 0), ROW_ALIGN)
+    rest_rows = _align(max(rused, 0), grain)
     rest = RestSpec(rdef, rspecs, row, rest_rows)
     row += rest_rows
     total = _align(row, BLOCK_ROWS) if row > BLOCK_ROWS else max(row, ROW_ALIGN)
@@ -211,6 +253,49 @@ def pack_rest(rest_tree, layout: ArenaLayout) -> jnp.ndarray:
     """The non-stacked remainder -> (rest.rows, LANES) fp32 slab."""
     leaves = layout.rest.treedef.flatten_up_to(rest_tree)
     return _pack_region(leaves, layout.rest.leaves, layout.rest.rows)
+
+
+def pack_stack_layers(stack_tree, spec: StackSpec, j0: int, j1: int
+                      ) -> jnp.ndarray:
+    """Layers [j0, j1) of a stacked subtree -> ((j1-j0)*layer_rows, LANES)
+    fp32 slab — rows [spec.row + j0*layer_rows, spec.row + j1*layer_rows) of
+    the full pack, bitwise, without materializing the other layers."""
+    assert 0 <= j0 < j1 <= spec.n_layers, (j0, j1, spec.n_layers)
+    leaves = [x[j0:j1] for x in spec.treedef.flatten_up_to(stack_tree)]
+    block = _pack_region(leaves, spec.leaves, spec.layer_rows, lead=(j1 - j0,))
+    return block.reshape(-1, LANES)
+
+
+def pack_rest_rows(rest_tree, layout: ArenaLayout, row_lo: int, row_hi: int
+                   ) -> jnp.ndarray:
+    """Arena rows [row_lo, row_hi) of the rest region's pack — bitwise equal
+    to pack_rest(...)[row_lo-rest.row : row_hi-rest.row] but touching only
+    the leaves that intersect the range (the bucketed ZeRO-1 schedule packs
+    the rest region one size-capped bucket at a time). The range may cut
+    through a leaf mid-row-run; cuts are static, so the slices are too."""
+    rest = layout.rest
+    lo, hi = row_lo - rest.row, row_hi - rest.row
+    assert 0 <= lo < hi <= rest.rows, (row_lo, row_hi, rest.row, rest.rows)
+    leaves = rest.treedef.flatten_up_to(rest_tree)
+    mats = []
+    cursor = lo
+    for x, spec in zip(leaves, rest.leaves):
+        a = max(spec.row, lo)
+        b = min(spec.row + spec.rows, hi)
+        if a >= b:
+            continue
+        flat = x.reshape(-1).astype(jnp.float32)
+        e0 = (a - spec.row) * LANES
+        e1 = min(spec.size, (b - spec.row) * LANES)
+        seg = flat[e0:max(e0, e1)]
+        pad = (b - a) * LANES - seg.shape[0]
+        if pad:
+            seg = jnp.pad(seg, (0, pad))
+        mats.append(seg.reshape(b - a, LANES))
+        cursor = b
+    if cursor < hi:                      # region alignment rows past leaves
+        mats.append(jnp.zeros((hi - cursor, LANES), jnp.float32))
+    return jnp.concatenate(mats, axis=0) if len(mats) > 1 else mats[0]
 
 
 def pack(tree, layout: ArenaLayout) -> jnp.ndarray:

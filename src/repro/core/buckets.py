@@ -1,0 +1,239 @@
+"""Bucketed ZeRO-1: plan kernel-block-aligned, shard-divisible row buckets
+over an ArenaLayout so the shard_map DP schedule (core/dp_shardmap.py) can
+reduce-scatter each micro-batch's gradient one bucket at a time instead of
+packing the FULL gradient arena before a single monolithic psum_scatter.
+
+A bucket is a contiguous arena row range whose row count divides into
+`n_shards` equal, ROW_ALIGN-aligned slices. `psum_scatter(slab, ...,
+scatter_dimension=0, tiled=True)` of a bucket's gradient slab hands device k
+the fully-reduced slice k — device k folds it into its OWNED state block at
+the bucket's partition offset with one offset-indexed slice-fold kernel
+(kernels/fused_step.arena_fold_slice), then the slab is dead. Per-device
+live packed-gradient memory is therefore ONE bucket, not the arena, and
+bucket i's reduce-scatter has no data dependency on bucket i+1's fold, so
+XLA's async collectives overlap communication with compute.
+
+Ownership (the partition order). Under the bucketed schedule device k owns
+slice k OF EVERY BUCKET — the standard ZeRO bucketing — rather than one
+contiguous arena range. Its state block therefore stores, at shard-local
+offset `bucket.own_offset`, arena rows
+
+    [bucket.start + k*slice_rows, bucket.start + (k+1)*slice_rows).
+
+The global (P(dp, None)-sharded) state arrays are consequently a static
+PERMUTATION of arena row order ("partition order"); `partition_index`
+records it, `unpermute_rows` undoes it (the schedule applies it to the
+all-gathered params before unpacking, so params and losses are bitwise
+identical to the full-pack schedule — only the resident layout of the
+sharded optimizer state differs). Use `unpermute_state` before decoding or
+checkpointing a bucketed-schedule state outside the step function.
+
+Bucket granularity:
+  stacks   one bucket per layer (StackSpec) — the unit the layer-wise
+           engine (Algorithm 2) emits during its backward scan. build_layout
+           pads layer_rows to region_grain(n_shards), so per-layer buckets
+           are always shard-divisible.
+  rest     coalesced into size-capped buckets (embed/lm_head are large:
+           capping bounds both the live slab and the collective granularity)
+           cut at shard-divisible offsets, mid-leaf cuts allowed.
+  padding  the tail past the rest region is pure zero padding: it is owned
+           (so partition offsets tile the shard exactly) but never folded —
+           zero gradients into zero state are a bitwise no-op.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import arena as arena_mod
+from repro.core.arena import ROW_ALIGN, ArenaLayout
+from repro.kernels.adama_accum import BLOCK_ROWS, LANES
+
+# default rest-region bucket cap: 4096 rows = 16 MiB of fp32 gradient slab
+DEFAULT_BUCKET_ROWS = 4096
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One contiguous arena row range of the schedule."""
+    start: int           # first arena row
+    rows: int            # total rows; rows % (n_shards * ROW_ALIGN) == 0
+    slice_rows: int      # rows // n_shards — what each device receives
+    own_offset: int      # shard-local row where this bucket's slice lands
+    kind: str            # "stack" | "rest" | "pad"
+    name: str = ""       # stack name for kind == "stack"
+    layer_lo: int = -1   # stack buckets: layers [layer_lo, layer_hi)
+    layer_hi: int = -1
+    has_grad: bool = True  # False: pure padding, never folded
+    # slice-fold row block for THIS bucket's fold: the largest divisor of
+    # both slice_rows and own_offset (capped at BLOCK_ROWS). Per-bucket —
+    # a single global gcd was observed to collapse to 16 rows whenever one
+    # odd-sized rest bucket existed, multiplying every fold's grid steps.
+    fold_block: int = ROW_ALIGN
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.rows
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    """The static schedule: buckets partition [0, layout.rows) in arena
+    order; own_offsets partition [0, shard_rows) in the same order."""
+    layout: ArenaLayout
+    n_shards: int
+    buckets: Tuple[Bucket, ...]
+
+    @property
+    def shard_rows(self) -> int:
+        return self.layout.rows // self.n_shards
+
+    def grad_buckets(self) -> Tuple[Bucket, ...]:
+        return tuple(b for b in self.buckets if b.has_grad)
+
+    @property
+    def max_grad_bucket_rows(self) -> int:
+        return max((b.rows for b in self.grad_buckets()), default=0)
+
+    @property
+    def max_grad_bucket_bytes(self) -> int:
+        """Peak live packed-gradient bytes of the schedule: the largest slab
+        that ever enters a reduce-scatter (fp32 lanes)."""
+        return self.max_grad_bucket_rows * LANES * 4
+
+    def stack_slice(self, name: str) -> Tuple[int, int, int]:
+        """(own_offset of layer 0's slice, slice rows per layer, fold
+        block) for a per-layer-bucketed stack — the layer-wise engine folds
+        layer j at own_offset + j * slice_rows. The fold block is uniform
+        across the stack's layers: gcd(s, base + j*s) == gcd(s, base)."""
+        for b in self.buckets:
+            if b.kind == "stack" and b.name == name and b.layer_lo == 0:
+                return b.own_offset, b.slice_rows, b.fold_block
+        raise KeyError(name)
+
+
+def plan_buckets(layout: ArenaLayout, n_shards: int, *,
+                 max_bucket_rows: Optional[int] = None) -> BucketPlan:
+    """Plan the bucket schedule for `layout` over `n_shards` devices.
+
+    Raises ValueError when the layout was not built for this shard count —
+    the fix is `build_layout(tree, n_shards=...)`, which pads every region
+    stride to the shard-divisible grain."""
+    from repro.core.zero import shard_rows
+    shard_rows(layout, n_shards)     # validates total-row shard alignment
+    unit = ROW_ALIGN * n_shards
+    cap = max_bucket_rows if max_bucket_rows else DEFAULT_BUCKET_ROWS
+    cap = max(unit, cap - cap % unit)
+
+    buckets = []
+    own = 0
+
+    def add(start, rows, kind, name="", lo=-1, hi=-1, grad=True):
+        nonlocal own
+        assert rows % unit == 0, (kind, start, rows, unit)
+        srows = rows // n_shards
+        blk = math.gcd(math.gcd(BLOCK_ROWS, srows), own)
+        buckets.append(Bucket(start, rows, srows, own, kind, name,
+                              lo, hi, grad, blk))
+        own += srows
+
+    for s in layout.stacks:
+        if s.layer_rows % unit or s.row % unit:
+            raise ValueError(
+                f"stack {s.name!r} (layer_rows={s.layer_rows}, row={s.row}) "
+                f"is not divisible into {n_shards} aligned slices; rebuild "
+                f"the layout with build_layout(tree, n_shards={n_shards})")
+        for j in range(s.n_layers):
+            add(s.row + j * s.layer_rows, s.layer_rows, "stack", s.name,
+                j, j + 1)
+    rest = layout.rest
+    if rest.rows:
+        if rest.row % unit or rest.rows % unit:
+            raise ValueError(
+                f"rest region (row={rest.row}, rows={rest.rows}) is not "
+                f"divisible into {n_shards} aligned slices; rebuild the "
+                f"layout with build_layout(tree, n_shards={n_shards})")
+        pos = rest.row
+        while pos < rest.row + rest.rows:
+            take = min(cap, rest.row + rest.rows - pos)
+            add(pos, take, "rest")
+            pos += take
+    end = rest.row + rest.rows
+    if end < layout.rows:
+        add(end, layout.rows - end, "pad", grad=False)
+
+    assert own == layout.rows // n_shards, (own, layout.rows, n_shards)
+    return BucketPlan(layout, n_shards, tuple(buckets))
+
+
+# ---------------------------------------------------------------------------
+# Gradient slabs, owned-row gathers, and the partition permutation
+# ---------------------------------------------------------------------------
+
+
+def pack_bucket(grads, layout: ArenaLayout, b: Bucket) -> jnp.ndarray:
+    """One bucket's (b.rows, LANES) fp32 gradient slab from the grad tree —
+    rows [b.start, b.stop) of pack(grads, layout), bitwise, without
+    materializing the rest of the arena."""
+    if b.kind == "stack":
+        return arena_mod.pack_stack_layers(grads[b.name], layout.stack(b.name),
+                                           b.layer_lo, b.layer_hi)
+    if b.kind == "rest":
+        _, rest_tree = arena_mod.split_tree(grads)
+        return arena_mod.pack_rest_rows(rest_tree, layout, b.start, b.stop)
+    return jnp.zeros((b.rows, LANES), jnp.float32)
+
+
+def gather_owned_rows(x: jnp.ndarray, plan: BucketPlan, idx) -> jnp.ndarray:
+    """Device `idx`'s owned rows of an arena-ordered (rows, LANES) array, in
+    partition order: the concatenation of its slice of every bucket. `idx`
+    may be traced (lax.axis_index inside shard_map)."""
+    parts = [lax.dynamic_slice_in_dim(x, b.start + idx * b.slice_rows,
+                                      b.slice_rows, axis=0)
+             for b in plan.buckets]
+    return jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+
+@functools.lru_cache(maxsize=32)
+def partition_index(plan: BucketPlan) -> np.ndarray:
+    """perm[arena_row] = partition-order row, where partition order is the
+    concatenation over shards k of shard k's owned slices in bucket order
+    (exactly what `all_gather(gather_owned_rows(...))` produces)."""
+    perm = np.empty(plan.layout.rows, np.int32)
+    s_rows = plan.shard_rows
+    for b in plan.buckets:
+        for k in range(plan.n_shards):
+            a0 = b.start + k * b.slice_rows
+            p0 = k * s_rows + b.own_offset
+            perm[a0:a0 + b.slice_rows] = np.arange(
+                p0, p0 + b.slice_rows, dtype=np.int32)
+    return perm
+
+
+def unpermute_rows(x: jnp.ndarray, plan: BucketPlan) -> jnp.ndarray:
+    """Partition-order (rows, ...) array -> arena order (pure static data
+    movement: bitwise)."""
+    return jnp.take(x, jnp.asarray(partition_index(plan)), axis=0)
+
+
+def unpermute_state(state, plan: BucketPlan):
+    """Re-order a bucketed-schedule optimizer state's GLOBAL row-indexed
+    columns from partition order back to arena order, so MomentState.to_tree
+    / checkpoint comparisons see the same arrays the full-pack schedule
+    stores. Replicated columns (leading dim 1) and the step scalar pass
+    through."""
+    import jax
+
+    def fix(leaf):
+        if hasattr(leaf, "shape") and leaf.ndim >= 1 and \
+                leaf.shape[0] == plan.layout.rows:
+            return unpermute_rows(leaf, plan)
+        return leaf
+
+    return jax.tree.map(fix, state)

@@ -13,19 +13,40 @@ Three DP variants (benchmarks/fig7_comm.py measures their collective bytes):
 
 With OptimizerConfig(zero_stage=1, arena=True) the adama variant runs the
 ZeRO-1 ROW-RANGE schedule over the flat state arena (the paper's Table-3
-"ZeRO-S1 + AdamA" row): device k persistently owns rows [k*R/M, (k+1)*R/M)
-of EVERY row-indexed state column (both moments' payloads and any codec
-scale column, for every (m_codec, v_codec) pair — see core/state_store.py),
-each micro-batch's gradient arena is psum_scatter'd so the fold runs on 1/M
-of the state, and the mini-batch-end apply updates the owned param rows
-followed by one all-gather. The one non-row-indexed column (the rowcol
-codec's (1, LANES) column sums) is replicated: each shard accumulates its
-partial with the decay pre-divided by M, and a single tiny psum per
-mini-batch restores the exact global statistic. Optimizer
-state per device drops to 1/M; the collectives move from states to
-gradients, so int8/factored codecs compose (nothing quantized is ever
-summed). Comm volume = N*P*(M-1)/M (gradient reduce-scatters) + P (param
-all-gather) per mini-batch.
+"ZeRO-S1 + AdamA" row): device k persistently owns 1/M of EVERY row-indexed
+state column (both moments' payloads and any codec scale column, for every
+(m_codec, v_codec) pair — see core/state_store.py), each micro-batch's
+gradients are psum_scatter'd so the fold runs on 1/M of the state, and the
+mini-batch-end apply updates the owned param rows followed by one
+all-gather. The one non-row-indexed column (the rowcol codec's (1, LANES)
+column sums) is replicated: each shard accumulates its partial with the
+decay pre-divided by M, and a single tiny psum per mini-batch restores the
+exact global statistic. Optimizer state per device drops to 1/M; the
+collectives move from states to gradients, so int8/factored codecs compose
+(nothing quantized is ever summed). Comm volume = N*P*(M-1)/M (gradient
+reduce-scatters) + P (param all-gather) per mini-batch.
+
+The ZeRO-1 gradient collectives come in two schedules (zero_bucketed):
+
+  BUCKETED (default) — the gradient is reduce-scattered one BUCKET at a
+      time (core/buckets.py: per-layer buckets for the stacked regions,
+      size-capped buckets for the rest region) and each received slice is
+      folded into the owned block with the offset-indexed slice-fold
+      kernel. Peak live packed-gradient memory is ONE bucket instead of
+      the full arena, and bucket i's collective has no data dependency on
+      bucket i+1's fold, so XLA overlaps communication with compute.
+      Ownership is slice-k-of-every-bucket, so the RESIDENT sharded state
+      is in partition order (buckets.unpermute_state decodes it); params
+      and losses are bitwise identical to full-pack for row-local codecs.
+  FULL-PACK (zero_bucketed=False, the legacy schedule) — pack the whole
+      gradient arena, one monolithic psum_scatter per micro-batch. Simpler,
+      but the full gradient arena is live on every device at once and the
+      collective serializes the optimizer path.
+
+variant="adama_layerwise" (Algorithm 2 under ZeRO-1, bucketed only): the
+per-layer backward streams each layer's packed gradient slab into its
+reduce-scatter the moment the VJP emits it — no gradient tree and no
+gradient arena ever materialize (see core/layerwise.py's ZeroStream).
 
 Manual axes = the DP axes ("data", and "pod" when multi-pod); the "model"
 axis (if present in the mesh) is left to GSPMD (auto) so tensor-parallel
@@ -45,8 +66,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, OptimizerConfig
 from repro.core import adama
 from repro.core import arena as arena_mod
+from repro.core import buckets as buckets_mod
 from repro.core import state_store
 from repro.core.accumulation import _fold_decay, _split_micro, make_loss
+from repro.core.zero import zero1_bucket_plan
 from repro.optim import adam
 
 
@@ -84,10 +107,18 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             "state store (use_pallas=True, arena=True): ZeRO-1 here shards "
             "the flat arena by row range; the per-leaf ZeRO-1 path lives in "
             "the pjit engine (sharding/rules.opt_pspecs)")
-    if zero1 and variant != "adama":
+    if zero1 and variant not in ("adama", "adama_layerwise"):
         raise ValueError(
             f"zero_stage=1 row-range sharding is defined for the 'adama' "
-            f"variant only, got variant={variant!r}")
+            f"and 'adama_layerwise' variants only, got variant={variant!r}")
+    if variant == "adama_layerwise" and not (zero1 and use_arena):
+        raise ValueError(
+            "the shard_map 'adama_layerwise' variant IS the bucketed ZeRO-1 "
+            "stream (each layer's gradient reduce-scatters out of the "
+            "backward into the owned row range): it requires zero_stage=1 "
+            "with the arena state store (arena=True, use_pallas=True). For "
+            "replicated-state DP use variant='adama', or run "
+            "adama_layerwise in the pjit engine")
     if use_arena and not zero1 and variant == "adama" and \
             (opt.state_codec != "fp32" or opt.m_codec != "fp32"):
         raise ValueError(
@@ -118,32 +149,62 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                                             weight_decay=opt.weight_decay)
             return params, opt_state, {"loss": lax.pmean(lsum / n, dp_axes)}
 
-        if variant == "adama" and use_arena and zero1:
-            # ZeRO-1 row ranges: this device owns rows [idx*R/M, (idx+1)*R/M)
-            # of every ROW-INDEXED state column. Gradients are reduce-
-            # scattered per fold (fully-reduced before entering v, so no
-            # M*beta2 pre-scale or /M^2 correction — the schedule equals
-            # single-device AdamA(N) over the full global micro-batch),
-            # params all-gathered once. Replicated codec columns (rowcol's
-            # column sums) accumulate per-shard partials with their decay
-            # pre-divided by M, so ONE tiny psum at mini-batch end restores
-            # the exact global statistic (state_store.psum_replicated_state).
+        if variant in ("adama", "adama_layerwise") and use_arena and zero1:
+            # ZeRO-1 row ranges: this device owns 1/M of every ROW-INDEXED
+            # state column. Gradients are reduce-scattered per fold (fully-
+            # reduced before entering v, so no M*beta2 pre-scale or /M^2
+            # correction — the schedule equals single-device AdamA(N) over
+            # the full global micro-batch), params all-gathered once.
+            # Replicated codec columns (rowcol's column sums) accumulate
+            # per-shard partials with their decay pre-divided by M, so ONE
+            # tiny psum at mini-batch end restores the exact global
+            # statistic (state_store.psum_replicated_state).
+            #
+            # Bucketed schedule (default): ownership is slice-k-of-every-
+            # bucket and each bucket reduce-scatters on its own, streamed
+            # into offset-indexed slice folds — peak live packed-gradient
+            # memory is ONE bucket, and the collectives overlap the folds.
+            # Full-pack (zero_bucketed=False): contiguous row ranges, the
+            # whole gradient arena packed before one monolithic scatter.
             lay = opt_state["m"].layout
             rows_own = lay.rows // m_dev
+            bucketed = opt.zero_bucketed or variant == "adama_layerwise"
+            plan = (zero1_bucket_plan(lay, m_dev, opt.zero_bucket_rows)
+                    if bucketed else None)
+            scale = 1.0 / (n * m_dev)
             state = dict(opt_state, step=opt_state["step"] + 1)
+
+            def fold_micro(st, i, mb):
+                decay = _fold_decay(i, b1, b2, 1)
+                rdecay = (decay[0], jnp.where(i == 0, b2 / m_dev, 1.0))
+                if variant == "adama_layerwise":
+                    from repro.core.layerwise import (ZeroStream,
+                                                      layerwise_loss_and_fold)
+                    return layerwise_loss_and_fold(
+                        cfg, params, mb, st, beta1=b1, beta2=b2, scale=scale,
+                        use_pallas=True, decay=decay,
+                        zero=ZeroStream(plan, dp_axes, rdecay))
+                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                if plan is None:
+                    g_own = lax.psum_scatter(arena_mod.pack(g, lay), dp_axes,
+                                             scatter_dimension=0, tiled=True)
+                    return l, state_store.fold_state(
+                        st, g_own, beta1=b1, beta2=b2, scale=scale,
+                        decay=decay, replicated_decay=rdecay)
+                st = state_store.begin_micro_state(st, rdecay)
+                for b in plan.grad_buckets():
+                    slab = buckets_mod.pack_bucket(g, lay, b)
+                    own = lax.psum_scatter(slab, dp_axes,
+                                           scatter_dimension=0, tiled=True)
+                    st = state_store.fold_slice_state(
+                        st, own, b.own_offset, beta1=b1, beta2=b2,
+                        block=b.fold_block, scale=scale, decay=decay)
+                return l, st
 
             def body(carry, xs):
                 st, lsum = carry
                 i, mb = xs
-                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
-                g_own = lax.psum_scatter(arena_mod.pack(g, lay), dp_axes,
-                                         scatter_dimension=0, tiled=True)
-                decay = _fold_decay(i, b1, b2, 1)
-                st = state_store.fold_state(
-                    st, g_own, beta1=b1, beta2=b2, scale=1.0 / (n * m_dev),
-                    decay=decay,
-                    replicated_decay=(decay[0],
-                                      jnp.where(i == 0, b2 / m_dev, 1.0)))
+                l, st = fold_micro(st, i, mb)
                 return (st, lsum + l), None
 
             (state, lsum), _ = lax.scan(body, (state, 0.0),
@@ -154,12 +215,17 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             idx = jnp.int32(0)
             for a in dp_axes:
                 idx = idx * lax.psum(1, a) + lax.axis_index(a)
-            p_own = lax.dynamic_slice_in_dim(
-                arena_mod.pack(params, lay), idx * rows_own, rows_own, axis=0)
+            p_arena = arena_mod.pack(params, lay)
+            p_own = (lax.dynamic_slice_in_dim(p_arena, idx * rows_own,
+                                              rows_own, axis=0)
+                     if plan is None else
+                     buckets_mod.gather_owned_rows(p_arena, plan, idx))
             p_own = state_store.apply_state(
                 p_own, state, lr=lr, bc1=1 - b1 ** t, bc2=1 - b2 ** t,
                 eps=opt.eps, weight_decay=opt.weight_decay)
             p_full = lax.all_gather(p_own, dp_axes, axis=0, tiled=True)
+            if plan is not None:        # partition order -> arena order
+                p_full = buckets_mod.unpermute_rows(p_full, plan)
             params = arena_mod.unpack(p_full, lay)
             return params, state, {"loss": lax.pmean(lsum / n, dp_axes)}
 
@@ -222,7 +288,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
 
     def step(params, opt_state, batch):
         ospec = (_zero1_ospec(opt_state)
-                 if zero1 and variant == "adama" else rep)
+                 if zero1 and variant in ("adama", "adama_layerwise")
+                 else rep)
         f = _shard_map(local_step, mesh,
                        in_specs=(rep, ospec, bspec),
                        out_specs=(rep, ospec, rep), manual_axes=dp_axes)

@@ -30,11 +30,22 @@ dispatch count per layer is unchanged for every (m_codec, v_codec) pair.
 Replicated codec columns (rowcol's column sums) are decayed once per
 micro-batch before the scan — a slice fold sees only its rows and must not
 decay shared state per layer.
+
+ZeRO-1 streaming (`zero=ZeroStream(...)`, driven by the shard_map DP engine
+in core/dp_shardmap.py): the state carried through the backward scan is the
+device's OWNED row block, and each layer's packed gradient slab is
+psum_scatter'd the moment the VJP emits it — the received fully-reduced
+slice folds straight into the owned block at the layer's partition offset
+(core/buckets.py). No gradient tree and no gradient arena ever materialize:
+peak live gradient memory is ONE layer's slab, and layer j's collective
+overlaps layer j+1's VJP. The rest region streams the same way, one
+size-capped bucket at a time, at the stage boundary.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +58,18 @@ from repro.core.arena import STACK_KEYS
 from repro.models import modules as md
 from repro.models.model import (apply_block, cross_entropy, embed_tokens,
                                 main_stack_kind, _cdt)
+
+
+@dataclass(frozen=True)
+class ZeroStream:
+    """Bucketed ZeRO-1 streaming context for the layer-wise engine: the
+    bucket plan (core/buckets.py), the DP axis names to reduce-scatter
+    over, and the replicated-column decay pair (dv pre-divided by the DP
+    size so per-shard rowcol column partials psum to the exact global
+    statistic — see core/dp_shardmap.py)."""
+    plan: Any
+    axis_names: Tuple[str, ...]
+    replicated_decay: Optional[Tuple] = None
 
 
 def _fold_tree(m, v, g, beta1, beta2, use_pallas):
@@ -62,17 +85,23 @@ def _fold_tree(m, v, g, beta1, beta2, use_pallas):
 
 def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
                             beta1: float, beta2: float, scale: float,
-                            use_pallas: bool = False, decay=None):
+                            use_pallas: bool = False, decay=None, zero=None):
     """One micro-batch: forward, then layer-by-layer backward folding grads
     into (m, v). Returns (loss, new_state). Gradients are scaled by `scale`
-    (= 1/N), matching Algorithm 1 line 6. `decay` (arena mode only) fuses
-    the begin-minibatch decay into this micro-batch's folds."""
+    (= 1/N; 1/(N*M) under DP), matching Algorithm 1 line 6. `decay` (arena
+    mode only) fuses the begin-minibatch decay into this micro-batch's
+    folds. `zero` (a ZeroStream) streams every fold through a per-bucket
+    psum_scatter into the device's OWNED row block — `state` then carries
+    the shard-local columns, in partition order."""
     assert decay is None or is_arena_state(state), \
         "fused decay requires arena-backed state"
+    assert zero is None or is_arena_state(state), \
+        "ZeRO-1 streaming requires arena-backed state"
     if cfg.arch_type == "audio":
         return _layerwise_audio(cfg, params, batch, state, beta1=beta1,
                                 beta2=beta2, scale=scale,
-                                use_pallas=use_pallas, decay=decay)
+                                use_pallas=use_pallas, decay=decay,
+                                zero=zero)
 
     kind = main_stack_kind(cfg)
     causal = cfg.arch_type != "encoder"
@@ -154,9 +183,13 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
         if decay is not None:
             # replicated codec columns (e.g. rowcol's column sums) decay
             # ONCE per micro-batch here — the per-layer slice folds below
-            # each see only part of the rows and must not decay them again
-            m_acc = mc.begin_micro(m_acc, decay[0])
-            v_acc = vc.begin_micro(v_acc, decay[1])
+            # each see only part of the rows and must not decay them again.
+            # Under ZeRO-1 the dv is pre-divided by the DP size so the
+            # per-shard partials psum to the exact global statistic.
+            rdm, rdv = (decay if zero is None or zero.replicated_decay is None
+                        else zero.replicated_decay)
+            m_acc = mc.begin_micro(m_acc, rdm)
+            v_acc = vc.begin_micro(v_acc, rdv)
     else:
         codec = None
         new_m = dict(state["m"])
@@ -175,7 +208,7 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
             dlp, dxin = vjp((dx_c, scale))               # aux cotangent=scale
             m_c, v_c = _fold_layer(m_c, v_c, dlp, j, spec, lay if arena_st
                                    else None, beta1, beta2, use_pallas, decay,
-                                   codec)
+                                   codec, zero)
             return (dxin, m_c, v_c), None
 
         carry0 = ((dx, m_acc, v_acc) if arena_st else
@@ -193,7 +226,7 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     d_rest = jax.tree.map(lambda a, b_: a + b_, d_rest_post, d_rest_pre)
     if arena_st:
         m_acc, v_acc = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
-                                  decay, codec)
+                                  decay, codec, zero)
         return loss, {"m": mc.wrap(lay, m_acc),
                       "v": vc.wrap(lay, v_acc),
                       "step": state["step"]}
@@ -204,20 +237,30 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
 
 
 def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
-                codec=None):
+                codec=None, zero=None):
     """Fold one layer's gradient tree. Tree mode: per-leaf fold into row j of
     the (m, v) stacks. Arena mode: pack dlp into one slab and fold it into
     the layer's arena row slice with a single offset-indexed kernel fusing
     BOTH moments' codec transforms (codec is the (m_codec, v_codec) pair;
     m_c/v_c their column tuples). Grads arrive pre-scaled (via the VJP
-    cotangent), so the kernel scale is 1."""
+    cotangent), so the kernel scale is 1. With `zero` the slab is
+    reduce-scattered the moment it exists and the received slice folds into
+    the OWNED block at the layer's partition offset — the slab has no
+    reader after the collective, so its buffer dies inside the iteration."""
     if lay is not None:
         from repro.core import state_store
         g2 = arena_mod.pack_layer(dlp, spec)
-        off = spec.row + j * spec.layer_rows
+        if zero is not None:
+            g2 = lax.psum_scatter(g2, zero.axis_names, scatter_dimension=0,
+                                  tiled=True)
+            base, lslice, block = zero.plan.stack_slice(spec.name)
+            off = base + j * lslice
+        else:
+            off = spec.row + j * spec.layer_rows
+            block = lay.slice_block(spec)
         return state_store.fold_slice(
             codec[0], codec[1], m_c, v_c, g2, off, beta1=beta1, beta2=beta2,
-            block=lay.slice_block(spec), decay=decay)
+            block=block, decay=decay)
     m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
         s, j, 0, keepdims=False), m_c)
     v_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
@@ -230,12 +273,27 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
     return m_c, v_c
 
 
-def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec):
+def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
+               zero=None):
     """Arena mode: fold ALL non-stacked leaves' gradients with one
-    codec-aware kernel over the contiguous rest region."""
+    codec-aware kernel over the contiguous rest region. With `zero` the
+    region streams one size-capped bucket at a time: pack the bucket's rows
+    only, reduce-scatter, fold the received slice into the owned block —
+    the region's packed gradient is never live all at once."""
     if not lay.rest.rows:
         return m_acc, v_acc
     from repro.core import state_store
+    if zero is not None:
+        for b in zero.plan.grad_buckets():
+            if b.kind != "rest":
+                continue
+            slab = arena_mod.pack_rest_rows(d_rest, lay, b.start, b.stop)
+            own = lax.psum_scatter(slab, zero.axis_names,
+                                   scatter_dimension=0, tiled=True)
+            m_acc, v_acc = state_store.fold_slice(
+                codec[0], codec[1], m_acc, v_acc, own, b.own_offset,
+                beta1=beta1, beta2=beta2, block=b.fold_block, decay=decay)
+        return m_acc, v_acc
     g2 = arena_mod.pack_rest(d_rest, lay)
     return state_store.fold_slice(
         codec[0], codec[1], m_acc, v_acc, g2, lay.rest.row, beta1=beta1,
@@ -248,7 +306,7 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec):
 
 
 def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
-                     use_pallas, decay=None):
+                     use_pallas, decay=None, zero=None):
     tokens = batch["tokens"]
     frames = batch["frames"].astype(_cdt(cfg))
     b, s = tokens.shape
@@ -306,8 +364,10 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         lay = state["m"].layout
         m0, v0 = mc.parts_of(state["m"]), vc.parts_of(state["v"])
         if decay is not None:            # replicated columns: once per micro
-            m0 = mc.begin_micro(m0, decay[0])
-            v0 = vc.begin_micro(v0, decay[1])
+            rdm, rdv = (decay if zero is None or zero.replicated_decay is None
+                        else zero.replicated_decay)
+            m0 = mc.begin_micro(m0, rdm)
+            v0 = vc.begin_micro(v0, rdv)
         dec_spec, enc_spec = lay.stack("blocks"), lay.stack("enc_blocks")
     else:
         codec = None
@@ -323,7 +383,7 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         _, vjp = jax.vjp(dec_block, lp, xin, enc_out)
         dlp, dxin, denc_j = vjp((dx_c, scale))
         m_c, v_c = _fold_layer(m_c, v_c, dlp, j, dec_spec, lay, beta1, beta2,
-                               use_pallas, decay, codec)
+                               use_pallas, decay, codec, zero)
         return (dxin, denc + denc_j, m_c, v_c), None
 
     denc0 = jnp.zeros_like(enc_out)
@@ -349,7 +409,7 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                                          causal=False), lp, xin)
         dlp, dxin = vjp((dx_c, scale))
         m_c, v_c = _fold_layer(m_c, v_c, dlp, j, enc_spec, lay, beta1, beta2,
-                               use_pallas, decay, codec)
+                               use_pallas, decay, codec, zero)
         return (dxin, m_c, v_c), None
 
     ne = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
@@ -363,7 +423,7 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                           d_rest_post, d_rest_encn, d_rest_pre)
     if arena_st:
         m_new, v_new = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
-                                  decay, codec)
+                                  decay, codec, zero)
         return ce, {"m": mc.wrap(lay, m_new),
                     "v": vc.wrap(lay, v_new),
                     "step": state["step"]}

@@ -398,6 +398,39 @@ def fold_state(state, g, *, beta1, beta2, scale=1.0, decay=None,
             "step": state["step"]}
 
 
+def begin_micro_state(state, decay):
+    """Apply this micro-batch's decay pair to the REPLICATED codec columns
+    only (e.g. rowcol's column sums) — row-indexed columns decay inside the
+    fold kernels. The bucketed ZeRO-1 schedule calls this once per
+    micro-batch before its per-bucket slice folds, exactly as the layer-wise
+    engine does before its backward scan; identity for row-local codecs."""
+    if decay is None:
+        return state
+    mc, vc = state_codecs(state)
+    layout = state["m"].layout
+    return {"m": mc.wrap(layout, mc.begin_micro(
+                mc.parts_of(state["m"]), decay[0])),
+            "v": vc.wrap(layout, vc.begin_micro(
+                vc.parts_of(state["v"]), decay[1])),
+            "step": state["step"]}
+
+
+def fold_slice_state(state, g, row_offset, *, beta1, beta2, block, scale=1.0,
+                     decay=None):
+    """One fused slice fold of a gradient slab into rows
+    [row_offset, row_offset + g.shape[0]) of the state dict. Replicated
+    codec columns are NOT decayed here (see fold_slice) — pair with
+    begin_micro_state once per micro-batch."""
+    mc, vc = state_codecs(state)
+    layout = state["m"].layout
+    m_parts, v_parts = fold_slice(mc, vc, mc.parts_of(state["m"]),
+                                  vc.parts_of(state["v"]), g, row_offset,
+                                  beta1=beta1, beta2=beta2, block=block,
+                                  scale=scale, decay=decay)
+    return {"m": mc.wrap(layout, m_parts), "v": vc.wrap(layout, v_parts),
+            "step": state["step"]}
+
+
 def apply_state(p, state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
     """One fused bias-corrected apply of the state dict onto a param arena."""
     mc, vc = state_codecs(state)

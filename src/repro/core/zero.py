@@ -18,6 +18,14 @@ all-gather per apply over the same ranges (core/dp_shardmap.py implements
 the manual schedule; sharding/rules.py emits the equivalent GSPMD
 row-sharding for the pjit engine).
 
+BUCKETED row-range (the default shard_map schedule): instead of packing the
+full gradient arena and issuing one monolithic reduce-scatter, the schedule
+streams per-layer / size-capped buckets (`zero1_bucket_plan`, built by
+core/buckets.py) — device k then owns slice k of every bucket rather than
+one contiguous range, peak live gradient memory drops from the arena to one
+bucket, and bucket i's collective overlaps bucket i+1's fold. Comm volume
+is unchanged (the buckets partition the same rows).
+
 Combined with AdamA this is the paper's Table-3 "ZeRO-S1 + AdamA"
 configuration: activations 1/N (micro-batching), gradients transient
 (optimizer accumulation), optimizer states 1/M_dp (this module).
@@ -102,6 +110,18 @@ def shard_rows(layout, n_shards: int) -> Tuple[RowShard, ...]:
             f"(ROW_ALIGN={ROW_ALIGN}, BLOCK_ROWS={BLOCK_ROWS}); rebuild the "
             f"layout with build_layout(tree, n_shards={n_shards})")
     return tuple(RowShard(k, k * per, per) for k in range(n_shards))
+
+
+def zero1_bucket_plan(layout, n_shards: int, max_bucket_rows: int = 0):
+    """Bucket schedule over a row-range-sharded arena (the shard_map DP
+    engine's default ZeRO-1 form): per-layer buckets for the stacked
+    regions, size-capped buckets for the rest region. `max_bucket_rows=0`
+    uses core/buckets.py's default cap. Raises ValueError (same contract as
+    shard_rows) when the layout was not built with
+    build_layout(tree, n_shards=...)."""
+    from repro.core.buckets import plan_buckets
+    return plan_buckets(layout, n_shards,
+                        max_bucket_rows=max_bucket_rows or None)
 
 
 def zero1_arena_pspec(layout, mesh, axes: Tuple[str, ...]) -> P:

@@ -93,14 +93,48 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
         if engine == "shardmap":
             from repro.core.dp_shardmap import make_dp_train_step
             dp = rules.dp_axes()
-            step, opt_init = make_dp_train_step(cfg, opt, mesh, dp,
-                                                "adama" if accum != "ga" else "ga",
+            if accum == "ga":
+                variant = "ga"
+            elif accum == "adama_layerwise" and opt.zero_stage == 1 \
+                    and opt.arena:
+                # the layer-wise shard_map variant exists only as the
+                # bucketed ZeRO-1 stream; otherwise fall back to adama
+                variant = "adama_layerwise"
+            else:
+                variant = "adama"
+            step, opt_init = make_dp_train_step(cfg, opt, mesh, dp, variant,
                                                 remat=remat)
         else:
             step, opt_init = make_train_step(cfg, opt, remat=remat,
                                              state_shards=dp_size)
         aopt = jax.eval_shape(opt_init, aparams)
         ospecs = rules.opt_pspecs(aopt, aparams, zero1=zero1)
+        if info is not None and engine == "shardmap" and \
+                opt.zero_stage == 1 and opt.arena:
+            # the ZeRO-1 gradient-collective schedule and its peak-live-
+            # gradient budget: bucketed = one bucket's slab, full-pack =
+            # the whole arena. run_one checks the compiled HLO's largest
+            # reduce-scatter operand against this budget.
+            from repro.core.zero import zero1_bucket_plan
+            from repro.kernels.adama_accum import LANES
+            lay = aopt["m"].layout
+            # the budget gate is STRICT only when every non-trivial mesh
+            # axis is a manual DP axis: with an auto ("model") axis left to
+            # GSPMD, the module may contain tensor-parallel reduce-scatters
+            # that have nothing to do with the gradient buckets, and the
+            # module-wide operand max would flag them spuriously
+            auto = set(mesh.axis_names) - set(rules.dp_axes())
+            info["grad_peak_strict"] = all(mesh.shape[a] == 1 for a in auto)
+            # mirror the engine's schedule resolution: adama_layerwise IS
+            # the bucketed stream, regardless of zero_bucketed
+            if opt.zero_bucketed or variant == "adama_layerwise":
+                plan = zero1_bucket_plan(lay, dp_size, opt.zero_bucket_rows)
+                info["zero_schedule"] = "bucketed"
+                info["grad_peak_budget_bytes"] = plan.max_grad_bucket_bytes
+                info["n_grad_buckets"] = len(plan.grad_buckets())
+            else:
+                info["zero_schedule"] = "full_pack"
+                info["grad_peak_budget_bytes"] = lay.rows * LANES * 4
         if info is not None:
             # measured optimizer-state footprint (the Table-3 row): global
             # bytes of the abstract state the engine allocates, and the
@@ -189,6 +223,8 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
             tag += f"__arena-{v.get('state_codec', 'fp32')}"
             if v.get("m_codec", "fp32") != "fp32":
                 tag += f"__m-{v['m_codec']}"
+        if k == "extra_opt" and v and not v.get("zero_bucketed", True):
+            tag += "__fullpack"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     info = {}
@@ -221,6 +257,22 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
     hlo = analyze_hlo(txt)
     coll = {k[5:]: v for k, v in hlo.items() if k.startswith("coll_")}
     coll["total"] = hlo.get("coll_total", 0.0)
+    # measured peak gradient live bytes: the largest single reduce-scatter
+    # operand the compiled step ever holds. For the bucketed ZeRO-1
+    # schedule this must be O(max bucket), NOT O(arena) — the point of the
+    # bucketed schedule; a violation fails the dryrun.
+    rs_peak = hlo.get("maxop_reduce-scatter", 0.0)
+    info["grad_rs_peak_bytes"] = rs_peak
+    budget = info.get("grad_peak_budget_bytes")
+    if info.get("zero_schedule") == "bucketed" and budget is not None \
+            and info.get("grad_peak_strict") and rs_peak > budget:
+        rec = {"tag": tag, "status": "GRAD_PEAK_FAIL",
+               "error": (f"bucketed ZeRO-1 reduce-scatter operand peak "
+                         f"{rs_peak:.0f} B exceeds the max-bucket budget "
+                         f"{budget} B — the schedule is packing more than "
+                         f"one bucket at a time")}
+        _write(outdir, tag, rec)
+        return rec
     n_dev = 512 if multi_pod else 256
     rec = {
         "tag": tag, "status": "OK", "arch": arch, "shape": shape_name,
@@ -286,6 +338,12 @@ def main():
                     help="second-moment codec over the arena")
     ap.add_argument("--m-codec", default="fp32", choices=list(M_CODECS),
                     help="first-moment codec over the arena")
+    ap.add_argument("--zero-full-pack", action="store_true",
+                    help="legacy full-arena pack+scatter ZeRO-1 schedule in "
+                         "the shard_map engine (default: bucketed)")
+    ap.add_argument("--zero-bucket-rows", type=int, default=0,
+                    help="rest-region bucket cap in arena rows for the "
+                         "bucketed ZeRO-1 schedule (0 = default)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -294,6 +352,10 @@ def main():
     if args.arena or args.state_codec != "fp32" or args.m_codec != "fp32":
         extra_opt = {"arena": True, "state_codec": args.state_codec,
                      "m_codec": args.m_codec}
+    if args.zero_full_pack or args.zero_bucket_rows:
+        extra_opt = dict(extra_opt or {},
+                         zero_bucketed=not args.zero_full_pack,
+                         zero_bucket_rows=args.zero_bucket_rows)
     kw = dict(engine=args.engine, accum=args.accum,
               micro_batches=args.micro_batches, fsdp=not args.no_fsdp,
               remat=not args.no_remat, zero1=args.zero1,

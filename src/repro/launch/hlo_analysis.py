@@ -50,14 +50,15 @@ def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
     return out
 
 
+def _dims_bytes(dt: str, dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[dt]
+
+
 def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _shape_dims(type_str):
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * _DTYPE_BYTES[dt]
-    return total
+    return sum(_dims_bytes(dt, dims) for dt, dims in _shape_dims(type_str))
 
 
 def _ring_factor(kind: str, n: int) -> float:
@@ -135,14 +136,31 @@ class HloAnalysis:
             stack.add(comp)
             table = self.symbols[comp]
             for var, rtype, op, operands, line in self.ops[comp]:
-                if op in _COLLECTIVES or op.rstrip("-start") in _COLLECTIVES:
-                    kind = op[:-6] if op.endswith("-start") else op
-                    if kind in _COLLECTIVES:
-                        rg = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
-                        n = int(rg.group(2)) if rg else 1
+                kind = op[:-6] if op.endswith("-start") else op
+                if kind in _COLLECTIVES:
+                    rg = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+                    n = int(rg.group(2)) if rg else 1
+                    shapes = _shape_dims(rtype)
+                    if op.endswith("-start") and len(shapes) > 1:
+                        # async start: result type is the (operand, result)
+                        # pair — the collective's payload is the LAST
+                        # element, not the whole tuple
+                        b = _dims_bytes(*shapes[-1])
+                    else:
                         b = _shape_bytes(rtype)
-                        res[f"coll_{kind}"] += mult * b * _ring_factor(kind, n)
-                        res[f"coll_{kind}_raw"] += mult * b
+                    res[f"coll_{kind}"] += mult * b * _ring_factor(kind, n)
+                    res[f"coll_{kind}_raw"] += mult * b
+                    # peak LIVE operand bytes of any single collective of
+                    # this kind (NOT trip-count-multiplied — it is a
+                    # high-water mark, not a volume). For reduce-scatter
+                    # this is the gradient slab entering the collective:
+                    # the bucketed ZeRO-1 schedule bounds it by one
+                    # bucket, the full-pack schedule pays the whole
+                    # arena (launch/dryrun.py asserts on it).
+                    opb = sum(_shape_bytes(table.get(o, ""))
+                              for o in operands)
+                    key = f"maxop_{kind}"
+                    res[key] = max(res[key], float(opb))
                 if op == "dot":
                     shapes = _shape_dims(rtype)
                     if shapes:

@@ -48,6 +48,15 @@ def main():
     ap.add_argument("--zero-stage", type=int, default=0, choices=[0, 1],
                     help="ZeRO-1 optimizer-state sharding; with --arena the "
                          "state shards by row range (no-op on one device)")
+    ap.add_argument("--zero-full-pack", action="store_true",
+                    help="legacy full-arena pack+scatter ZeRO-1 gradient "
+                         "schedule instead of the default bucketed "
+                         "reduce-scatter stream (consulted by the shard_map "
+                         "DP engine: launch/dryrun.py, benchmarks/"
+                         "step_bench.py; inert in this pjit loop)")
+    ap.add_argument("--zero-bucket-rows", type=int, default=0,
+                    help="rest-region bucket cap in arena rows for the "
+                         "bucketed ZeRO-1 schedule (0 = default cap)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -64,7 +73,9 @@ def main():
             micro_batches=args.micro_batches, lr=args.lr,
             use_pallas=args.use_pallas or args.arena, arena=args.arena,
             state_codec=args.state_codec, m_codec=args.m_codec,
-            zero_stage=args.zero_stage),
+            zero_stage=args.zero_stage,
+            zero_bucketed=not args.zero_full_pack,
+            zero_bucket_rows=args.zero_bucket_rows),
         shape=shape, seed=args.seed, steps=args.steps,
         log_every=args.log_every, checkpoint_dir=args.checkpoint_dir)
     lr_fn = sched.warmup_cosine(args.lr, args.warmup, args.steps)

@@ -183,7 +183,14 @@ class Rules:
         codec columns). ZeRO-1 there is a ROW-RANGE shard: every m/v leaf
         gets P(dp_axes, None), validated against the kernel block alignment
         by core/zero.py::shard_rows (falls back to replicated when the row
-        count does not divide — rebuild with build_layout(n_shards=...))."""
+        count does not divide — rebuild with build_layout(n_shards=...)).
+
+        The same P(dp_axes, None) spec serves BOTH shard_map ZeRO-1
+        schedules (core/dp_shardmap.py): the spec only says "split the row
+        dim over dp"; which arena rows live in device k's block is the
+        schedule's contract — contiguous ranges under full-pack,
+        slice-k-of-every-bucket (partition order, core/buckets.py) under
+        the default bucketed schedule."""
         from repro.core.state_store import is_arena_backed, row_indexed_mask
         if is_arena_backed(abstract_opt.get("m")):
             from repro.core.zero import zero1_arena_pspec

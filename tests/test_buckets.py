@@ -1,0 +1,178 @@
+"""Bucket planner (core/buckets.py): alignment and shard divisibility,
+rest-region coalescing, the degenerate single-bucket case, the partition
+permutation, bucket-granular packing parity with the whole-arena pack, and
+the slice_block minimum (the layout re-padding that replaces the old
+gcd-to-8 behaviour)."""
+import dataclasses
+import math
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arena, buckets
+from repro.core.arena import LANES, MIN_SLICE_BLOCK, ROW_ALIGN
+from repro.core.buckets import plan_buckets
+
+
+def _tree(n_layers=3, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    return {
+        "embed": jax.random.normal(ks[0], (700, 64), jnp.float32),
+        "lm_head": jax.random.normal(ks[1], (64, 700)).astype(jnp.bfloat16),
+        "final_norm_scale": jax.random.normal(ks[2], (64,), jnp.float32),
+        "blocks": {
+            "w": jax.random.normal(ks[3], (n_layers, 257, 65), jnp.float32),
+            "b": jnp.ones((n_layers, 65), jnp.bfloat16),
+        },
+    }
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+def test_plan_alignment_and_shard_divisibility(n_shards):
+    lay = arena.build_layout(_tree(), n_shards=n_shards)
+    plan = plan_buckets(lay, n_shards)
+    unit = ROW_ALIGN * n_shards
+    # buckets partition [0, rows) contiguously in arena order
+    pos = 0
+    own = 0
+    for b in plan.buckets:
+        assert b.start == pos and b.rows > 0
+        assert b.rows % unit == 0                 # shard-divisible + aligned
+        assert b.slice_rows == b.rows // n_shards
+        assert b.own_offset == own                # partition offsets tile too
+        # per-bucket fold block: divides its own slice and offset, >= 8
+        assert b.fold_block >= ROW_ALIGN
+        assert b.slice_rows % b.fold_block == 0
+        assert b.own_offset % b.fold_block == 0
+        pos, own = b.stop, own + b.slice_rows
+    assert pos == lay.rows
+    assert own == lay.rows // n_shards == plan.shard_rows
+
+
+def test_stack_layers_map_to_per_layer_buckets():
+    lay = arena.build_layout(_tree(n_layers=5), n_shards=4)
+    plan = plan_buckets(lay, 4)
+    st = lay.stack("blocks")
+    sb = [b for b in plan.buckets if b.kind == "stack"]
+    assert len(sb) == 5
+    for j, b in enumerate(sb):
+        assert (b.layer_lo, b.layer_hi) == (j, j + 1)
+        assert b.start == st.row + j * st.layer_rows
+        assert b.rows == st.layer_rows
+    base, lslice, blk = plan.stack_slice("blocks")
+    for j, b in enumerate(sb):
+        assert b.own_offset == base + j * lslice
+        assert b.fold_block == blk                # uniform across the stack
+
+
+def test_rest_region_coalesces_under_cap():
+    lay = arena.build_layout(_tree(), n_shards=2)
+    # tiny cap -> many rest buckets; each respects the cap and the unit
+    cap = 4 * ROW_ALIGN * 2
+    plan = plan_buckets(lay, 2, max_bucket_rows=cap)
+    rb = [b for b in plan.buckets if b.kind == "rest"]
+    assert len(rb) > 1
+    assert all(b.rows <= cap for b in rb)
+    assert sum(b.rows for b in rb) == lay.rest.rows
+    # huge cap -> the whole rest region is one bucket
+    plan1 = plan_buckets(lay, 2, max_bucket_rows=10 * lay.rows)
+    assert len([b for b in plan1.buckets if b.kind == "rest"]) == 1
+    assert plan1.max_grad_bucket_rows <= max(
+        lay.rest.rows, lay.stack("blocks").layer_rows)
+
+
+def test_single_bucket_degenerate_case():
+    # no stacks, rest smaller than the default cap, one shard
+    tree = {"w": jnp.ones((40, 16), jnp.float32)}
+    lay = arena.build_layout(tree)
+    plan = plan_buckets(lay, 1)
+    grad = plan.grad_buckets()
+    assert len(grad) == 1 and grad[0].kind == "rest"
+    assert grad[0].slice_rows == grad[0].rows
+    # padding (if any) is owned but never folded
+    for b in plan.buckets:
+        if b.kind == "pad":
+            assert not b.has_grad
+    # identity permutation in the single-shard case
+    assert np.array_equal(buckets.partition_index(plan),
+                          np.arange(lay.rows))
+
+
+def test_plan_refuses_unpadded_layout():
+    # built for 1 shard: regions are MIN_SLICE_BLOCK(=64)-aligned, which a
+    # 16-way shard grain (128 rows) does not divide
+    lay = arena.build_layout(_tree())
+    assert lay.stack("blocks").layer_rows % (16 * ROW_ALIGN) != 0
+    with pytest.raises(ValueError, match="build_layout"):
+        plan_buckets(lay, 16)
+    # and the padded build is accepted
+    plan_buckets(arena.build_layout(_tree(), n_shards=16), 16)
+
+
+def test_pack_bucket_matches_whole_pack_bitwise():
+    tree = _tree()
+    for n_shards in (1, 4):
+        lay = arena.build_layout(tree, n_shards=n_shards)
+        plan = plan_buckets(lay, n_shards,
+                            max_bucket_rows=6 * ROW_ALIGN * n_shards)
+        packed = np.asarray(arena.pack(tree, lay))
+        for b in plan.buckets:
+            slab = np.asarray(buckets.pack_bucket(tree, lay, b))
+            assert slab.shape == (b.rows, LANES)
+            np.testing.assert_array_equal(slab, packed[b.start:b.stop])
+
+
+def test_partition_permutation_roundtrip_bitwise():
+    tree = _tree()
+    n_shards = 4
+    lay = arena.build_layout(tree, n_shards=n_shards)
+    plan = plan_buckets(lay, n_shards, max_bucket_rows=8 * ROW_ALIGN * 4)
+    perm = buckets.partition_index(plan)
+    assert sorted(perm.tolist()) == list(range(lay.rows))  # a permutation
+    x = jax.random.normal(jax.random.key(7), (lay.rows, LANES), jnp.float32)
+    # partition order = concat over shards of gather_owned_rows
+    part = jnp.concatenate([buckets.gather_owned_rows(x, plan, k)
+                            for k in range(n_shards)], axis=0)
+    np.testing.assert_array_equal(np.asarray(part)[perm], np.asarray(x))
+    np.testing.assert_array_equal(
+        np.asarray(buckets.unpermute_rows(part, plan)), np.asarray(x))
+
+
+def test_max_grad_bucket_bytes_excludes_padding():
+    tree = {"w": jnp.ones((5, 16), jnp.float32)}       # 1 row of data
+    lay = arena.build_layout(tree, n_shards=4)
+    plan = plan_buckets(lay, 4)
+    pad_rows = sum(b.rows for b in plan.buckets if not b.has_grad)
+    assert plan.max_grad_bucket_rows + pad_rows <= lay.rows
+    assert plan.max_grad_bucket_bytes == plan.max_grad_bucket_rows * LANES * 4
+
+
+# ---------------------------------------------------------------------------
+# slice_block minimum (the old gcd-to-tiny-blocks bug)
+# ---------------------------------------------------------------------------
+
+
+def test_build_layout_pads_to_min_slice_block():
+    lay = arena.build_layout(_tree())
+    for st in lay.stacks:
+        assert st.layer_rows % MIN_SLICE_BLOCK == 0
+        assert st.row % MIN_SLICE_BLOCK == 0
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")        # no warning on fresh layouts
+            assert lay.slice_block(st) >= MIN_SLICE_BLOCK
+    assert lay.rest.rows % MIN_SLICE_BLOCK == 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert lay.slice_block(lay.rest) >= MIN_SLICE_BLOCK
+
+
+def test_slice_block_warns_on_odd_hand_built_stride():
+    lay = arena.build_layout(_tree())
+    st = lay.stack("blocks")
+    odd = dataclasses.replace(st, layer_rows=24, row=8)   # ROW_ALIGN-only
+    with pytest.warns(UserWarning, match="MIN_SLICE_BLOCK"):
+        blk = lay.slice_block(odd)
+    assert blk == math.gcd(24, 8)                 # still correct, just slow

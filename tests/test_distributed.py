@@ -149,6 +149,146 @@ def test_dp_zero1_row_range_schedule_all_codecs():
         assert f"CODEC {combo}" in out
 
 
+def test_dp_zero1_bucketed_bitwise_matches_full_pack():
+    """Tentpole acceptance: the bucketed ZeRO-1 schedule (per-bucket
+    psum_scatter streamed into slice folds, state resident in partition
+    order — core/buckets.py) is BITWISE identical to the legacy full-pack
+    schedule on 4 fake devices: params bitwise for every tested codec pair,
+    sharded state bitwise after unpermuting row-indexed columns back to
+    arena order (rowcol's replicated column sums accumulate per-device
+    partials over different row groupings, so they — and everything
+    downstream of them — compare to fp summation-order tolerance instead).
+    Also the memory claim, from the compiled HLO: the bucketed step's
+    largest reduce-scatter operand is <= the plan's max-bucket budget,
+    while full-pack's equals the whole gradient arena."""
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.dp_shardmap import make_dp_train_step
+        from repro.core import buckets as buckets_mod
+        from repro.core.zero import zero1_bucket_plan
+        from repro.launch.hlo_analysis import analyze_hlo
+        from repro.kernels.adama_accum import LANES
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        batch = {'tokens': tokens, 'labels': tokens}
+        M, N = 4, 2
+        mesh = make_mesh((M,), ('data',))
+        combos = (('fp32', 'fp32'), ('fp32', 'int8'), ('int8', 'int8'),
+                  ('fp32', 'factored'), ('int8', 'rowcol'))
+        checked_hlo = False
+        for m_codec, v_codec in combos:
+            ocb = OptimizerConfig(name='adama', accumulation='adama',
+                                  micro_batches=N, use_pallas=True, arena=True,
+                                  zero_stage=1, state_codec=v_codec,
+                                  m_codec=m_codec)
+            ocf = dataclasses.replace(ocb, zero_bucketed=False)
+            step_b, init_b = make_dp_train_step(cfg, ocb, mesh, ('data',), 'adama')
+            step_f, init_f = make_dp_train_step(cfg, ocf, mesh, ('data',), 'adama')
+            with mesh:
+                pb, sb, mb = jax.jit(step_b)(params, init_b(params), batch)
+                pf, sf, mf = jax.jit(step_f)(params, init_f(params), batch)
+            rowcol = v_codec == 'rowcol'
+            pd = max(float(jnp.max(jnp.abs(a - b)))
+                     for a, b in zip(jax.tree.leaves(pb), jax.tree.leaves(pf)))
+            print('COMBO', m_codec + ':' + v_codec, 'PDIFF', pd)
+            assert (pd < 1e-6 if rowcol else pd == 0.0), (m_codec, v_codec, pd)
+            assert float(mb['loss']) == float(mf['loss'])
+            # sharded state: unpermute partition order -> arena order
+            lay = sb['m'].layout
+            plan = zero1_bucket_plan(lay, M)
+            su = buckets_mod.unpermute_state(sb, plan)
+            for k in ('m', 'v'):
+                for a, b in zip(jax.tree.leaves(su[k]), jax.tree.leaves(sf[k])):
+                    a, b = np.asarray(a), np.asarray(b)
+                    if rowcol:
+                        np.testing.assert_allclose(
+                            a.astype(np.float64), b.astype(np.float64),
+                            rtol=1e-5, atol=1e-7)
+                    else:
+                        assert np.array_equal(a, b), (m_codec, v_codec, k)
+            if not checked_hlo:     # memory claim, once (HLO is codec-invariant)
+                with mesh:
+                    hb = analyze_hlo(jax.jit(step_b).lower(
+                        params, init_b(params), batch).compile().as_text())
+                    hf = analyze_hlo(jax.jit(step_f).lower(
+                        params, init_f(params), batch).compile().as_text())
+                peak_b = hb['maxop_reduce-scatter']
+                peak_f = hf['maxop_reduce-scatter']
+                budget = plan.max_grad_bucket_bytes
+                arena_bytes = lay.rows * LANES * 4
+                print('GRAD_PEAK bucketed', peak_b, 'budget', budget,
+                      'fullpack', peak_f, 'arena', arena_bytes)
+                assert peak_b <= budget < arena_bytes, (peak_b, budget)
+                assert peak_f == arena_bytes, (peak_f, arena_bytes)
+                checked_hlo = True
+    """, devices=4, timeout=1800)
+    for combo in ("fp32:fp32", "fp32:int8", "int8:int8", "fp32:factored",
+                  "int8:rowcol"):
+        assert f"COMBO {combo}" in out
+    assert "GRAD_PEAK" in out
+
+
+def test_dp_zero1_layerwise_stream_matches_single_device():
+    """The layer-wise engine's ZeRO-1 gap, closed: variant='adama_layerwise'
+    streams each layer's gradient slab through its own psum_scatter out of
+    the backward scan (no gradient tree, no gradient arena) and matches
+    single-device AdamA over the same global micro-batch grouping within
+    the engine tolerances (the layerwise VJP pre-scales gradients through
+    the cotangent, so cross-engine parity is tolerance, not bitwise)."""
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.accumulation import make_train_step
+        from repro.core.dp_shardmap import make_dp_train_step
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        batch = {'tokens': tokens, 'labels': tokens}
+        M, N = 4, 2
+        mesh = make_mesh((M,), ('data',))
+        B = tokens.shape[0]; b = B // (M * N)
+        idx = jnp.array([k*(B//M) + i*b + j
+                         for i in range(N) for k in range(M) for j in range(b)])
+        ref_batch = {kk: v[idx] for kk, v in batch.items()}
+        for m_codec, v_codec, tol in (('fp32', 'fp32', 2e-5),
+                                      ('int8', 'int8', 4e-3),
+                                      ('fp32', 'rowcol', 1e-4)):
+            oc = OptimizerConfig(name='adama', accumulation='adama',
+                                 micro_batches=N, use_pallas=True, arena=True,
+                                 state_codec=v_codec, m_codec=m_codec)
+            step_s, init_s = make_train_step(cfg, oc)
+            p_s, _, _ = jax.jit(step_s)(params, init_s(params), ref_batch)
+            ocz = dataclasses.replace(oc, zero_stage=1)
+            step_z, init_z = make_dp_train_step(cfg, ocz, mesh, ('data',),
+                                                'adama_layerwise')
+            with mesh:
+                p_z, st_z, _ = jax.jit(step_z)(params, init_z(params), batch)
+            d = max(float(jnp.max(jnp.abs(a - b)))
+                    for a, b in zip(jax.tree.leaves(p_s), jax.tree.leaves(p_z)))
+            print('LW', m_codec + ':' + v_codec, 'PDIFF', d)
+            assert d < tol, (m_codec, v_codec, d, tol)
+            assert int(st_z['step']) == 1
+        # guard: the layerwise shard_map variant exists only as ZeRO-1 stream
+        try:
+            make_dp_train_step(cfg, oc, mesh, ('data',), 'adama_layerwise')
+            raise SystemExit('expected ValueError')
+        except ValueError as e:
+            assert 'zero_stage=1' in str(e)
+        print('GUARD OK')
+    """, devices=4, timeout=1800)
+    for combo in ("fp32:fp32", "int8:int8", "fp32:rowcol"):
+        assert f"LW {combo}" in out
+    assert "GUARD OK" in out
+
+
 def test_dp_comm_schedule_volumes():
     """Fig. 7's argument as HLO fact: per mini-batch collective volume is
     ~P for GA, ~2P for AdamA (m and v), ~N*P for the naive schedule."""

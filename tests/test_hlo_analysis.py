@@ -80,3 +80,74 @@ def test_collectives_in_scan_multiplied():
                          text=True, env=env, timeout=300)
     assert out.returncode == 0, out.stderr
     assert "OK" in out.stdout
+
+
+def test_collective_max_operand_bytes():
+    """`maxop_<kind>` is the largest SINGLE collective operand of that kind
+    — a high-water mark (NOT trip-count-multiplied): the bucketed ZeRO-1
+    schedule's peak-live-gradient assertion in launch/dryrun.py compares it
+    against a one-bucket budget even though the scatters sit inside a
+    lax.scan body, so a trip-multiplied peak would fail every dryrun by a
+    factor of N. Hand-built module: two reduce-scatters of different sizes
+    inside a known-trip-count while body."""
+    txt = """
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%cond (cx: f32[64,8]) -> pred[] {
+  %cx = f32[64,8] parameter(0)
+  ROOT %t = pred[] constant(true)
+}
+
+%body (x: f32[64,8]) -> f32[64,8] {
+  %x = f32[64,8] parameter(0)
+  %rs0 = f32[16,8] reduce-scatter(%x), replica_groups=[1,4]<=[4], to_apply=%add
+  %sl = f32[16,8] slice(%x), slice={[0:16], [0:8]}
+  %rs1 = f32[4,8] reduce-scatter(%sl), replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %y = f32[64,8] broadcast(%rs1), dimensions={0,1}
+}
+
+ENTRY %main (p0: f32[64,8]) -> f32[64,8] {
+  %p0 = f32[64,8] parameter(0)
+  ROOT %w = f32[64,8] while(%p0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+}
+"""
+    res = analyze_hlo(txt)
+    # peak operand = the 64x8 fp32 input (2048 B): a high-water mark, NOT
+    # multiplied by the trip count and not summed over the smaller scatter
+    assert res["maxop_reduce-scatter"] == 64 * 8 * 4
+    # ...while VOLUMES do multiply by the trip count
+    assert res["coll_reduce-scatter_raw"] == 5 * (16 * 8 + 4 * 8) * 4
+
+
+def test_async_start_collectives_counted():
+    """TPU-style async collectives lower to `<kind>-start`/`-done` pairs;
+    the analyzer must attribute them to the base kind (a plain `in
+    _COLLECTIVES` check misses them, and `.rstrip('-start')` strips a
+    CHARACTER SET, not the suffix — both would zero `maxop_reduce-scatter`
+    and make dryrun's bucketed grad-peak gate pass vacuously on exactly the
+    async-overlap schedules it exists to police). The start op's result is
+    the (operand, result) pair: the volume is the payload, not the tuple."""
+    txt = """
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64,8]) -> f32[16,8] {
+  %p0 = f32[64,8] parameter(0)
+  %rs = (f32[64,8], f32[16,8]) reduce-scatter-start(%p0), replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %d = f32[16,8] reduce-scatter-done(%rs)
+}
+"""
+    res = analyze_hlo(txt)
+    # operand high-water mark: the full 64x8 fp32 slab entering the start
+    assert res["maxop_reduce-scatter"] == 64 * 8 * 4
+    # volume counts the scattered payload once (16x8 shard), NOT the
+    # (operand, result) tuple, and the -done op adds nothing
+    assert res["coll_reduce-scatter_raw"] == 16 * 8 * 4
+    assert res["coll_reduce-scatter"] == 16 * 8 * 4 * 3  # ring (n-1)=3
