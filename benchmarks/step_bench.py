@@ -11,15 +11,34 @@ Schedules (4 fake devices, reduced bert_large + stablelm_1_6b):
                        monolithic psum_scatter per micro-batch
   adama_zero1_bucketed AdamA ZeRO-1, bucketed reduce-scatter stream
                        (core/buckets.py) — the default schedule
+  adama_zero1_bucketed_bf16
+                       the bucketed schedule on the MIXED-PRECISION wire:
+                       grad_dtype=bf16 (each bucket's slab packs and
+                       reduce-scatters as bf16, upcast in-kernel) +
+                       master_params (fp32 master in the arena, bf16
+                       working params all-gathered — half bytes both ways)
   layerwise_zero1      Algorithm 2 under ZeRO-1: per-layer grads stream
                        straight out of the backward (bucketed only)
 
 Emits experiments/BENCH_step.json. `--check` (the CI mode) runs only the
-two ZeRO-1 schedules and FAILS (non-zero exit) when
+three ZeRO-1 schedules and FAILS (non-zero exit) when
 
   * the bucketed step time regresses more than 5% vs full-pack, or
   * the bucketed schedule's largest reduce-scatter operand exceeds its
-    max-bucket budget (the peak-gradient-memory claim, from the HLO).
+    max-bucket budget (the peak-gradient-memory claim, from the HLO), or
+  * the bf16-wire row misses its memory/comm contract: grad reduce-scatter
+    operand peak OR total WIRE collective bytes > 0.55x the fp32-wire
+    bucketed row, or step time above the CPU-emulation ceiling (see
+    BF16_TIME_CEILING — XLA CPU legalizes the bf16 wire back to f32 with
+    converts, so "no worse" holds on bf16-native backends while the CPU
+    gate bounds the emulation overhead).
+
+Metric sources: `coll_bytes` is the trip-aware POST-optimization total —
+the bytes this backend really moves (on CPU, XLA float-normalizes bf16
+collectives to f32, so a bf16 run's coll_bytes stays fp32-sized there);
+`grad_rs_peak_bytes` and `wire_coll_bytes` come from the PRE-optimization
+HLO, where collectives keep the program's wire dtypes — what a bf16-native
+backend (TPU) moves, and what the bf16 gates compare.
 
 Wall-clock on CPU runs the Pallas kernels in interpret mode — absolute
 numbers are not TPU numbers, but the two ZeRO-1 schedules run the SAME
@@ -38,6 +57,20 @@ from pathlib import Path
 
 N_DEV = 4
 REGRESSION_CEILING = 1.05      # bucketed step time <= 1.05x full-pack
+# mixed-precision wire gates, vs the fp32-wire bucketed row: half the wire
+# bytes must show up as <= 0.55x the grad reduce-scatter operand peak AND
+# <= 0.55x the total wire collective bytes (0.05 slack for the fp32
+# collectives that remain — rowcol column psums, loss pmean).
+BF16_WIRE_RATIO = 0.55
+# Step-time gate for the bf16 row. The contract is "no worse than the fp32
+# wire" — on a bf16-native backend the bf16 row does strictly less work
+# (half the collective bytes, same math). This CI runs on XLA CPU, which
+# does NOT have a bf16 wire: float normalization re-widens every bf16
+# collective to f32 and brackets it with converts, so the CPU step does
+# the SAME f32 work PLUS the conversions — measured 1.05-1.10x here. The
+# ceiling bounds that emulation overhead; tightening it to 1.0 would gate
+# the CPU legalizer, not the schedule.
+BF16_TIME_CEILING = 1.15
 ARCHS = ("bert_large", "stablelm_1_6b")
 
 
@@ -48,6 +81,9 @@ def _schedules(check_only: bool):
         "adama_zero1_fullpack": ("adama", dict(base, zero_stage=1,
                                                zero_bucketed=False)),
         "adama_zero1_bucketed": ("adama", dict(base, zero_stage=1)),
+        "adama_zero1_bucketed_bf16": ("adama", dict(base, zero_stage=1,
+                                                    grad_dtype="bf16",
+                                                    master_params=True)),
     }
     if not check_only:
         scheds = {
@@ -55,6 +91,10 @@ def _schedules(check_only: bool):
             "adama": ("adama", dict(base)),
             **scheds,
             "layerwise_zero1": ("adama_layerwise", dict(base, zero_stage=1)),
+            "layerwise_zero1_bf16": ("adama_layerwise",
+                                     dict(base, zero_stage=1,
+                                          grad_dtype="bf16",
+                                          master_params=True)),
         }
     return scheds
 
@@ -112,28 +152,45 @@ def bench_arch(arch: str, check_only: bool, iters: int):
             step, init = make_dp_train_step(cfg, opt, mesh, ("data",),
                                             variant)
             opt_state = init(params)
-            compiled = jax.jit(step).lower(params, opt_state, batch).compile()
+            lowered = jax.jit(step).lower(params, opt_state, batch)
+            compiled = lowered.compile()
             # time the AOT executable itself — dispatching through jax.jit
             # would compile the same program a second time on first call
             fns[sched] = (compiled, (params, opt_state, batch))
             ma = compiled.memory_analysis()
             hlo = analyze_hlo(compiled.as_text())
+            # WIRE metrics from the pre-optimization HLO: the program's
+            # collectives in their true dtypes. XLA CPU's float
+            # normalization legalizes bf16 collectives to f32-with-converts
+            # in the optimized module, so the post-opt numbers above can't
+            # see the bf16 wire — a bf16-native backend (TPU) moves exactly
+            # these bytes. (No trip counts pre-opt: volumes count each scan
+            # body once — fine for the high-water mark and for ratios
+            # between same-structure schedules, which is all they gate.)
+            hlo_wire = analyze_hlo(lowered.as_text(dialect="hlo"))
+            from repro.core.state_store import optimizer_state_bytes
             rec = {
                 "peak_bytes_per_device": int(ma.argument_size_in_bytes +
                                              ma.output_size_in_bytes +
                                              ma.temp_size_in_bytes -
                                              ma.alias_size_in_bytes),
                 "temp_bytes": int(ma.temp_size_in_bytes),
-                "grad_rs_peak_bytes": int(hlo.get("maxop_reduce-scatter",
-                                                  0)),
+                "grad_rs_peak_bytes": int(hlo_wire.get("maxop_reduce-scatter",
+                                                       0)),
                 "coll_bytes": int(hlo.get("coll_total", 0)),
+                "wire_coll_bytes": int(hlo_wire.get("coll_total", 0)),
+                "grad_wire_dtype": opt.grad_dtype,
+                "master_param_bytes": optimizer_state_bytes(
+                    opt_state.get("p", ())),
             }
             if opt.zero_stage == 1 and (opt.zero_bucketed or
                                         variant == "adama_layerwise"):
+                from repro.configs.base import grad_wire_itemsize
                 from repro.core.zero import zero1_bucket_plan
                 plan = zero1_bucket_plan(opt_state["m"].layout, N_DEV,
                                          opt.zero_bucket_rows)
-                rec["grad_peak_budget_bytes"] = plan.max_grad_bucket_bytes
+                rec["grad_peak_budget_bytes"] = plan.grad_peak_bytes(
+                    grad_wire_itemsize(opt.grad_dtype))
                 rec["n_grad_buckets"] = len(plan.grad_buckets())
             out[sched] = rec
         times = _timed_interleaved(fns, warmup=2, iters=iters)
@@ -170,6 +227,28 @@ def run_checks(metrics) -> list:
                 f"{arch}: bucketed grad peak {buck['grad_rs_peak_bytes']} B "
                 f"not smaller than full-pack "
                 f"{full['grad_rs_peak_bytes']} B")
+        # mixed-precision wire contract vs the fp32-wire bucketed row
+        bf16 = scheds.get("adama_zero1_bucketed_bf16")
+        if not bf16:
+            continue
+        for key, label in (("grad_rs_peak_bytes",
+                            "grad reduce-scatter operand peak"),
+                           ("wire_coll_bytes", "total wire collective "
+                            "bytes")):
+            if buck[key] and bf16[key] > BF16_WIRE_RATIO * buck[key]:
+                bad.append(
+                    f"{arch}: bf16-wire {label} {bf16[key]} B > "
+                    f"{BF16_WIRE_RATIO}x fp32-wire {buck[key]} B")
+        budget = bf16.get("grad_peak_budget_bytes", 0)
+        if budget and bf16["grad_rs_peak_bytes"] > budget:
+            bad.append(
+                f"{arch}: bf16-wire grad reduce-scatter operand peak "
+                f"{bf16['grad_rs_peak_bytes']} B exceeds its (bf16) "
+                f"max-bucket budget {budget} B")
+        if bf16["step_us"] > BF16_TIME_CEILING * buck["step_us"]:
+            bad.append(
+                f"{arch}: bf16-wire step {bf16['step_us']} us > "
+                f"{BF16_TIME_CEILING}x fp32-wire {buck['step_us']} us")
     return bad
 
 
@@ -182,6 +261,8 @@ def main(check_only: bool = False, iters: int = 5,
     metrics["_meta"] = {"devices": N_DEV, "iters": iters,
                         "check_only": check_only,
                         "regression_ceiling": REGRESSION_CEILING,
+                        "bf16_wire_ratio": BF16_WIRE_RATIO,
+                        "bf16_time_ceiling": BF16_TIME_CEILING,
                         "failures": bad}
     if json_path:
         Path(json_path).parent.mkdir(parents=True, exist_ok=True)

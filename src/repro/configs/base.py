@@ -245,6 +245,32 @@ class OptimizerConfig:
     # rest-region bucket cap in arena rows (0 = core/buckets.py default,
     # 4096 rows = 16 MiB fp32 slab); per-layer stack buckets are uncapped.
     zero_bucket_rows: int = 0
+    # Gradient WIRE dtype of the arena fold pipeline (fp32 | bf16): the
+    # dtype gradients are PACKED and COLLECTIVELY MOVED in (core/arena.py
+    # pack helpers, the per-bucket/per-layer psum_scatters of
+    # core/dp_shardmap.py + core/layerwise.py). bf16 halves the live packed
+    # slab and every gradient collective; the fold kernels upcast to fp32
+    # IN-KERNEL, so the (m, v) accumulation itself stays fp32 (micro-batch-
+    # count independent) and no fp32 gradient buffer ever materializes.
+    # Requires arena=True (the wire IS the packed slab); the 'ga' engine is
+    # excluded — it sums raw gradients across micro-batches in the wire
+    # buffer, and bf16 accumulation would violate the fp32-accumulation
+    # contract. bf16-wire results match the fp32 wire to each codec's
+    # declared tolerance, NOT bitwise: each device's addend is rounded to
+    # bf16 before the collective, and the reduction's own arithmetic is
+    # backend-defined (ring implementations may keep partial sums in bf16
+    # hop-by-hop, so deviation can grow with DP size; tolerances are
+    # validated at 4 devices).
+    grad_dtype: str = "fp32"
+    # fp32 MASTER params in the arena (the standard AMP contract for
+    # compute_dtype=bfloat16 runs): state gains a third packed fp32 region
+    # "p"; the fused apply updates it in place and emits bf16 WORKING
+    # params from the same kernel (one extra output column set, still O(1)
+    # dispatch). The working params are a pure cast of the master every
+    # step, so the round-trip is exact by construction; under the shard_map
+    # ZeRO-1 schedule the param all-gather moves bf16 (half bytes) and the
+    # working params are never re-packed. Requires arena=True.
+    master_params: bool = False
     grad_clip: Optional[float] = None
 
     def __post_init__(self):
@@ -259,6 +285,23 @@ STATE_CODECS = ("fp32", "int8", "factored", "rowcol")    # second moment (v)
 M_CODECS = ("fp32", "int8")                              # first moment (m)
 ZERO_STAGES = (0, 1)
 ACCUM_ENGINES = ("ga", "adama", "adama_layerwise")
+GRAD_DTYPES = ("fp32", "bf16")                           # gradient wire
+
+
+def grad_wire_dtype(name: str):
+    """The jnp dtype a `grad_dtype` config value packs/moves gradients in —
+    the ONE mapping every consumer (engines, launchers, benches) shares."""
+    import jax.numpy as jnp
+    if name not in GRAD_DTYPES:
+        raise ValueError(f"unknown grad_dtype {name!r}; expected one of "
+                         f"{GRAD_DTYPES}")
+    return jnp.bfloat16 if name == "bf16" else jnp.float32
+
+
+def grad_wire_itemsize(name: str) -> int:
+    """Bytes per element on the gradient wire (budget/accounting sites)."""
+    import numpy as np
+    return np.dtype(grad_wire_dtype(name)).itemsize
 
 
 def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
@@ -283,6 +326,21 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
                         stream IS its schedule).
       arena=True      : requires use_pallas=True; the 'ga' engine's fused
                         update supports the adam/adama optimizer only.
+      grad_dtype=bf16 : requires arena=True (the wire IS the packed arena
+                        slab) and an AdamA fold engine (adama |
+                        adama_layerwise) — 'ga' accumulates raw gradients
+                        across micro-batches in the wire buffer, which must
+                        stay fp32. Composes with every (m_codec, v_codec)
+                        pair and both ZeRO-1 schedules: the fold kernels
+                        upcast in-kernel, so the codec transforms see fp32
+                        exactly as on the fp32 wire. Results match the fp32
+                        wire to each codec's declared bf16_wire tolerance
+                        (a psum of bf16 payloads over many micro-batches is
+                        to-tolerance, not bitwise).
+      master_params   : requires arena=True; any engine, any zero stage
+                        (the master region is row-indexed fp32, so it
+                        row-shards exactly like m/v; the working-param
+                        all-gather moves bf16).
 
     One engine-selection caveat lives outside this matrix (engine choice is
     not an OptimizerConfig field): the shard_map DP engine
@@ -324,6 +382,24 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
     if opt.zero_bucket_rows < 0:
         return (f"zero_bucket_rows must be >= 0 (0 = default cap), got "
                 f"{opt.zero_bucket_rows}")
+    if opt.grad_dtype not in GRAD_DTYPES:
+        return (f"unknown grad_dtype {opt.grad_dtype!r}; expected one of "
+                f"{GRAD_DTYPES}")
+    if opt.grad_dtype != "fp32" and not opt.arena:
+        return (f"grad_dtype={opt.grad_dtype!r} requires arena=True: the "
+                f"gradient wire is the packed arena slab (core/arena.py); "
+                f"pass arena=True use_pallas=True")
+    if opt.grad_dtype != "fp32" and opt.accumulation == "ga":
+        return (f"grad_dtype={opt.grad_dtype!r} with accumulation='ga' is "
+                f"unsupported: the ga engine SUMS raw gradients across "
+                f"micro-batches in the wire buffer, and bf16 accumulation "
+                f"loses the fp32-accumulation guarantee the AdamA fold "
+                f"kernels provide (they upcast in-kernel); use "
+                f"accumulation='adama' or 'adama_layerwise'")
+    if opt.master_params and not opt.arena:
+        return ("master_params=True requires arena=True: the fp32 master "
+                "region is a packed arena alongside m/v "
+                "(core/state_store.py); pass arena=True use_pallas=True")
     return None
 
 

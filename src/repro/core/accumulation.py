@@ -52,6 +52,13 @@ def _use_arena(opt: OptimizerConfig) -> bool:
     return opt.use_pallas and opt.arena
 
 
+def _wire_dtype(opt: OptimizerConfig):
+    """The gradient wire dtype the arena pack/collectives move
+    (OptimizerConfig.grad_dtype); fold kernels upcast in-pass."""
+    from repro.configs.base import grad_wire_dtype
+    return grad_wire_dtype(opt.grad_dtype)
+
+
 def _arena_init(opt: OptimizerConfig, state_shards: int = 1):
     """Arena state initializer honouring the configured codec; the layout is
     padded for `state_shards` equal row ranges whenever the caller may shard
@@ -60,15 +67,18 @@ def _arena_init(opt: OptimizerConfig, state_shards: int = 1):
     always safe while an unpadded layout makes shard_rows refuse."""
     return functools.partial(adama.init_arena, codec=opt.state_codec,
                              m_codec=opt.m_codec,
-                             n_shards=max(1, state_shards))
+                             n_shards=max(1, state_shards),
+                             master_params=opt.master_params)
 
 
 def _zero_constrain(opt: OptimizerConfig, state):
     """ZeRO-1 over the arena in the pjit engine: constrain every ROW-INDEXED
     state column to row-range sharding over the dp axes (replicated codec
     columns — e.g. the rowcol column sums, whose leading dim is 1 — stay
-    unconstrained). GSPMD then owns the reduce-scatter/all-gather schedule;
-    without an installed mesh this is a no-op (single-device runs, tests)."""
+    unconstrained; the fp32 master-param region "p" is row-indexed and
+    shards with them). GSPMD then owns the reduce-scatter/all-gather
+    schedule; without an installed mesh this is a no-op (single-device
+    runs, tests)."""
     if opt.zero_stage != 1 or not _use_arena(opt):
         return state
     from repro.core.state_store import row_indexed_mask
@@ -76,7 +86,9 @@ def _zero_constrain(opt: OptimizerConfig, state):
     mask = row_indexed_mask(state)
     return {k: (jax.tree.map(
                 lambda x, ri: maybe_shard(x, "dp", None) if ri else x,
-                v, mask[k]) if k in ("m", "v") else v)
+                v, mask[k]) if k in ("m", "v") else
+                (jax.tree.map(lambda x: maybe_shard(x, "dp", None), v)
+                 if k == "p" else v))
             for k, v in state.items()}
 
 
@@ -148,11 +160,16 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
             opt_state = state_store.fold_state(
                 dict(opt_state, step=step_c), grads, beta1=opt.beta1,
                 beta2=opt.beta2, decay=(opt.beta1, opt.beta2))
-            p_new = state_store.apply_state(
-                arena_mod.pack(params, layout), opt_state, lr=lr,
-                bc1=1 - opt.beta1 ** t, bc2=1 - opt.beta2 ** t, eps=opt.eps,
-                weight_decay=opt.weight_decay)
-            params = arena_mod.unpack(p_new, layout)
+            kw = dict(lr=lr, bc1=1 - opt.beta1 ** t, bc2=1 - opt.beta2 ** t,
+                      eps=opt.eps, weight_decay=opt.weight_decay)
+            if state_store.has_master(opt_state):
+                work, opt_state = state_store.apply_master_state(
+                    opt_state, **kw)
+                params = arena_mod.unpack(work, layout)
+            else:
+                p_new = state_store.apply_state(
+                    arena_mod.pack(params, layout), opt_state, **kw)
+                params = arena_mod.unpack(p_new, layout)
             return params, _zero_constrain(opt, opt_state), {"loss": lsum / n}
         kw = dict(lr=lr, weight_decay=opt.weight_decay)
         if opt_mod is adam:
@@ -181,6 +198,7 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
     use_arena = _use_arena(opt)
+    wire = _wire_dtype(opt)
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
@@ -194,7 +212,8 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
                 i, mb = xs
                 l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
                 st = adama.accumulate(st, g, b1, b2, scale=1.0 / n,
-                                      decay=_fold_decay(i, b1, b2, m_devices))
+                                      decay=_fold_decay(i, b1, b2, m_devices),
+                                      grad_dtype=wire)
                 return (st, lsum + l), None
 
             (state, lsum), _ = lax.scan(body, (state, 0.0),
@@ -239,6 +258,7 @@ def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
     use_arena = _use_arena(opt)
+    wire = _wire_dtype(opt)
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
@@ -255,7 +275,8 @@ def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
                 l, st = layerwise_loss_and_fold(
                     cfg, params, mb, st, beta1=b1, beta2=b2, scale=1.0 / n,
                     use_pallas=True,
-                    decay=_fold_decay(i, b1, b2, m_devices))
+                    decay=_fold_decay(i, b1, b2, m_devices),
+                    grad_dtype=wire)
                 return (st, lsum + l), None
 
             (state, lsum), _ = lax.scan(body, (state, 0.0),

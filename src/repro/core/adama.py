@@ -38,16 +38,25 @@ def init(params) -> State:
 
 
 def init_arena(params, codec: str = "fp32", m_codec: str = "fp32",
-               n_shards: int = 1) -> State:
+               n_shards: int = 1, master_params: bool = False) -> State:
     """Arena-backed state: both moments are codec-encoded arena columns
     (core/state_store.py; `codec` selects v's codec, `m_codec` m's), so each
     fold/apply is ONE kernel dispatch for every registered pair. `n_shards`
-    pads the layout for ZeRO-1 row-range sharding (core/zero.py::shard_rows)."""
+    pads the layout for ZeRO-1 row-range sharding (core/zero.py::shard_rows).
+
+    `master_params=True` adds the fp32 MASTER-PARAM region: state["p"]
+    packs `params` as a third fp32 arena alongside m and v. The apply then
+    updates the master and emits bf16 working params from the same kernel
+    (state_store.apply_master_state) — the standard AMP contract, with the
+    round-trip exact by construction."""
     from repro.core import state_store
     layout = arena_mod.build_layout(params, n_shards=n_shards)
-    return {"m": state_store.get_codec(m_codec, "m").init(layout),
-            "v": state_store.get_codec(codec, "v").init(layout),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"m": state_store.get_codec(m_codec, "m").init(layout),
+             "v": state_store.get_codec(codec, "v").init(layout),
+             "step": jnp.zeros((), jnp.int32)}
+    if master_params:
+        state["p"] = Arena(arena_mod.pack(params, layout), layout)
+    return state
 
 
 def is_arena_state(state: State) -> bool:
@@ -68,9 +77,9 @@ def begin_minibatch(state: State, beta1: float, beta2: float,
     if is_arena_state(state):
         from repro.core import state_store
         mc, vc = state_store.state_codecs(state)
-        return {"m": mc.scale_state(state["m"], beta1),
-                "v": vc.scale_state(state["v"], m_devices * beta2),
-                "step": state["step"] + 1}
+        return dict(state, m=mc.scale_state(state["m"], beta1),
+                    v=vc.scale_state(state["v"], m_devices * beta2),
+                    step=state["step"] + 1)
     return {
         "m": jax.tree.map(lambda m: beta1 * m, state["m"]),
         "v": jax.tree.map(lambda v: (m_devices * beta2) * v, state["v"]),
@@ -80,17 +89,21 @@ def begin_minibatch(state: State, beta1: float, beta2: float,
 
 def accumulate(state: State, grads, beta1: float, beta2: float,
                use_pallas: bool = False, scale: float = 1.0,
-               decay=None) -> State:
+               decay=None, grad_dtype=jnp.float32) -> State:
     """Fold one micro-batch's gradients into (m, v); Algorithm 2 inner loop.
 
     `scale` multiplies g before the fold (Alg. 1 line 6's 1/N, applied
     in-kernel on the arena path). `decay=(dm, dv)` folds the begin-minibatch
-    decay into this call (pass it on the first micro-batch only)."""
+    decay into this call (pass it on the first micro-batch only).
+    `grad_dtype` is the arena path's gradient WIRE dtype: bf16 packs a
+    half-size slab; the fold kernel upcasts in-pass and still accumulates
+    the moments in fp32."""
     if is_arena_state(state):
         from repro.core import state_store
-        g = arena_mod.pack(grads, state["m"].layout)
+        g = arena_mod.pack(grads, state["m"].layout, dtype=grad_dtype)
         return state_store.fold_state(state, g, beta1=beta1, beta2=beta2,
-                                      scale=scale, decay=decay)
+                                      scale=scale, decay=decay,
+                                      grad_dtype=grad_dtype)
     if decay is not None:
         state = {"m": jax.tree.map(lambda m: decay[0] * m, state["m"]),
                  "v": jax.tree.map(lambda v: decay[1] * v, state["v"]),
@@ -139,7 +152,10 @@ def allreduce_states(state: State, axis_names: Sequence[str],
                      state["m"])
     v = jax.tree.map(lambda x: jax.lax.psum(x, axis_names) / (m_devices ** 2),
                      state["v"])
-    return {"m": m, "v": v, "step": state["step"]}
+    # extra keys (the fp32 master-param region "p") pass through UNsummed:
+    # the master is replicated and every device applies the identical
+    # post-psum update to it, so it stays replicated without a collective
+    return dict(state, m=m, v=v)
 
 
 def finalize(params, state: State, *, lr, beta1: float, beta2: float,
@@ -153,6 +169,14 @@ def finalize(params, state: State, *, lr, beta1: float, beta2: float,
     if is_arena_state(state):
         from repro.core import state_store
         layout = state["m"].layout
+        if state_store.has_master(state):
+            # master-param apply: the fp32 truth lives in state["p"] — the
+            # incoming (bf16-precision working) params are never packed,
+            # and the same kernel emits the next step's working params
+            work, state = state_store.apply_master_state(
+                state, lr=lr, bc1=bc1, bc2=bc2, eps=eps,
+                weight_decay=weight_decay)
+            return arena_mod.unpack(work, layout), state
         p_new = state_store.apply_state(
             arena_mod.pack(params, layout), state, lr=lr, bc1=bc1, bc2=bc2,
             eps=eps, weight_decay=weight_decay)

@@ -20,10 +20,16 @@ Within a region each leaf starts on a fresh row; tail lanes of its last row
 are zero padding that no kernel result ever depends on (fold keeps 0 at 0,
 unpack never reads it).
 
-Everything is packed as fp32 (m, v are fp32 anyway; params/grads are cast on
-pack and cast back to their recorded dtype on unpack — bitwise identical to
-the per-leaf kernels' in-kernel casts). Mixed-dtype trees therefore share a
-single arena and a single dispatch.
+Everything is packed as fp32 by default (m, v are fp32 anyway; params/grads
+are cast on pack and cast back to their recorded dtype on unpack — bitwise
+identical to the per-leaf kernels' in-kernel casts). Mixed-dtype trees
+therefore share a single arena and a single dispatch.
+
+Every pack helper additionally takes a `dtype` — the GRADIENT WIRE dtype of
+the mixed-precision AdamA path (`OptimizerConfig.grad_dtype`): packing a
+gradient tree with dtype=bfloat16 halves the slab and every collective that
+moves it, and the fold kernels (kernels/fused_step.py) upcast to fp32
+in-pass so the moments still accumulate exactly.
 """
 from __future__ import annotations
 
@@ -227,47 +233,50 @@ def build_layout(tree, n_shards: int = 1) -> ArenaLayout:
 # ---------------------------------------------------------------------------
 
 
-def _pack_region(leaves, specs, region_rows, lead: Tuple[int, ...] = ()):
+def _pack_region(leaves, specs, region_rows, lead: Tuple[int, ...] = (),
+                 dtype=jnp.float32):
     """Concatenate leaves (each reshaped (*lead, -1), zero-padded to whole
-    rows) into a (*lead, region_rows, LANES) fp32 block."""
+    rows) into a (*lead, region_rows, LANES) `dtype` block."""
     mats = []
     for x, spec in zip(leaves, specs):
-        flat = x.reshape(lead + (-1,)).astype(jnp.float32)
+        flat = x.reshape(lead + (-1,)).astype(dtype)
         pad = spec.rows * LANES - spec.size
         if pad:
             flat = jnp.pad(flat, [(0, 0)] * len(lead) + [(0, pad)])
         mats.append(flat.reshape(lead + (spec.rows, LANES)))
     used = sum(s.rows for s in specs)
     if region_rows > used:
-        mats.append(jnp.zeros(lead + (region_rows - used, LANES), jnp.float32))
+        mats.append(jnp.zeros(lead + (region_rows - used, LANES), dtype))
     return jnp.concatenate(mats, axis=len(lead)) if len(mats) > 1 else mats[0]
 
 
-def pack_layer(layer_tree, spec: StackSpec) -> jnp.ndarray:
-    """One layer's (un-stacked) subtree -> (layer_rows, LANES) fp32 slab."""
+def pack_layer(layer_tree, spec: StackSpec, dtype=jnp.float32) -> jnp.ndarray:
+    """One layer's (un-stacked) subtree -> (layer_rows, LANES) `dtype` slab."""
     leaves = spec.treedef.flatten_up_to(layer_tree)
-    return _pack_region(leaves, spec.leaves, spec.layer_rows)
+    return _pack_region(leaves, spec.leaves, spec.layer_rows, dtype=dtype)
 
 
-def pack_rest(rest_tree, layout: ArenaLayout) -> jnp.ndarray:
-    """The non-stacked remainder -> (rest.rows, LANES) fp32 slab."""
+def pack_rest(rest_tree, layout: ArenaLayout, dtype=jnp.float32) -> jnp.ndarray:
+    """The non-stacked remainder -> (rest.rows, LANES) `dtype` slab."""
     leaves = layout.rest.treedef.flatten_up_to(rest_tree)
-    return _pack_region(leaves, layout.rest.leaves, layout.rest.rows)
+    return _pack_region(leaves, layout.rest.leaves, layout.rest.rows,
+                        dtype=dtype)
 
 
-def pack_stack_layers(stack_tree, spec: StackSpec, j0: int, j1: int
-                      ) -> jnp.ndarray:
+def pack_stack_layers(stack_tree, spec: StackSpec, j0: int, j1: int,
+                      dtype=jnp.float32) -> jnp.ndarray:
     """Layers [j0, j1) of a stacked subtree -> ((j1-j0)*layer_rows, LANES)
-    fp32 slab — rows [spec.row + j0*layer_rows, spec.row + j1*layer_rows) of
-    the full pack, bitwise, without materializing the other layers."""
+    `dtype` slab — rows [spec.row + j0*layer_rows, spec.row + j1*layer_rows)
+    of the full pack, bitwise, without materializing the other layers."""
     assert 0 <= j0 < j1 <= spec.n_layers, (j0, j1, spec.n_layers)
     leaves = [x[j0:j1] for x in spec.treedef.flatten_up_to(stack_tree)]
-    block = _pack_region(leaves, spec.leaves, spec.layer_rows, lead=(j1 - j0,))
+    block = _pack_region(leaves, spec.leaves, spec.layer_rows,
+                         lead=(j1 - j0,), dtype=dtype)
     return block.reshape(-1, LANES)
 
 
-def pack_rest_rows(rest_tree, layout: ArenaLayout, row_lo: int, row_hi: int
-                   ) -> jnp.ndarray:
+def pack_rest_rows(rest_tree, layout: ArenaLayout, row_lo: int, row_hi: int,
+                   dtype=jnp.float32) -> jnp.ndarray:
     """Arena rows [row_lo, row_hi) of the rest region's pack — bitwise equal
     to pack_rest(...)[row_lo-rest.row : row_hi-rest.row] but touching only
     the leaves that intersect the range (the bucketed ZeRO-1 schedule packs
@@ -284,7 +293,7 @@ def pack_rest_rows(rest_tree, layout: ArenaLayout, row_lo: int, row_hi: int
         b = min(spec.row + spec.rows, hi)
         if a >= b:
             continue
-        flat = x.reshape(-1).astype(jnp.float32)
+        flat = x.reshape(-1).astype(dtype)
         e0 = (a - spec.row) * LANES
         e1 = min(spec.size, (b - spec.row) * LANES)
         seg = flat[e0:max(e0, e1)]
@@ -294,25 +303,25 @@ def pack_rest_rows(rest_tree, layout: ArenaLayout, row_lo: int, row_hi: int
         mats.append(seg.reshape(b - a, LANES))
         cursor = b
     if cursor < hi:                      # region alignment rows past leaves
-        mats.append(jnp.zeros((hi - cursor, LANES), jnp.float32))
+        mats.append(jnp.zeros((hi - cursor, LANES), dtype))
     return jnp.concatenate(mats, axis=0) if len(mats) > 1 else mats[0]
 
 
-def pack(tree, layout: ArenaLayout) -> jnp.ndarray:
-    """Whole tree -> (layout.rows, LANES) fp32 arena (layer-major stacks)."""
+def pack(tree, layout: ArenaLayout, dtype=jnp.float32) -> jnp.ndarray:
+    """Whole tree -> (layout.rows, LANES) `dtype` arena (layer-major stacks)."""
     stack_items, rest_tree = split_tree(tree)
     parts = []
     for (name, sub), spec in zip(stack_items, layout.stacks):
         assert name == spec.name
         leaves = spec.treedef.flatten_up_to(sub)
         block = _pack_region(leaves, spec.leaves, spec.layer_rows,
-                             lead=(spec.n_layers,))
+                             lead=(spec.n_layers,), dtype=dtype)
         parts.append(block.reshape(-1, LANES))
     if layout.rest.rows:
-        parts.append(pack_rest(rest_tree, layout))
+        parts.append(pack_rest(rest_tree, layout, dtype=dtype))
     used = sum(p.shape[0] for p in parts)
     if layout.rows > used:
-        parts.append(jnp.zeros((layout.rows - used, LANES), jnp.float32))
+        parts.append(jnp.zeros((layout.rows - used, LANES), dtype))
     return jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
 
 

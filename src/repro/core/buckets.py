@@ -105,7 +105,13 @@ class BucketPlan:
     def max_grad_bucket_bytes(self) -> int:
         """Peak live packed-gradient bytes of the schedule: the largest slab
         that ever enters a reduce-scatter (fp32 lanes)."""
-        return self.max_grad_bucket_rows * LANES * 4
+        return self.grad_peak_bytes(4)
+
+    def grad_peak_bytes(self, wire_itemsize: int = 4) -> int:
+        """Peak live packed-gradient bytes for a given wire itemsize —
+        `grad_dtype=bf16` halves the slab (wire_itemsize=2), so the budget
+        the dryrun/step-bench gates compare against halves with it."""
+        return self.max_grad_bucket_rows * LANES * wire_itemsize
 
     def stack_slice(self, name: str) -> Tuple[int, int, int]:
         """(own_offset of layer 0's slice, slice rows per layer, fold
@@ -177,17 +183,20 @@ def plan_buckets(layout: ArenaLayout, n_shards: int, *,
 # ---------------------------------------------------------------------------
 
 
-def pack_bucket(grads, layout: ArenaLayout, b: Bucket) -> jnp.ndarray:
-    """One bucket's (b.rows, LANES) fp32 gradient slab from the grad tree —
-    rows [b.start, b.stop) of pack(grads, layout), bitwise, without
-    materializing the rest of the arena."""
+def pack_bucket(grads, layout: ArenaLayout, b: Bucket,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """One bucket's (b.rows, LANES) `dtype` gradient slab from the grad tree
+    — rows [b.start, b.stop) of pack(grads, layout, dtype), bitwise, without
+    materializing the rest of the arena. `dtype` is the gradient WIRE dtype:
+    bf16 halves both the live slab and its reduce-scatter payload."""
     if b.kind == "stack":
         return arena_mod.pack_stack_layers(grads[b.name], layout.stack(b.name),
-                                           b.layer_lo, b.layer_hi)
+                                           b.layer_lo, b.layer_hi, dtype=dtype)
     if b.kind == "rest":
         _, rest_tree = arena_mod.split_tree(grads)
-        return arena_mod.pack_rest_rows(rest_tree, layout, b.start, b.stop)
-    return jnp.zeros((b.rows, LANES), jnp.float32)
+        return arena_mod.pack_rest_rows(rest_tree, layout, b.start, b.stop,
+                                        dtype=dtype)
+    return jnp.zeros((b.rows, LANES), dtype)
 
 
 def gather_owned_rows(x: jnp.ndarray, plan: BucketPlan, idx) -> jnp.ndarray:
@@ -222,18 +231,45 @@ def unpermute_rows(x: jnp.ndarray, plan: BucketPlan) -> jnp.ndarray:
     return jnp.take(x, jnp.asarray(partition_index(plan)), axis=0)
 
 
+@functools.lru_cache(maxsize=32)
+def _arena_index(plan: BucketPlan) -> np.ndarray:
+    """inv[partition_row] = arena row — the inverse of partition_index."""
+    return np.argsort(partition_index(plan)).astype(np.int32)
+
+
+def permute_rows(x: jnp.ndarray, plan: BucketPlan) -> jnp.ndarray:
+    """Arena-order (rows, ...) array -> partition order — the exact inverse
+    of `unpermute_rows` (bitwise). This is the RESIDENT order of every
+    row-indexed global state column under the bucketed schedule; use it to
+    seed non-zero state (the fp32 master-param region, a restored
+    checkpoint) before handing it to the bucketed step function."""
+    return jnp.take(x, jnp.asarray(_arena_index(plan)), axis=0)
+
+
+def _map_rows(state, plan: BucketPlan, row_fn):
+    import jax
+
+    def fix(leaf):
+        if hasattr(leaf, "shape") and leaf.ndim >= 1 and \
+                leaf.shape[0] == plan.layout.rows:
+            return row_fn(leaf, plan)
+        return leaf
+
+    return jax.tree.map(fix, state)
+
+
 def unpermute_state(state, plan: BucketPlan):
     """Re-order a bucketed-schedule optimizer state's GLOBAL row-indexed
     columns from partition order back to arena order, so MomentState.to_tree
     / checkpoint comparisons see the same arrays the full-pack schedule
     stores. Replicated columns (leading dim 1) and the step scalar pass
     through."""
-    import jax
+    return _map_rows(state, plan, unpermute_rows)
 
-    def fix(leaf):
-        if hasattr(leaf, "shape") and leaf.ndim >= 1 and \
-                leaf.shape[0] == plan.layout.rows:
-            return unpermute_rows(leaf, plan)
-        return leaf
 
-    return jax.tree.map(fix, state)
+def permute_state(state, plan: BucketPlan):
+    """Inverse of `unpermute_state`: arena-order global state -> the
+    bucketed schedule's partition-order residency (e.g. when resuming a
+    canonical — arena-order — checkpoint into a bucketed run; see
+    train/checkpoint.py)."""
+    return _map_rows(state, plan, permute_rows)

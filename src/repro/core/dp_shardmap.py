@@ -48,6 +48,25 @@ per-layer backward streams each layer's packed gradient slab into its
 reduce-scatter the moment the VJP emits it — no gradient tree and no
 gradient arena ever materialize (see core/layerwise.py's ZeroStream).
 
+Mixed-precision wire (OptimizerConfig.grad_dtype="bf16"): every gradient
+slab above — the full-pack arena, each bucket, each layer's layerwise slab
+— is PACKED as bf16 and every gradient psum_scatter moves bf16 payloads,
+halving both the one-bucket live-gradient peak and the reduce-scatter
+volume. The receiving fold kernels upcast to fp32 in-pass, so the (m, v)
+accumulation itself is unchanged; a reduction over bf16 payloads matches
+the fp32 wire to tolerance, not bitwise — each device's addend is rounded
+to bf16 before the collective, and the reduction's own arithmetic is
+backend-defined (a ring implementation may round intermediate partial
+sums to bf16 at every hop, so the deviation can grow with the DP size;
+the declared per-codec tolerances are validated at M=4).
+
+Master params (OptimizerConfig.master_params): under ZeRO-1 the state
+carries a third row-indexed fp32 region "p" — each device persistently owns
+its master rows (partition order under the bucketed schedule), the fused
+apply updates them in place and emits bf16 WORKING rows, and the param
+all-gather moves those bf16 rows (half the bytes). Params are never
+re-packed from the tree: the fp32 truth never leaves the arena.
+
 Manual axes = the DP axes ("data", and "pod" when multi-pod); the "model"
 axis (if present in the mesh) is left to GSPMD (auto) so tensor-parallel
 sharding composes.
@@ -101,6 +120,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
     b1, b2 = opt.beta1, opt.beta2
     use_arena = opt.use_pallas and opt.arena
     zero1 = opt.zero_stage == 1
+    from repro.configs.base import grad_wire_dtype
+    wire = grad_wire_dtype(opt.grad_dtype)
     if zero1 and not use_arena:
         raise ValueError(
             "zero_stage=1 in the shard_map DP engine requires the arena "
@@ -183,22 +204,26 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                     return layerwise_loss_and_fold(
                         cfg, params, mb, st, beta1=b1, beta2=b2, scale=scale,
                         use_pallas=True, decay=decay,
-                        zero=ZeroStream(plan, dp_axes, rdecay))
+                        zero=ZeroStream(plan, dp_axes, rdecay),
+                        grad_dtype=wire)
                 l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
                 if plan is None:
-                    g_own = lax.psum_scatter(arena_mod.pack(g, lay), dp_axes,
-                                             scatter_dimension=0, tiled=True)
+                    g_own = lax.psum_scatter(
+                        arena_mod.pack(g, lay, dtype=wire), dp_axes,
+                        scatter_dimension=0, tiled=True)
                     return l, state_store.fold_state(
                         st, g_own, beta1=b1, beta2=b2, scale=scale,
-                        decay=decay, replicated_decay=rdecay)
+                        decay=decay, replicated_decay=rdecay,
+                        grad_dtype=wire)
                 st = state_store.begin_micro_state(st, rdecay)
                 for b in plan.grad_buckets():
-                    slab = buckets_mod.pack_bucket(g, lay, b)
+                    slab = buckets_mod.pack_bucket(g, lay, b, dtype=wire)
                     own = lax.psum_scatter(slab, dp_axes,
                                            scatter_dimension=0, tiled=True)
                     st = state_store.fold_slice_state(
                         st, own, b.own_offset, beta1=b1, beta2=b2,
-                        block=b.fold_block, scale=scale, decay=decay)
+                        block=b.fold_block, scale=scale, decay=decay,
+                        grad_dtype=wire)
                 return l, st
 
             def body(carry, xs):
@@ -212,17 +237,24 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             state = state_store.psum_replicated_state(state, dp_axes)
             lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
             t = state["step"].astype(jnp.float32)
-            idx = jnp.int32(0)
-            for a in dp_axes:
-                idx = idx * lax.psum(1, a) + lax.axis_index(a)
-            p_arena = arena_mod.pack(params, lay)
-            p_own = (lax.dynamic_slice_in_dim(p_arena, idx * rows_own,
-                                              rows_own, axis=0)
-                     if plan is None else
-                     buckets_mod.gather_owned_rows(p_arena, plan, idx))
-            p_own = state_store.apply_state(
-                p_own, state, lr=lr, bc1=1 - b1 ** t, bc2=1 - b2 ** t,
-                eps=opt.eps, weight_decay=opt.weight_decay)
+            kw = dict(lr=lr, bc1=1 - b1 ** t, bc2=1 - b2 ** t,
+                      eps=opt.eps, weight_decay=opt.weight_decay)
+            if state_store.has_master(state):
+                # the device already owns its fp32 master rows (partition
+                # order under the bucketed schedule): update them in place
+                # and all-gather the emitted bf16 WORKING rows — half the
+                # gather bytes, and params are never re-packed
+                p_own, state = state_store.apply_master_state(state, **kw)
+            else:
+                idx = jnp.int32(0)
+                for a in dp_axes:
+                    idx = idx * lax.psum(1, a) + lax.axis_index(a)
+                p_arena = arena_mod.pack(params, lay)
+                p_own = (lax.dynamic_slice_in_dim(p_arena, idx * rows_own,
+                                                  rows_own, axis=0)
+                         if plan is None else
+                         buckets_mod.gather_owned_rows(p_arena, plan, idx))
+                p_own = state_store.apply_state(p_own, state, **kw)
             p_full = lax.all_gather(p_own, dp_axes, axis=0, tiled=True)
             if plan is not None:        # partition order -> arena order
                 p_full = buckets_mod.unpermute_rows(p_full, plan)
@@ -248,7 +280,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                 i, mb = xs
                 l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
                 st = adama.accumulate(st, g, b1, b2, scale=1.0 / n,
-                                      decay=_fold_decay(i, b1, b2, m_dev))
+                                      decay=_fold_decay(i, b1, b2, m_dev),
+                                      grad_dtype=wire)
                 return (st, lsum + l), None
             (state, lsum), _ = lax.scan(body, (state, 0.0),
                                         (jnp.arange(n), micro))
@@ -278,12 +311,15 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
 
     def _zero1_ospec(opt_state):
         """ZeRO-1: every ROW-INDEXED state column (per the codec's declared
-        column list) is sharded over the dp axes; replicated codec columns
-        (rowcol's (1, LANES) column sums) and the scalar step ride
-        alongside replicated."""
+        column list) is sharded over the dp axes; the fp32 master-param
+        region "p" (when present) is row-indexed and shards with them;
+        replicated codec columns (rowcol's (1, LANES) column sums) and the
+        scalar step ride alongside replicated."""
         mask = state_store.row_indexed_mask(opt_state)
-        return {k: (jax.tree.map(lambda ri: P(dp_axes, None) if ri else rep,
-                                 mask[k]) if k in ("m", "v") else rep)
+        row = P(dp_axes, None)
+        return {k: (jax.tree.map(lambda ri: row if ri else rep,
+                                 mask[k]) if k in ("m", "v") else
+                    row if k == "p" else rep)
                 for k in opt_state}
 
     def step(params, opt_state, batch):
@@ -299,9 +335,22 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
         if variant == "ga":
             return adam.init(params)
         if use_arena:
-            return adama.init_arena(params, codec=opt.state_codec,
-                                    m_codec=opt.m_codec,
-                                    n_shards=m_dev if zero1 else 1)
+            st = adama.init_arena(params, codec=opt.state_codec,
+                                  m_codec=opt.m_codec,
+                                  n_shards=m_dev if zero1 else 1,
+                                  master_params=opt.master_params)
+            if opt.master_params and zero1 and \
+                    (opt.zero_bucketed or variant == "adama_layerwise"):
+                # the bucketed schedule's resident row order is the
+                # PARTITION order (core/buckets.py); m/v start at zero
+                # (permutation-invariant) but the master packs real params
+                # — pre-permute it so each shard's rows are its owned
+                # slices in bucket order
+                plan = zero1_bucket_plan(st["m"].layout, m_dev,
+                                         opt.zero_bucket_rows)
+                st["p"] = st["p"].with_data(
+                    buckets_mod.permute_rows(st["p"].data, plan))
+            return st
         return adama.init(params)
 
     return step, init

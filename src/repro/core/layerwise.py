@@ -85,14 +85,18 @@ def _fold_tree(m, v, g, beta1, beta2, use_pallas):
 
 def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
                             beta1: float, beta2: float, scale: float,
-                            use_pallas: bool = False, decay=None, zero=None):
+                            use_pallas: bool = False, decay=None, zero=None,
+                            grad_dtype=jnp.float32):
     """One micro-batch: forward, then layer-by-layer backward folding grads
     into (m, v). Returns (loss, new_state). Gradients are scaled by `scale`
     (= 1/N; 1/(N*M) under DP), matching Algorithm 1 line 6. `decay` (arena
     mode only) fuses the begin-minibatch decay into this micro-batch's
     folds. `zero` (a ZeroStream) streams every fold through a per-bucket
     psum_scatter into the device's OWNED row block — `state` then carries
-    the shard-local columns, in partition order."""
+    the shard-local columns, in partition order. `grad_dtype` (arena mode)
+    is the gradient WIRE dtype: each layer's slab is packed — and
+    reduce-scattered, under `zero` — as bf16, halving the live slab and the
+    collective payload; the slice-fold kernel upcasts in-pass."""
     assert decay is None or is_arena_state(state), \
         "fused decay requires arena-backed state"
     assert zero is None or is_arena_state(state), \
@@ -101,7 +105,7 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
         return _layerwise_audio(cfg, params, batch, state, beta1=beta1,
                                 beta2=beta2, scale=scale,
                                 use_pallas=use_pallas, decay=decay,
-                                zero=zero)
+                                zero=zero, grad_dtype=grad_dtype)
 
     kind = main_stack_kind(cfg)
     causal = cfg.arch_type != "encoder"
@@ -208,7 +212,7 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
             dlp, dxin = vjp((dx_c, scale))               # aux cotangent=scale
             m_c, v_c = _fold_layer(m_c, v_c, dlp, j, spec, lay if arena_st
                                    else None, beta1, beta2, use_pallas, decay,
-                                   codec, zero)
+                                   codec, zero, grad_dtype)
             return (dxin, m_c, v_c), None
 
         carry0 = ((dx, m_acc, v_acc) if arena_st else
@@ -226,10 +230,9 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     d_rest = jax.tree.map(lambda a, b_: a + b_, d_rest_post, d_rest_pre)
     if arena_st:
         m_acc, v_acc = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
-                                  decay, codec, zero)
-        return loss, {"m": mc.wrap(lay, m_acc),
-                      "v": vc.wrap(lay, v_acc),
-                      "step": state["step"]}
+                                  decay, codec, zero, grad_dtype)
+        return loss, dict(state, m=mc.wrap(lay, m_acc),
+                          v=vc.wrap(lay, v_acc))
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
                                         d_rest[k], beta1, beta2, use_pallas)
@@ -237,7 +240,7 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
 
 
 def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
-                codec=None, zero=None):
+                codec=None, zero=None, grad_dtype=jnp.float32):
     """Fold one layer's gradient tree. Tree mode: per-leaf fold into row j of
     the (m, v) stacks. Arena mode: pack dlp into one slab and fold it into
     the layer's arena row slice with a single offset-indexed kernel fusing
@@ -249,7 +252,7 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
     reader after the collective, so its buffer dies inside the iteration."""
     if lay is not None:
         from repro.core import state_store
-        g2 = arena_mod.pack_layer(dlp, spec)
+        g2 = arena_mod.pack_layer(dlp, spec, dtype=grad_dtype)
         if zero is not None:
             g2 = lax.psum_scatter(g2, zero.axis_names, scatter_dimension=0,
                                   tiled=True)
@@ -260,7 +263,7 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
             block = lay.slice_block(spec)
         return state_store.fold_slice(
             codec[0], codec[1], m_c, v_c, g2, off, beta1=beta1, beta2=beta2,
-            block=block, decay=decay)
+            block=block, decay=decay, grad_dtype=grad_dtype)
     m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
         s, j, 0, keepdims=False), m_c)
     v_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
@@ -274,7 +277,7 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
 
 
 def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
-               zero=None):
+               zero=None, grad_dtype=jnp.float32):
     """Arena mode: fold ALL non-stacked leaves' gradients with one
     codec-aware kernel over the contiguous rest region. With `zero` the
     region streams one size-capped bucket at a time: pack the bucket's rows
@@ -287,17 +290,20 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
         for b in zero.plan.grad_buckets():
             if b.kind != "rest":
                 continue
-            slab = arena_mod.pack_rest_rows(d_rest, lay, b.start, b.stop)
+            slab = arena_mod.pack_rest_rows(d_rest, lay, b.start, b.stop,
+                                            dtype=grad_dtype)
             own = lax.psum_scatter(slab, zero.axis_names,
                                    scatter_dimension=0, tiled=True)
             m_acc, v_acc = state_store.fold_slice(
                 codec[0], codec[1], m_acc, v_acc, own, b.own_offset,
-                beta1=beta1, beta2=beta2, block=b.fold_block, decay=decay)
+                beta1=beta1, beta2=beta2, block=b.fold_block, decay=decay,
+                grad_dtype=grad_dtype)
         return m_acc, v_acc
-    g2 = arena_mod.pack_rest(d_rest, lay)
+    g2 = arena_mod.pack_rest(d_rest, lay, dtype=grad_dtype)
     return state_store.fold_slice(
         codec[0], codec[1], m_acc, v_acc, g2, lay.rest.row, beta1=beta1,
-        beta2=beta2, block=lay.slice_block(lay.rest), decay=decay)
+        beta2=beta2, block=lay.slice_block(lay.rest), decay=decay,
+        grad_dtype=grad_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +312,8 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
 
 
 def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
-                     use_pallas, decay=None, zero=None):
+                     use_pallas, decay=None, zero=None,
+                     grad_dtype=jnp.float32):
     tokens = batch["tokens"]
     frames = batch["frames"].astype(_cdt(cfg))
     b, s = tokens.shape
@@ -383,7 +390,7 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         _, vjp = jax.vjp(dec_block, lp, xin, enc_out)
         dlp, dxin, denc_j = vjp((dx_c, scale))
         m_c, v_c = _fold_layer(m_c, v_c, dlp, j, dec_spec, lay, beta1, beta2,
-                               use_pallas, decay, codec, zero)
+                               use_pallas, decay, codec, zero, grad_dtype)
         return (dxin, denc + denc_j, m_c, v_c), None
 
     denc0 = jnp.zeros_like(enc_out)
@@ -409,7 +416,7 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                                          causal=False), lp, xin)
         dlp, dxin = vjp((dx_c, scale))
         m_c, v_c = _fold_layer(m_c, v_c, dlp, j, enc_spec, lay, beta1, beta2,
-                               use_pallas, decay, codec, zero)
+                               use_pallas, decay, codec, zero, grad_dtype)
         return (dxin, m_c, v_c), None
 
     ne = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
@@ -423,10 +430,9 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                           d_rest_post, d_rest_encn, d_rest_pre)
     if arena_st:
         m_new, v_new = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
-                                  decay, codec, zero)
-        return ce, {"m": mc.wrap(lay, m_new),
-                    "v": vc.wrap(lay, v_new),
-                    "step": state["step"]}
+                                  decay, codec, zero, grad_dtype)
+        return ce, dict(state, m=mc.wrap(lay, m_new),
+                        v=vc.wrap(lay, v_new))
     new_m["enc_blocks"], new_v["enc_blocks"] = m_new, v_new
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],

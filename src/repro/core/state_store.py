@@ -111,6 +111,13 @@ class Conformance:
     # None = no elementwise parity bound (lossy statistic codec — the
     # harness falls back to the structural contracts below)
     drift_lr: Optional[float]
+    # elementwise |p(bf16 wire) - p(fp32 wire)| after one mini-batch, in
+    # units of lr, same codec pair both sides: the drift the bf16 gradient
+    # wire (OptimizerConfig.grad_dtype) may add. The wire perturbs g by at
+    # most one bf16 ulp (~2^-8 relative) BEFORE the fp32 in-kernel upcast,
+    # so for continuous codecs the drift is a small fraction of lr; quantized
+    # codecs can flip a code boundary and inherit their own drift scale.
+    bf16_wire_lr: float
     # |p_new - p_0| <= |p_new_fp32 - p_0| elementwise (updates only damped).
     # This is a PER-FOLD guarantee: a signed m shrunk toward zero on fold i
     # can overshoot the fp32 trajectory past zero when fold i+1's gradient
@@ -179,7 +186,8 @@ class Fp32Codec(MomentCodec):
 
     name = "fp32"
     conformance = Conformance(drift_lr=0.0, never_amplify=True,
-                              row_local=True, engine_tol=5e-6)
+                              row_local=True, engine_tol=5e-6,
+                              bf16_wire_lr=0.25)
 
     def __init__(self, moment: str):
         self.moment = moment
@@ -204,7 +212,8 @@ class Int8Codec(MomentCodec):
 
     name = "int8"
     conformance = Conformance(drift_lr=2.0, never_amplify=True,
-                              row_local=True, engine_tol=2e-3)
+                              row_local=True, engine_tol=2e-3,
+                              bf16_wire_lr=2.0)
 
     def __init__(self, moment: str):
         self.moment = moment
@@ -230,7 +239,8 @@ class FactoredCodec(MomentCodec):
 
     name = "factored"
     conformance = Conformance(drift_lr=None, never_amplify=True,
-                              row_local=True, engine_tol=5e-6)
+                              row_local=True, engine_tol=5e-6,
+                              bf16_wire_lr=1.0)
 
     moment = "v"
 
@@ -258,7 +268,8 @@ class RowColCodec(MomentCodec):
 
     name = "rowcol"
     conformance = Conformance(drift_lr=None, never_amplify=False,
-                              row_local=False, engine_tol=2e-3)
+                              row_local=False, engine_tol=2e-3,
+                              bf16_wire_lr=1.0)
 
     moment = "v"
 
@@ -330,13 +341,17 @@ def _decay_pair(decay):
 
 
 def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
-         decay=None, replicated_decay=None):
+         decay=None, replicated_decay=None, grad_dtype=None):
     """Whole-arena fold of one micro-batch's gradient arena into both
     moments: one fused pallas_call. `decay=(dm, dv)` fuses the
     begin-minibatch decay (row-indexed columns decay in-kernel; replicated
     columns decay here, outside). `replicated_decay` overrides the decay of
     replicated columns only — the ZeRO-1 schedule passes dv/M so that the
-    per-shard partial column sums psum to the exact global statistic."""
+    per-shard partial column sums psum to the exact global statistic.
+    `g` may ride the bf16 wire (upcast in-kernel, fp32 accumulation);
+    `grad_dtype` pins the caller's CONFIGURED wire against the slab it
+    actually packed (a pack site that dropped the dtype fails loudly
+    instead of silently widening the wire)."""
     mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
     if decay is not None or replicated_decay is not None:
         rdm, rdv = _decay_pair(decay if replicated_decay is None
@@ -347,37 +362,43 @@ def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
     return fused_step.arena_fold(tuple(m_parts), tuple(v_parts), g,
                                  beta1=beta1, beta2=beta2, scale=scale,
                                  decay=decay, m_codec=mc.kernel,
-                                 v_codec=vc.kernel)
+                                 v_codec=vc.kernel, grad_dtype=grad_dtype)
 
 
 def fold_slice(m_codec, v_codec, m_parts, v_parts, g, row_offset, *,
-               beta1, beta2, block, scale=1.0, decay=None):
+               beta1, beta2, block, scale=1.0, decay=None, grad_dtype=None):
     """Fold a gradient slab into rows [row_offset, row_offset+rows_g).
     Unlike `fold`, replicated columns are NOT decayed here — a micro-batch
     is many slice folds, so the engine decays them once per micro-batch via
-    `codec.begin_micro` (see core/layerwise.py)."""
+    `codec.begin_micro` (see core/layerwise.py). `grad_dtype` as in
+    `fold`: the declared wire is validated against the slab."""
     mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
     from repro.kernels import fused_step
     return fused_step.arena_fold_slice(tuple(m_parts), tuple(v_parts), g,
                                        row_offset, beta1=beta1, beta2=beta2,
                                        block=block, scale=scale, decay=decay,
-                                       m_codec=mc.kernel, v_codec=vc.kernel)
+                                       m_codec=mc.kernel, v_codec=vc.kernel,
+                                       grad_dtype=grad_dtype)
 
 
 def apply(m_codec, v_codec, p, m_parts, v_parts, *, lr, bc1, bc2, eps=1e-8,
-          weight_decay=0.0):
+          weight_decay=0.0, work_dtype=None):
     """Bias-corrected apply over the packed param arena, decoding both
-    moments in-pass; p aliased in-place."""
+    moments in-pass; p aliased in-place. With `work_dtype`, `p` is the fp32
+    master region and the kernel also emits the `work_dtype` working params
+    — returns (master_new, work) instead of the single updated arena."""
     mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
     from repro.kernels import fused_step
     return fused_step.arena_apply(p, tuple(m_parts), tuple(v_parts), lr=lr,
                                   bc1=bc1, bc2=bc2, eps=eps,
                                   weight_decay=weight_decay,
-                                  m_codec=mc.kernel, v_codec=vc.kernel)
+                                  m_codec=mc.kernel, v_codec=vc.kernel,
+                                  work_dtype=work_dtype)
 
 
 # ---------------------------------------------------------------------------
-# State-dict-level helpers (state = {"m": ..., "v": ..., "step": ...})
+# State-dict-level helpers (state = {"m": ..., "v": ..., "step": ...}, plus
+# an optional "p" master-param Arena — extra keys always pass through)
 # ---------------------------------------------------------------------------
 
 
@@ -385,17 +406,24 @@ def state_codecs(state) -> Tuple[MomentCodec, MomentCodec]:
     return codec_of(state["m"], "m"), codec_of(state["v"], "v")
 
 
+def has_master(state) -> bool:
+    """Whether the state dict carries the fp32 master-param region
+    (OptimizerConfig.master_params; see apply_master_state)."""
+    return "p" in state
+
+
 def fold_state(state, g, *, beta1, beta2, scale=1.0, decay=None,
-               replicated_decay=None):
+               replicated_decay=None, grad_dtype=None):
     """One fused fold of a packed gradient arena into the state dict."""
     mc, vc = state_codecs(state)
     layout = state["m"].layout
     m_parts, v_parts = fold(mc, vc, mc.parts_of(state["m"]),
                             vc.parts_of(state["v"]), g, beta1=beta1,
                             beta2=beta2, scale=scale, decay=decay,
-                            replicated_decay=replicated_decay)
-    return {"m": mc.wrap(layout, m_parts), "v": vc.wrap(layout, v_parts),
-            "step": state["step"]}
+                            replicated_decay=replicated_decay,
+                            grad_dtype=grad_dtype)
+    return dict(state, m=mc.wrap(layout, m_parts),
+                v=vc.wrap(layout, v_parts))
 
 
 def begin_micro_state(state, decay):
@@ -408,15 +436,15 @@ def begin_micro_state(state, decay):
         return state
     mc, vc = state_codecs(state)
     layout = state["m"].layout
-    return {"m": mc.wrap(layout, mc.begin_micro(
-                mc.parts_of(state["m"]), decay[0])),
-            "v": vc.wrap(layout, vc.begin_micro(
-                vc.parts_of(state["v"]), decay[1])),
-            "step": state["step"]}
+    return dict(state,
+                m=mc.wrap(layout, mc.begin_micro(
+                    mc.parts_of(state["m"]), decay[0])),
+                v=vc.wrap(layout, vc.begin_micro(
+                    vc.parts_of(state["v"]), decay[1])))
 
 
 def fold_slice_state(state, g, row_offset, *, beta1, beta2, block, scale=1.0,
-                     decay=None):
+                     decay=None, grad_dtype=None):
     """One fused slice fold of a gradient slab into rows
     [row_offset, row_offset + g.shape[0]) of the state dict. Replicated
     codec columns are NOT decayed here (see fold_slice) — pair with
@@ -426,9 +454,10 @@ def fold_slice_state(state, g, row_offset, *, beta1, beta2, block, scale=1.0,
     m_parts, v_parts = fold_slice(mc, vc, mc.parts_of(state["m"]),
                                   vc.parts_of(state["v"]), g, row_offset,
                                   beta1=beta1, beta2=beta2, block=block,
-                                  scale=scale, decay=decay)
-    return {"m": mc.wrap(layout, m_parts), "v": vc.wrap(layout, v_parts),
-            "step": state["step"]}
+                                  scale=scale, decay=decay,
+                                  grad_dtype=grad_dtype)
+    return dict(state, m=mc.wrap(layout, m_parts),
+                v=vc.wrap(layout, v_parts))
 
 
 def apply_state(p, state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
@@ -436,6 +465,22 @@ def apply_state(p, state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
     mc, vc = state_codecs(state)
     return apply(mc, vc, p, mc.parts_of(state["m"]), vc.parts_of(state["v"]),
                  lr=lr, bc1=bc1, bc2=bc2, eps=eps, weight_decay=weight_decay)
+
+
+def apply_master_state(state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0,
+                       work_dtype=jnp.bfloat16):
+    """Master-param apply: one fused kernel updates the fp32 master region
+    (`state["p"]`, aliased in-place) AND emits the `work_dtype` working-
+    param arena the next forward consumes. Returns (work_arena, new_state).
+    The working params are a pure cast of the fp32 master every step — the
+    master never round-trips through bf16, so the AMP round-trip is exact
+    by construction (no precision leak across steps, no extra collective)."""
+    mc, vc = state_codecs(state)
+    p_master, p_work = apply(
+        mc, vc, state["p"].data, mc.parts_of(state["m"]),
+        vc.parts_of(state["v"]), lr=lr, bc1=bc1, bc2=bc2, eps=eps,
+        weight_decay=weight_decay, work_dtype=work_dtype)
+    return p_work, dict(state, p=state["p"].with_data(p_master))
 
 
 def row_indexed_mask(state):
@@ -460,11 +505,11 @@ def psum_replicated_state(state, axis_names):
     mini-batch, before the apply."""
     mc, vc = state_codecs(state)
     layout = state["m"].layout
-    return {"m": mc.wrap(layout, mc.psum_replicated(
-                mc.parts_of(state["m"]), axis_names)),
-            "v": vc.wrap(layout, vc.psum_replicated(
-                vc.parts_of(state["v"]), axis_names)),
-            "step": state["step"]}
+    return dict(state,
+                m=mc.wrap(layout, mc.psum_replicated(
+                    mc.parts_of(state["m"]), axis_names)),
+                v=vc.wrap(layout, vc.psum_replicated(
+                    vc.parts_of(state["v"]), axis_names)))
 
 
 def optimizer_state_bytes(state) -> int:

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import M_CODECS, STATE_CODECS
+from repro.configs.base import GRAD_DTYPES, M_CODECS, STATE_CODECS
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, OptimizerConfig,
                            get_config, shape_supported)
 from repro.core.accumulation import make_train_step
@@ -117,7 +117,9 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
             # reduce-scatter operand against this budget.
             from repro.core.zero import zero1_bucket_plan
             from repro.kernels.adama_accum import LANES
+            from repro.configs.base import grad_wire_itemsize
             lay = aopt["m"].layout
+            wire_bytes = grad_wire_itemsize(opt.grad_dtype)
             # the budget gate is STRICT only when every non-trivial mesh
             # axis is a manual DP axis: with an auto ("model") axis left to
             # GSPMD, the module may contain tensor-parallel reduce-scatters
@@ -130,11 +132,13 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
             if opt.zero_bucketed or variant == "adama_layerwise":
                 plan = zero1_bucket_plan(lay, dp_size, opt.zero_bucket_rows)
                 info["zero_schedule"] = "bucketed"
-                info["grad_peak_budget_bytes"] = plan.max_grad_bucket_bytes
+                # budget in WIRE bytes: grad_dtype=bf16 halves the slab
+                info["grad_peak_budget_bytes"] = \
+                    plan.grad_peak_bytes(wire_bytes)
                 info["n_grad_buckets"] = len(plan.grad_buckets())
             else:
                 info["zero_schedule"] = "full_pack"
-                info["grad_peak_budget_bytes"] = lay.rows * LANES * 4
+                info["grad_peak_budget_bytes"] = lay.rows * LANES * wire_bytes
         if info is not None:
             # measured optimizer-state footprint (the Table-3 row): global
             # bytes of the abstract state the engine allocates, and the
@@ -154,6 +158,12 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
                 _sharded_bytes(aopt, ospecs, mesh)
             info["state_codec"] = opt.state_codec
             info["m_codec"] = opt.m_codec
+            # mixed-precision AdamA surface: the gradient wire dtype the
+            # fold pipeline moves, and the fp32 master-param region's bytes
+            # (0 when master_params is off)
+            info["grad_wire_dtype"] = opt.grad_dtype
+            info["master_param_bytes"] = optimizer_state_bytes(
+                aopt.get("p", ()))
         osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
         batch = input_specs(cfg, shape)
         bspecs = rules.batch_pspecs(batch)
@@ -225,6 +235,10 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
                 tag += f"__m-{v['m_codec']}"
         if k == "extra_opt" and v and not v.get("zero_bucketed", True):
             tag += "__fullpack"
+        if k == "extra_opt" and v and v.get("grad_dtype", "fp32") != "fp32":
+            tag += f"__wire-{v['grad_dtype']}"
+        if k == "extra_opt" and v and v.get("master_params"):
+            tag += "__master"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     info = {}
@@ -258,10 +272,20 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
     coll = {k[5:]: v for k, v in hlo.items() if k.startswith("coll_")}
     coll["total"] = hlo.get("coll_total", 0.0)
     # measured peak gradient live bytes: the largest single reduce-scatter
-    # operand the compiled step ever holds. For the bucketed ZeRO-1
-    # schedule this must be O(max bucket), NOT O(arena) — the point of the
-    # bucketed schedule; a violation fails the dryrun.
-    rs_peak = hlo.get("maxop_reduce-scatter", 0.0)
+    # operand the step ever holds, read from the PRE-optimization HLO —
+    # the program's wire dtypes (a bf16 gradient wire is bf16 there on
+    # every backend; CPU's float normalization re-widens it post-opt). For
+    # the bucketed ZeRO-1 schedule this must be O(max bucket), NOT
+    # O(arena) — the point of the bucketed schedule; a violation fails the
+    # dryrun. The wire-level collective total rides along for the
+    # mixed-precision comm accounting.
+    hlo_wire = analyze_hlo(lowered.as_text(dialect="hlo"))
+    coll["wire_total"] = hlo_wire.get("coll_total", 0.0)
+    # shard_map programs carry explicit collectives pre-opt (wire dtypes);
+    # pjit programs get theirs from GSPMD during compilation, so the wire
+    # parse is empty there — fall back to the post-opt (backend) peak
+    rs_peak = hlo_wire.get("maxop_reduce-scatter", 0.0) or \
+        hlo.get("maxop_reduce-scatter", 0.0)
     info["grad_rs_peak_bytes"] = rs_peak
     budget = info.get("grad_peak_budget_bytes")
     if info.get("zero_schedule") == "bucketed" and budget is not None \
@@ -344,14 +368,26 @@ def main():
     ap.add_argument("--zero-bucket-rows", type=int, default=0,
                     help="rest-region bucket cap in arena rows for the "
                          "bucketed ZeRO-1 schedule (0 = default)")
+    ap.add_argument("--grad-dtype", default="fp32", choices=list(GRAD_DTYPES),
+                    help="gradient WIRE dtype of the arena fold pipeline: "
+                         "bf16 halves the packed slab and every gradient "
+                         "collective (fold kernels upcast in-kernel); "
+                         "requires --arena")
+    ap.add_argument("--master-params", action="store_true",
+                    help="fp32 master params in the arena + bf16 working "
+                         "params emitted by the fused apply (AMP contract); "
+                         "requires --arena")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
     extra_opt = None
-    if args.arena or args.state_codec != "fp32" or args.m_codec != "fp32":
+    if args.arena or args.state_codec != "fp32" or args.m_codec != "fp32" \
+            or args.grad_dtype != "fp32" or args.master_params:
         extra_opt = {"arena": True, "state_codec": args.state_codec,
-                     "m_codec": args.m_codec}
+                     "m_codec": args.m_codec,
+                     "grad_dtype": args.grad_dtype,
+                     "master_params": args.master_params}
     if args.zero_full_pack or args.zero_bucket_rows:
         extra_opt = dict(extra_opt or {},
                          zero_bucketed=not args.zero_full_pack,

@@ -8,6 +8,27 @@ ourselves: every computation is scanned for ops, and call sites (`calls=`,
 `body=`, `to_apply=`, `branch_computations=`) are walked from ENTRY with
 multipliers — `while` bodies multiply by their `known_trip_count`.
 
+Two HLO sources, one parser (both spellings are accepted: optimized HLO
+prefixes instruction names with `%`, pre-optimization HLO does not):
+
+  compiled.as_text()              post-optimization: what the BACKEND runs.
+                                  Trip counts are known, so volumes are
+                                  loop-aware — but backend legalization
+                                  leaks in: XLA CPU's float normalization
+                                  rewrites every bf16 collective to
+                                  convert -> f32 collective -> convert, so
+                                  a bf16 gradient wire reads as f32 here.
+  lowered.as_text(dialect="hlo")  pre-optimization: the PROGRAM's
+                                  collectives, in their true WIRE dtypes
+                                  (a bf16 psum_scatter is bf16[...] here on
+                                  every backend). While trip counts are not
+                                  yet annotated, so volumes count each loop
+                                  body once — use it for high-water marks
+                                  (`maxop_*`) and same-structure ratios
+                                  (bf16 vs fp32 wire), not absolute
+                                  volumes. This is what a bf16-native
+                                  backend (TPU) actually moves.
+
 Collective bytes per device use the ring model with group size n parsed from
 `replica_groups=[g,n]<=[...]`:
     all-reduce          2*(n-1)/n * result_bytes
@@ -39,7 +60,21 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
                "bitcast", "after-all", "partition-id", "replica-id", "iota"}
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _operand_names(line: str):
+    """Instruction operand names. Optimized HLO operands are `%`-prefixed
+    (and shape-typed, with commas inside the shapes): collect every `%name`
+    after the opening paren — computation refs (`to_apply=%add`) ride along
+    harmlessly, they are not in the value symbol table. Pre-optimization
+    HLO has no `%` sigils and bare, untyped operand names: take the
+    comma-separated args inside the op's parens."""
+    rest = line.split("(", 1)[1]
+    if "%" in line:
+        return re.findall(r"%([\w.\-]+)", rest)
+    return [tok.strip() for tok in rest.split(")", 1)[0].split(",")
+            if tok.strip()]
 
 
 def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
@@ -61,6 +96,27 @@ def _shape_bytes(type_str: str) -> int:
     return sum(_dims_bytes(dt, dims) for dt, dims in _shape_dims(type_str))
 
 
+_RG_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([\d,\s]*)\}")
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group of a collective instruction. Two HLO
+    spellings: the iota form `replica_groups=[g,n]<=[...]` (n per group) and
+    the explicit-list form `replica_groups={{0,1,2,3},{4,...}}` (count the
+    first group's members — groups are equal-sized). The CPU/shard_map
+    lowering emits the explicit form, which a [g,n]-only parse reads as
+    n=1 — zeroing every ring factor and silently reporting 0 collective
+    bytes (the `coll_bytes: 0` bug in experiments/BENCH_step.json)."""
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 1
+
+
 def _ring_factor(kind: str, n: int) -> float:
     if n <= 1:
         return 0.0
@@ -79,8 +135,12 @@ class HloAnalysis:
         self.entry = None
         cur = None
         for line in text.splitlines():
+            # computation headers: optimized HLO spells the full signature
+            # (`%name (args) -> type {`), pre-optimization HLO just the
+            # name (`name {` / `ENTRY name {`)
             m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$",
-                         line)
+                         line) or \
+                re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\{\s*$", line)
             if m:
                 cur = m.group(2)
                 self.comps[cur] = []
@@ -106,7 +166,7 @@ class HloAnalysis:
                     continue
                 var, rtype, op = dm.groups()
                 table[var] = rtype
-                operands = re.findall(r"%([\w.\-]+)", line.split("(", 1)[1])
+                operands = _operand_names(line)
                 ops.append((var, rtype, op, operands, line))
                 trip = 1
                 tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
@@ -138,8 +198,7 @@ class HloAnalysis:
             for var, rtype, op, operands, line in self.ops[comp]:
                 kind = op[:-6] if op.endswith("-start") else op
                 if kind in _COLLECTIVES:
-                    rg = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
-                    n = int(rg.group(2)) if rg else 1
+                    n = _group_size(line)
                     shapes = _shape_dims(rtype)
                     if op.endswith("-start") and len(shapes) > 1:
                         # async start: result type is the (operand, result)

@@ -14,7 +14,7 @@ import dataclasses
 import jax
 
 from repro.configs import INPUT_SHAPES, InputShape, OptimizerConfig, RunConfig, get_config
-from repro.configs.base import M_CODECS, STATE_CODECS
+from repro.configs.base import GRAD_DTYPES, M_CODECS, STATE_CODECS
 from repro.optim import schedule as sched
 from repro.train.loop import train
 
@@ -57,6 +57,15 @@ def main():
     ap.add_argument("--zero-bucket-rows", type=int, default=0,
                     help="rest-region bucket cap in arena rows for the "
                          "bucketed ZeRO-1 schedule (0 = default cap)")
+    ap.add_argument("--grad-dtype", default="fp32", choices=list(GRAD_DTYPES),
+                    help="gradient WIRE dtype of the arena fold pipeline "
+                         "(bf16 halves the packed gradient slab and every "
+                         "gradient collective; fold kernels upcast "
+                         "in-kernel); requires --arena, not 'ga'")
+    ap.add_argument("--master-params", action="store_true",
+                    help="fp32 master params packed in the arena; the fused "
+                         "apply emits bf16 working params (AMP contract); "
+                         "requires --arena")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -75,7 +84,9 @@ def main():
             state_codec=args.state_codec, m_codec=args.m_codec,
             zero_stage=args.zero_stage,
             zero_bucketed=not args.zero_full_pack,
-            zero_bucket_rows=args.zero_bucket_rows),
+            zero_bucket_rows=args.zero_bucket_rows,
+            grad_dtype=args.grad_dtype,
+            master_params=args.master_params),
         shape=shape, seed=args.seed, steps=args.steps,
         log_every=args.log_every, checkpoint_dir=args.checkpoint_dir)
     lr_fn = sched.warmup_cosine(args.lr, args.warmup, args.steps)

@@ -200,10 +200,14 @@ class Rules:
             else:
                 spec = P()
             # only ROW-INDEXED columns (per the codec's declared column
-            # list) row-shard; replicated codec columns stay P()
+            # list) row-shard; replicated codec columns stay P(). The fp32
+            # master-param region "p" (OptimizerConfig.master_params) is
+            # row-indexed fp32 and shards exactly like the moments.
             mask = row_indexed_mask(abstract_opt)
             return {k: P() if k == "step" else
-                    jax.tree.map(lambda ri: spec if ri else P(), mask[k])
+                    (jax.tree.map(lambda _: spec, abstract_opt[k])
+                     if k == "p" else
+                     jax.tree.map(lambda ri: spec if ri else P(), mask[k]))
                     for k in abstract_opt}
         pspecs = self.params_pspecs(abstract_params)
         if self.profile == "dp":

@@ -4,6 +4,16 @@ No orbax in this container, so this is a self-contained implementation with
 the properties a production framework needs: atomic rename commit, step
 retention, exact dtype round-trip (bf16 stored via uint16 view), and
 restore-onto-abstract-tree validation.
+
+Bucketed-ZeRO-1 residency (`bucket_plan=`): the bucketed shard_map schedule
+(core/buckets.py) keeps its global row-indexed state in PARTITION order — a
+static permutation of arena row order. `save(..., bucket_plan=plan)`
+auto-unpermutes via `buckets.unpermute_state` so every checkpoint on disk is
+CANONICAL (arena order) regardless of which schedule produced it, and
+`restore(..., bucket_plan=plan)` re-permutes after reading so a canonical
+checkpoint resumes straight into a bucketed run. A bucketed run can
+therefore resume into a full-pack (or single-device) run and vice versa —
+the on-disk format never leaks the schedule.
 """
 from __future__ import annotations
 
@@ -24,8 +34,15 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
-    """Atomically save `tree` under <ckpt_dir>/step_<n>/."""
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
+         bucket_plan=None) -> str:
+    """Atomically save `tree` under <ckpt_dir>/step_<n>/. `bucket_plan`
+    (core/buckets.BucketPlan): the tree came from a bucketed ZeRO-1 run —
+    its global row-indexed state arrays are in partition order and are
+    auto-unpermuted to canonical arena order before writing."""
+    if bucket_plan is not None:
+        from repro.core.buckets import unpermute_state
+        tree = unpermute_state(tree, bucket_plan)
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(tree)
@@ -70,14 +87,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(steps[-1].name.split("_")[1]) if steps else None
 
 
-def restore(ckpt_dir: str, step: int, abstract_tree: Any) -> Any:
+def restore(ckpt_dir: str, step: int, abstract_tree: Any,
+            bucket_plan=None) -> Any:
     """Restore onto an abstract tree (structure/shapes/dtypes validated).
 
     The recorded `str(treedef)` is compared against the target tree's: for
     arena-backed optimizer state (core/arena.py, core/state_store.py) the
     treedef string embeds the static layout and codec aux data, so resuming
     onto a different codec, layout, or tree structure fails loudly here
-    instead of silently mis-assembling leaves that happen to line up."""
+    instead of silently mis-assembling leaves that happen to line up.
+
+    `bucket_plan`: the restored tree is headed INTO a bucketed ZeRO-1 run —
+    the canonical (arena-order) checkpoint is re-permuted to the schedule's
+    partition-order residency after reading (`buckets.permute_state`)."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     with open(d / "structure.json") as f:
         info = json.load(f)
@@ -103,4 +125,8 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any) -> Any:
             raise ValueError(f"shape mismatch at leaf {i}: "
                              f"{arr.shape} vs {ref.shape}")
         out.append(jnp.asarray(arr))
-    return jax.tree.unflatten(treedef, out)
+    tree = jax.tree.unflatten(treedef, out)
+    if bucket_plan is not None:
+        from repro.core.buckets import permute_state
+        tree = permute_state(tree, bucket_plan)
+    return tree

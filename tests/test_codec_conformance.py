@@ -7,6 +7,10 @@ tolerances, not new tests:
   - Adam parity within the declared drift on bert_large / stablelm_1_6b
     (and structural finiteness/update checks for statistic codecs that
     declare no elementwise bound);
+  - bf16-wire parity: grad_dtype='bf16' stays within the declared
+    `bf16_wire_lr` of the fp32-wire run of the same combination, on both
+    archs (mixed-precision AdamA: the wire halves, the accuracy contract
+    is declared per codec);
   - never-amplify: |p_new - p_0| elementwise never exceeds the fp32
     baseline's, when both codecs declare it;
   - moment independence: the m columns are BITWISE independent of the
@@ -52,8 +56,9 @@ def _conf(m_codec, v_codec):
 _RUNS = {}
 
 
-def run_combo(arch, m_codec, v_codec, accum="adama", micro_batches=2):
-    key = (arch, m_codec, v_codec, accum, micro_batches)
+def run_combo(arch, m_codec, v_codec, accum="adama", micro_batches=2,
+              grad_dtype="fp32"):
+    key = (arch, m_codec, v_codec, accum, micro_batches, grad_dtype)
     if key not in _RUNS:
         cfg = tiny(arch)
         params = init_params(cfg, jax.random.key(0))
@@ -61,7 +66,7 @@ def run_combo(arch, m_codec, v_codec, accum="adama", micro_batches=2):
         oc = OptimizerConfig(name="adama", accumulation=accum,
                              micro_batches=micro_batches, use_pallas=True,
                              arena=True, state_codec=v_codec,
-                             m_codec=m_codec)
+                             m_codec=m_codec, grad_dtype=grad_dtype)
         step, init = make_train_step(cfg, oc)
         p, s, metrics = jax.jit(step)(params, init(params), batch)
         _RUNS[key] = (params, p, s, metrics)
@@ -115,6 +120,30 @@ def test_never_amplify_when_declared(arch, m_codec, v_codec):
         da = np.abs(np.asarray(a, np.float32) - np.asarray(p0, np.float32))
         db = np.abs(np.asarray(b, np.float32) - np.asarray(p0, np.float32))
         assert (da <= db + 1e-8).all(), (m_codec, v_codec)
+
+
+@pytest.mark.parametrize("arch", ["bert_large", "stablelm_1_6b"])
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_bf16_wire_within_declared_tolerance(arch, m_codec, v_codec):
+    """Mixed-precision wire conformance: for every registered combination,
+    one adama-engine mini-batch on the bf16 gradient wire
+    (OptimizerConfig.grad_dtype='bf16') stays within the combination's
+    DECLARED wire drift of the fp32-wire run of the same codec pair. The
+    loss is wire-independent (the forward never sees the packed gradient);
+    the update drift comes only from the one bf16 rounding of g before the
+    in-kernel upcast — each codec declares how much that rounding can move
+    its update (`Conformance.bf16_wire_lr`, code-boundary flips included
+    for the int8 codecs)."""
+    _, p_f, _, met_f = run_combo(arch, m_codec, v_codec)
+    _, p_b, s_b, met_b = run_combo(arch, m_codec, v_codec,
+                                   grad_dtype="bf16")
+    assert np.isfinite(float(met_b["loss"]))
+    assert abs(float(met_f["loss"]) - float(met_b["loss"])) < 1e-6
+    mc, vc = _conf(m_codec, v_codec)
+    tol = (mc.bf16_wire_lr + vc.bf16_wire_lr) * LR
+    assert maxdiff(p_f, p_b) <= tol + 1e-7, \
+        (m_codec, v_codec, maxdiff(p_f, p_b), tol)
+    assert int(s_b["step"]) == 1
 
 
 @pytest.mark.parametrize("m_codec,v_codec", COMBOS)

@@ -8,8 +8,8 @@ import itertools
 
 import pytest
 
-from repro.configs.base import (ACCUM_ENGINES, M_CODECS, STATE_CODECS,
-                                ZERO_STAGES, OptimizerConfig,
+from repro.configs.base import (ACCUM_ENGINES, GRAD_DTYPES, M_CODECS,
+                                STATE_CODECS, ZERO_STAGES, OptimizerConfig,
                                 optimizer_capability,
                                 validate_optimizer_config)
 
@@ -33,6 +33,7 @@ def test_matrix_dimensions_are_exported():
     assert set(M_CODECS) == {"fp32", "int8"}
     assert set(ZERO_STAGES) == {0, 1}
     assert set(ACCUM_ENGINES) == {"ga", "adama", "adama_layerwise"}
+    assert set(GRAD_DTYPES) == {"fp32", "bf16"}
 
 
 def test_matrix_matches_state_store_registry():
@@ -78,15 +79,43 @@ def test_full_matrix_no_arena(m_codec, codec, zero, engine):
 
 def test_matrix_exhaustive_never_crashes():
     """optimizer_capability is total over the declared grid (plus the
-    arena/use_pallas booleans): it returns None or a str, never raises."""
-    for codec, m_codec, zero, engine, arena, pallas in itertools.product(
-            STATE_CODECS, M_CODECS, ZERO_STAGES, ACCUM_ENGINES,
-            (False, True), (False, True)):
+    arena/use_pallas/master booleans): it returns None or a str, never
+    raises."""
+    for codec, m_codec, zero, engine, arena, pallas, gdt, master in \
+            itertools.product(STATE_CODECS, M_CODECS, ZERO_STAGES,
+                              ACCUM_ENGINES, (False, True), (False, True),
+                              GRAD_DTYPES, (False, True)):
         reason = optimizer_capability(_mk(
             name="adama", accumulation=engine, state_codec=codec,
             m_codec=m_codec, zero_stage=zero, arena=arena,
-            use_pallas=pallas))
+            use_pallas=pallas, grad_dtype=gdt, master_params=master))
         assert reason is None or isinstance(reason, str)
+
+
+@pytest.mark.parametrize("m_codec", M_CODECS)
+@pytest.mark.parametrize("codec", STATE_CODECS)
+@pytest.mark.parametrize("zero", ZERO_STAGES)
+@pytest.mark.parametrize("engine", ("adama", "adama_layerwise"))
+def test_full_matrix_bf16_wire_with_master(m_codec, codec, zero, engine):
+    """grad_dtype=bf16 + master_params composes with every codec pair, both
+    zero stages, and both AdamA fold engines over the arena — the
+    mixed-precision wire is a pack/collective dtype, orthogonal to the
+    codec transforms (which run on the in-kernel fp32 upcast)."""
+    opt = OptimizerConfig(name="adama", accumulation=engine, arena=True,
+                          use_pallas=True, state_codec=codec,
+                          m_codec=m_codec, zero_stage=zero,
+                          grad_dtype="bf16", master_params=True)
+    assert optimizer_capability(opt) is None
+
+
+def test_bf16_wire_refusals_name_the_fix():
+    assert "arena=True" in optimizer_capability(_mk(grad_dtype="bf16"))
+    reason = optimizer_capability(_mk(grad_dtype="bf16", accumulation="ga",
+                                      arena=True, use_pallas=True))
+    assert "ga" in reason and "adama" in reason
+    assert "expected one of" in optimizer_capability(
+        _mk(grad_dtype="fp16", arena=True, use_pallas=True))
+    assert "arena=True" in optimizer_capability(_mk(master_params=True))
 
 
 def test_arena_requires_pallas_with_guidance():

@@ -289,6 +289,157 @@ def test_dp_zero1_layerwise_stream_matches_single_device():
     assert "GUARD OK" in out
 
 
+def test_dp_zero1_bf16_wire_and_master_params():
+    """Mixed-precision AdamA under the bucketed ZeRO-1 schedule (PR 5
+    tentpole): grad_dtype=bf16 + master_params on 4 fake devices
+
+      * matches the single-device mixed-precision run over the same global
+        micro-batch grouping within the bf16-wire tolerance (the DP wire
+        rounds each device's contribution to bf16 BEFORE the psum, the
+        single-device wire rounds the combined gradient once — same
+        contract the capability matrix documents as to-tolerance);
+      * the fp32 master region row-shards, stays fp32, and the returned
+        working params are exactly its bf16 round (AMP round-trip by
+        construction);
+      * the WIRE memory/comm claim, from the pre-optimization HLO (the
+        program's collective dtypes; XLA CPU re-widens them post-opt):
+        largest gradient reduce-scatter operand and total collective bytes
+        both <= 0.55x the fp32-wire bucketed schedule."""
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.accumulation import make_train_step
+        from repro.core.dp_shardmap import make_dp_train_step
+        from repro.core import arena as arena_mod
+        from repro.launch.hlo_analysis import analyze_hlo
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        batch = {'tokens': tokens, 'labels': tokens}
+        M, N = 4, 2
+        mesh = make_mesh((M,), ('data',))
+        B = tokens.shape[0]; b = B // (M * N)
+        idx = jnp.array([k*(B//M) + i*b + j
+                         for i in range(N) for k in range(M) for j in range(b)])
+        ref_batch = {kk: v[idx] for kk, v in batch.items()}
+        base = dict(name='adama', accumulation='adama', micro_batches=N,
+                    use_pallas=True, arena=True, zero_stage=1)
+        oc_f = OptimizerConfig(**base)
+        oc_b = OptimizerConfig(**base, grad_dtype='bf16', master_params=True)
+        step_f, init_f = make_dp_train_step(cfg, oc_f, mesh, ('data',), 'adama')
+        step_b, init_b = make_dp_train_step(cfg, oc_b, mesh, ('data',), 'adama')
+        with mesh:
+            pb, sb, mb = jax.jit(step_b)(params, init_b(params), batch)
+            lf = jax.jit(step_f).lower(params, init_f(params), batch)
+            lb = jax.jit(step_b).lower(params, init_b(params), batch)
+        # single-device mixed-precision reference, same global grouping
+        oc_s = OptimizerConfig(name='adama', accumulation='adama',
+                               micro_batches=N, use_pallas=True, arena=True,
+                               grad_dtype='bf16', master_params=True)
+        step_s, init_s = make_train_step(cfg, oc_s)
+        ps, ss, ms = jax.jit(step_s)(params, init_s(params), ref_batch)
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                      b_.astype(jnp.float32))))
+                for a, b_ in zip(jax.tree.leaves(pb), jax.tree.leaves(ps)))
+        print('MP PDIFF', d)
+        assert d < 2e-3, d                      # bf16-wire + bf16 work params
+        # master stays fp32 and the work params are its exact bf16 round
+        assert sb['p'].data.dtype == jnp.float32
+        from repro.core import buckets as buckets_mod
+        from repro.core.zero import zero1_bucket_plan
+        plan = zero1_bucket_plan(sb['m'].layout, M)
+        master_tree = arena_mod.unpack(
+            buckets_mod.unpermute_rows(sb['p'].data, plan), sb['p'].layout)
+        cast = jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(x.dtype),
+                            master_tree)
+        dr = max(float(jnp.max(jnp.abs(a - b_)))
+                 for a, b_ in zip(jax.tree.leaves(pb), jax.tree.leaves(cast)))
+        print('ROUNDTRIP', dr)
+        assert dr == 0.0
+        # wire memory/comm: <= 0.55x the fp32 wire
+        hf = analyze_hlo(lf.as_text(dialect='hlo'))
+        hb = analyze_hlo(lb.as_text(dialect='hlo'))
+        rs = hb['maxop_reduce-scatter'] / hf['maxop_reduce-scatter']
+        co = hb['coll_total'] / hf['coll_total']
+        print('WIRE ratios rs', rs, 'coll', co)
+        assert rs <= 0.55 and co <= 0.55, (rs, co)
+    """, devices=4, timeout=1800)
+    assert "MP PDIFF" in out
+    assert "ROUNDTRIP 0.0" in out
+    assert "WIRE ratios" in out
+
+
+def test_bucketed_checkpoint_roundtrip_into_full_pack():
+    """PR-4 ROADMAP follow-on, closed: checkpointing a bucketed shard_map
+    run auto-unpermutes to canonical arena order (ckpt.save(bucket_plan=))
+    and re-permutes on resume (ckpt.restore(bucket_plan=)). Proven by the
+    full round trip on 4 fake devices: a bucketed step-1 checkpoint is
+    BITWISE the full-pack step-1 checkpoint; resuming it into a FULL-PACK
+    run reproduces the continuous full-pack step 2 bitwise; resuming it
+    back into a bucketed run reproduces the same step-2 params bitwise."""
+    out = run_sub("""
+        import dataclasses, tempfile, jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.dp_shardmap import make_dp_train_step
+        from repro.core.zero import zero1_bucket_plan
+        from repro.train import checkpoint as ckpt
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        t1 = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        t2 = jax.random.randint(jax.random.key(2), (8, 16), 0, cfg.vocab_size)
+        b1 = {'tokens': t1, 'labels': t1}
+        b2 = {'tokens': t2, 'labels': t2}
+        M = 4
+        mesh = make_mesh((M,), ('data',))
+        ocb = OptimizerConfig(name='adama', accumulation='adama',
+                              micro_batches=2, use_pallas=True, arena=True,
+                              zero_stage=1)
+        ocf = dataclasses.replace(ocb, zero_bucketed=False)
+        step_b, init_b = make_dp_train_step(cfg, ocb, mesh, ('data',), 'adama')
+        step_f, init_f = make_dp_train_step(cfg, ocf, mesh, ('data',), 'adama')
+        with mesh:
+            # continuous runs
+            pb1, sb1, _ = jax.jit(step_b)(params, init_b(params), b1)
+            pf1, sf1, _ = jax.jit(step_f)(params, init_f(params), b1)
+            pf2, sf2, _ = jax.jit(step_f)(pf1, sf1, b2)
+            pb2, sb2, _ = jax.jit(step_b)(pb1, sb1, b2)
+        plan = zero1_bucket_plan(sb1['m'].layout, M)
+        with tempfile.TemporaryDirectory() as d:
+            # bucketed save auto-unpermutes -> canonical == full-pack save
+            ckpt.save(d + '/b', 1, {'params': pb1, 'opt': sb1},
+                      bucket_plan=plan)
+            ckpt.save(d + '/f', 1, {'params': pf1, 'opt': sf1})
+            ab = jax.eval_shape(lambda: {'params': pf1, 'opt': sf1})
+            rb = ckpt.restore(d + '/b', 1, ab)
+            rf = ckpt.restore(d + '/f', 1, ab)
+            for a, b_ in zip(jax.tree.leaves(rb), jax.tree.leaves(rf)):
+                assert np.array_equal(np.asarray(a), np.asarray(b_))
+            print('CANONICAL OK')
+            # resume the BUCKETED checkpoint into a FULL-PACK run
+            with mesh:
+                pf2r, _, _ = jax.jit(step_f)(rb['params'], rb['opt'], b2)
+            for a, b_ in zip(jax.tree.leaves(pf2r), jax.tree.leaves(pf2)):
+                assert np.array_equal(np.asarray(a), np.asarray(b_))
+            print('RESUME FULLPACK OK')
+            # resume it back into a BUCKETED run (re-permute on restore)
+            rbb = ckpt.restore(d + '/b', 1, ab, bucket_plan=plan)
+            with mesh:
+                pb2r, _, _ = jax.jit(step_b)(rbb['params'], rbb['opt'], b2)
+            for a, b_ in zip(jax.tree.leaves(pb2r), jax.tree.leaves(pb2)):
+                assert np.array_equal(np.asarray(a), np.asarray(b_))
+            print('RESUME BUCKETED OK')
+    """, devices=4, timeout=1800)
+    assert "CANONICAL OK" in out
+    assert "RESUME FULLPACK OK" in out
+    assert "RESUME BUCKETED OK" in out
+
+
 def test_dp_comm_schedule_volumes():
     """Fig. 7's argument as HLO fact: per mini-batch collective volume is
     ~P for GA, ~2P for AdamA (m and v), ~N*P for the naive schedule."""

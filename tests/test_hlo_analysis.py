@@ -123,6 +123,61 @@ ENTRY %main (p0: f32[64,8]) -> f32[64,8] {
     assert res["coll_reduce-scatter_raw"] == 5 * (16 * 8 + 4 * 8) * 4
 
 
+def test_explicit_replica_groups_counted():
+    """The CPU/shard_map lowering spells replica groups as an explicit list
+    (`replica_groups={{0,1,2,3}}`), not the iota form `[g,n]<=[...]`. An
+    iota-only parse reads the group size as 1, zeroing every ring factor —
+    the `coll_bytes: 0` bug in experiments/BENCH_step.json. Group size must
+    come from the first group's member count."""
+    txt = """
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64,8]) -> f32[16,8] {
+  %p0 = f32[64,8] parameter(0)
+  ROOT %rs = f32[16,8] reduce-scatter(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+}
+"""
+    res = analyze_hlo(txt)
+    # n=4 participants per group: ring factor (n-1) = 3 on the shard bytes
+    assert res["coll_reduce-scatter_raw"] == 16 * 8 * 4
+    assert res["coll_reduce-scatter"] == 16 * 8 * 4 * 3
+    assert res["coll_total"] == 16 * 8 * 4 * 3
+    assert res["maxop_reduce-scatter"] == 64 * 8 * 4
+
+
+def test_preopt_hlo_format_keeps_wire_dtypes():
+    """Pre-optimization HLO (`lowered.as_text(dialect='hlo')`) spells
+    computations as bare `name {` headers and operands without `%` sigils —
+    and it is the ONLY place a bf16 gradient wire is visible on CPU (the
+    backend's float normalization re-widens bf16 collectives to f32 during
+    optimization). The parser must read this format so the mixed-precision
+    gates can measure the true wire bytes."""
+    txt = """
+HloModule jit_step, entry_computation_layout={(bf16[64,8]{1,0})->bf16[16,8]{1,0}}
+
+region_0.4 {
+  Arg_0.5 = bf16[] parameter(0)
+  Arg_1.6 = bf16[] parameter(1)
+  ROOT add.7 = bf16[] add(Arg_0.5, Arg_1.6)
+}
+
+ENTRY main.9 {
+  Arg_0.1 = bf16[64,8]{1,0} parameter(0)
+  ROOT reduce-scatter.8 = bf16[16,8]{1,0} reduce-scatter(Arg_0.1), channel_id=1, replica_groups={{0,1,2,3}}, use_global_device_ids=true, dimensions={0}, to_apply=region_0.4
+}
+"""
+    res = analyze_hlo(txt)
+    # bf16 wire: 2 bytes/elem on both the operand high-water mark and the
+    # scattered payload
+    assert res["maxop_reduce-scatter"] == 64 * 8 * 2
+    assert res["coll_reduce-scatter_raw"] == 16 * 8 * 2
+    assert res["coll_reduce-scatter"] == 16 * 8 * 2 * 3
+
+
 def test_async_start_collectives_counted():
     """TPU-style async collectives lower to `<kind>-start`/`-done` pairs;
     the analyzer must attribute them to the base kind (a plain `in

@@ -1,0 +1,338 @@
+"""Mixed-precision AdamA: the bf16 gradient wire and the fp32 master-param
+region (PR 5 tentpole).
+
+Wire contracts (kernels/fused_step.py, core/arena.py):
+  - the fold kernels upcast a bf16 gradient slab to fp32 IN-KERNEL —
+    bitwise identical to a jnp reference fold fed the pre-upcast (host-
+    upcast) gradients, for every registered codec pair;
+  - the (m, v) accumulation is fp32 regardless of the wire, so splitting
+    the same gradient mass over more micro-batches does not grow the error
+    (micro-batch-count independence) — the only loss is the single bf16
+    rounding of each slab;
+  - a declared-vs-packed wire dtype mismatch fails loudly.
+
+Master-param contracts (core/state_store.apply_master_state):
+  - one pallas_call updates the fp32 master in place AND emits the bf16
+    working params; the working params are exactly bf16(master);
+  - the master trajectory equals the plain fp32 apply bitwise (the extra
+    output changes nothing);
+  - O(1) dispatch is preserved (no extra kernel for the work output);
+  - checkpoint round-trip carries the master region;
+  - buckets.permute_rows/permute_state invert unpermute_rows/state
+    (the master is the first NON-ZERO state the bucketed schedule's
+    partition-order residency must seed — core/dp_shardmap.py init).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import batch_for, maxdiff, tiny
+from repro.configs import OptimizerConfig
+from repro.core import adama, arena, buckets, state_store
+from repro.core.accumulation import make_train_step
+from repro.core.state_store import registered_combinations
+from repro.core.zero import zero1_bucket_plan
+from repro.kernels.adama_accum import LANES
+from repro.kernels.fused_step import arena_fold, arena_fold_slice
+from repro.launch.hlo_analysis import count_jaxpr_primitives
+from repro.models.model import init_params
+from repro.train import checkpoint as ckpt
+
+COMBOS = registered_combinations()
+
+
+def _tree():
+    return {
+        "a": jax.random.normal(jax.random.key(1), (7,), jnp.float32),
+        "b": jax.random.normal(jax.random.key(2), (300, 150)).astype(
+            jnp.bfloat16),
+        "blocks": {
+            "w": jax.random.normal(jax.random.key(3), (3, 257, 9),
+                                   jnp.float32),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# in-kernel upcast: bitwise vs a host-upcast reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_in_kernel_upcast_bitwise_vs_preupcast_reference(m_codec, v_codec):
+    """arena_fold on a bf16 slab == arena_fold on the SAME slab host-upcast
+    to fp32, bitwise, for every codec pair — the kernel's .astype is the
+    identical widening cast, so the only difference is WHERE it runs."""
+    mc = state_store.get_codec(m_codec, "m")
+    vc = state_store.get_codec(v_codec, "v")
+    lay = arena.build_layout(_tree())
+    g16 = arena.pack(_tree(), lay, dtype=jnp.bfloat16)
+    m0 = mc.parts_of(mc.init(lay))
+    v0 = vc.parts_of(vc.init(lay))
+    # seed so quantized codecs carry non-trivial scales
+    m0, v0 = state_store.fold(mc, vc, m0, v0, 0.1 * g16.astype(jnp.float32),
+                              beta1=0.9, beta2=0.999)
+    m16, v16 = state_store.fold(mc, vc, m0, v0, g16, beta1=0.9, beta2=0.999,
+                                scale=0.5, decay=(0.9, 0.999))
+    m32, v32 = state_store.fold(mc, vc, m0, v0, g16.astype(jnp.float32),
+                                beta1=0.9, beta2=0.999, scale=0.5,
+                                decay=(0.9, 0.999))
+    for a, b in zip(m16 + v16, m32 + v32):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fold_matches_jnp_reference_on_bf16_wire():
+    """The fp32-codec fold of a bf16 slab is BITWISE the jnp reference fold
+    fed the PRE-UPCAST gradients: decay*m + (1-b1)*(g32*scale), with
+    g32 = g16.astype(f32) — pinning that the kernel's compute order is the
+    reference's (upcast, then scale, then fold). The reference is jitted so
+    XLA applies the same multiply-add contraction to both programs (eager
+    op-by-op dispatch differs by 1 ulp of fma rounding, which would mask a
+    real upcast bug behind a blanket tolerance)."""
+    rows = 64
+    key = jax.random.key(0)
+    g16 = (jax.random.normal(key, (rows, LANES)) * 3).astype(jnp.bfloat16)
+    m0 = jax.random.normal(jax.random.key(1), (rows, LANES), jnp.float32)
+    v0 = jnp.abs(jax.random.normal(jax.random.key(2), (rows, LANES))
+                 ).astype(jnp.float32)
+    b1, b2, scale = 0.9, 0.999, 0.25
+
+    def ref(m0, v0, g16, dm, dv):
+        g32 = g16.astype(jnp.float32) * scale      # the pre-upcast wire
+        return (dm * m0 + (1.0 - b1) * g32,
+                dv * v0 + (1.0 - b2) * (g32 * g32))
+
+    m1, v1 = arena_fold(m0, v0, g16, beta1=b1, beta2=b2, scale=scale,
+                        decay=(b1, b2))
+    m_ref, v_ref = jax.jit(ref)(m0, v0, g16, jnp.float32(b1),
+                                jnp.float32(b2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m_ref))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v_ref))
+
+
+def test_slice_fold_accepts_bf16_wire_bitwise():
+    rows, srows = 256, 64
+    g16 = (jax.random.normal(jax.random.key(0), (srows, LANES)) * 2
+           ).astype(jnp.bfloat16)
+    m0 = jnp.zeros((rows, LANES), jnp.float32)
+    v0 = jnp.zeros((rows, LANES), jnp.float32)
+    m16, v16 = arena_fold_slice(m0, v0, g16, 64, beta1=0.9, beta2=0.999,
+                                block=64)
+    m32, v32 = arena_fold_slice(m0, v0, g16.astype(jnp.float32), 64,
+                                beta1=0.9, beta2=0.999, block=64)
+    np.testing.assert_array_equal(np.asarray(m16), np.asarray(m32))
+    np.testing.assert_array_equal(np.asarray(v16), np.asarray(v32))
+    # rows outside the slice untouched
+    assert float(jnp.abs(m16[:64]).max()) == 0.0
+    assert float(jnp.abs(m16[128:]).max()) == 0.0
+
+
+def test_declared_wire_dtype_mismatch_fails_loudly():
+    g = jnp.zeros((8, LANES), jnp.float32)
+    m = jnp.zeros((8, LANES), jnp.float32)
+    v = jnp.zeros((8, LANES), jnp.float32)
+    with pytest.raises(TypeError, match="grad_dtype"):
+        arena_fold(m, v, g, beta1=0.9, beta2=0.999,
+                   grad_dtype=jnp.bfloat16)
+    with pytest.raises(TypeError, match="wire"):
+        arena_fold(m, v, g.astype(jnp.float16), beta1=0.9, beta2=0.999)
+
+
+def test_fp32_accumulation_is_micro_batch_count_independent():
+    """Folding the same total gradient mass as N bf16 micro-slabs keeps the
+    error at the one-per-slab bf16 rounding, for every N: the accumulation
+    itself is fp32 in-kernel, so the error does NOT grow with the
+    micro-batch count (a bf16 accumulator would lose low-order bits on
+    every one of the N adds)."""
+    rows = 64
+    g = jax.random.normal(jax.random.key(0), (rows, LANES), jnp.float32)
+    errs = {}
+    for n in (1, 2, 4, 8):
+        m = jnp.zeros((rows, LANES), jnp.float32)
+        v = jnp.zeros((rows, LANES), jnp.float32)
+        # reference: float64 accumulation of the SAME bf16-rounded slabs —
+        # isolates accumulation error from the per-slab wire rounding
+        m_ref = np.zeros((rows, LANES), np.float64)
+        for _ in range(n):
+            slab = (g / n).astype(jnp.bfloat16)
+            m, v = arena_fold(m, v, slab, beta1=0.9, beta2=0.999)
+            m_ref += 0.1 * np.asarray(slab.astype(jnp.float32), np.float64)
+        errs[n] = float(np.max(np.abs(np.asarray(m, np.float64) - m_ref)))
+    scale = float(jnp.abs(g).max()) * 0.1
+    for n, e in errs.items():
+        # fp32 addends: error per add is <= ulp(fp32) of the running sum —
+        # orders of magnitude under one bf16 ulp (2^-8) of the slab scale
+        assert e <= 2e-6 * scale, (n, e, errs)
+
+
+# ---------------------------------------------------------------------------
+# master params
+# ---------------------------------------------------------------------------
+
+
+def _engine_pair(master, **over):
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    oc = OptimizerConfig(name="adama", accumulation="adama",
+                         micro_batches=2, use_pallas=True, arena=True,
+                         master_params=master, **over)
+    step, init = make_train_step(cfg, oc)
+    return cfg, params, batch, jax.jit(step), init
+
+
+def test_master_apply_emits_exact_cast_and_same_master():
+    """One apply_master_state call: the master update is BITWISE the plain
+    apply's, and the emitted working arena is bitwise bf16(master_new)."""
+    tree = _tree()
+    st = adama.init_arena(tree, master_params=True)
+    st = state_store.fold_state(
+        st, arena.pack(tree, st["m"].layout), beta1=0.9, beta2=0.999)
+    st = dict(st, step=st["step"] + 1)
+    kw = dict(lr=1e-3, bc1=0.1, bc2=0.001)
+    p_ref = state_store.apply_state(st["p"].data, dict(st), **kw)
+    work, st2 = state_store.apply_master_state(dict(st), **kw)
+    np.testing.assert_array_equal(np.asarray(st2["p"].data),
+                                  np.asarray(p_ref))
+    np.testing.assert_array_equal(
+        np.asarray(work),
+        np.asarray(p_ref.astype(jnp.bfloat16)))
+    assert work.dtype == jnp.bfloat16
+
+
+def test_master_first_step_matches_fp32_run_bitwise():
+    """Step 1 from identical params: the master-run's fp32 master equals
+    the plain fp32 run's params bitwise (same grads, same apply), and the
+    returned working params are exactly the bf16 round of the master."""
+    cfg, params, batch, step_f, init_f = _engine_pair(False)
+    _, _, _, step_m, init_m = _engine_pair(True)
+    p_f, _, _ = step_f(params, init_f(params), batch)
+    p_m, s_m, _ = step_m(params, init_m(params), batch)
+    master_tree = arena.unpack(s_m["p"].data, s_m["p"].layout)
+    assert maxdiff(p_f, master_tree) == 0.0
+    cast = jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(x.dtype),
+                        master_tree)
+    assert maxdiff(p_m, cast) == 0.0
+
+
+@pytest.mark.parametrize("accum,want", [("adama", 2), ("adama_layerwise", 3)])
+def test_master_keeps_o1_dispatch(accum, want):
+    """The work output rides the SAME apply kernel: no extra pallas_call
+    for master_params (or for the bf16 wire)."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    oc = OptimizerConfig(name="adama", accumulation=accum, micro_batches=2,
+                         use_pallas=True, arena=True, master_params=True,
+                         grad_dtype="bf16")
+    step, init = make_train_step(cfg, oc)
+    jaxpr = jax.make_jaxpr(step)(params, init(params), batch)
+    assert count_jaxpr_primitives(jaxpr, "pallas_call") == want
+
+
+def test_master_checkpoint_roundtrip():
+    tree = _tree()
+    st = adama.init_arena(tree, codec="int8", master_params=True)
+    st = state_store.fold_state(
+        st, arena.pack(tree, st["m"].layout), beta1=0.9, beta2=0.999)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        full = {"params": tree, "opt": st}
+        ckpt.save(d, 1, full)
+        restored = ckpt.restore(d, 1, jax.eval_shape(lambda: full))
+        np.testing.assert_array_equal(np.asarray(restored["opt"]["p"].data),
+                                      np.asarray(st["p"].data))
+        # a master-less target refuses (leaf count mismatch)
+        target = {"params": tree, "opt": adama.init_arena(tree, codec="int8")}
+        with pytest.raises(ValueError, match="mismatch"):
+            ckpt.restore(d, 1, jax.eval_shape(lambda t=target: t))
+
+
+# ---------------------------------------------------------------------------
+# partition-order residency: permute is unpermute's inverse
+# ---------------------------------------------------------------------------
+
+
+def test_permute_rows_inverts_unpermute_rows():
+    tree = _tree()
+    lay = arena.build_layout(tree, n_shards=4)
+    plan = zero1_bucket_plan(lay, 4)
+    x = arena.pack(tree, lay)
+    xp = buckets.permute_rows(x, plan)
+    np.testing.assert_array_equal(
+        np.asarray(buckets.unpermute_rows(xp, plan)), np.asarray(x))
+    # and the permutation really moves rows (non-identity for >1 bucket)
+    assert not np.array_equal(np.asarray(xp), np.asarray(x))
+
+
+def test_permute_state_roundtrip_with_master():
+    tree = _tree()
+    st = adama.init_arena(tree, codec="int8", n_shards=4,
+                          master_params=True)
+    st = state_store.fold_state(
+        st, arena.pack(tree, st["m"].layout), beta1=0.9, beta2=0.999)
+    plan = zero1_bucket_plan(st["m"].layout, 4)
+    perm = buckets.permute_state(st, plan)
+    back = buckets.unpermute_state(perm, plan)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # replicated / scalar leaves pass through untouched
+    assert int(perm["step"]) == int(st["step"])
+
+
+def test_checkpoint_bucket_plan_saves_canonical_restores_resident():
+    """`ckpt.save(..., bucket_plan=)` writes arena order; restoring with
+    the plan re-permutes; restoring WITHOUT the plan yields the canonical
+    state a full-pack/single-device run consumes — the on-disk format
+    never leaks the schedule."""
+    tree = _tree()
+    st = adama.init_arena(tree, n_shards=4, master_params=True)
+    st = state_store.fold_state(
+        st, arena.pack(tree, st["m"].layout), beta1=0.9, beta2=0.999)
+    plan = zero1_bucket_plan(st["m"].layout, 4)
+    resident = buckets.permute_state(st, plan)      # what a bucketed run holds
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"opt": resident}, bucket_plan=plan)
+        abstract = jax.eval_shape(lambda: {"opt": st})
+        canon = ckpt.restore(d, 1, abstract)
+        for a, b in zip(jax.tree.leaves(canon["opt"]),
+                        jax.tree.leaves(st)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        back = ckpt.restore(d, 1, abstract, bucket_plan=plan)
+        for a, b in zip(jax.tree.leaves(back["opt"]),
+                        jax.tree.leaves(resident)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# capability matrix
+# ---------------------------------------------------------------------------
+
+
+def test_capability_matrix_mixed_precision():
+    from repro.configs.base import optimizer_capability
+    # bf16 wire: arena-only, fold engines only
+    with pytest.raises(ValueError, match="arena=True"):
+        OptimizerConfig(grad_dtype="bf16")
+    with pytest.raises(ValueError, match="ga"):
+        OptimizerConfig(grad_dtype="bf16", accumulation="ga",
+                        arena=True, use_pallas=True)
+    with pytest.raises(ValueError, match="expected one of"):
+        OptimizerConfig(grad_dtype="fp16", arena=True, use_pallas=True)
+    # master: arena-only
+    with pytest.raises(ValueError, match="arena=True"):
+        OptimizerConfig(master_params=True)
+    for accum in ("adama", "adama_layerwise"):
+        for zero in (0, 1):
+            oc = OptimizerConfig(accumulation=accum, zero_stage=zero,
+                                 arena=True, use_pallas=True,
+                                 grad_dtype="bf16", master_params=True)
+            assert optimizer_capability(oc) is None
+    # ga + master (fp32 wire) is fine
+    assert optimizer_capability(OptimizerConfig(
+        accumulation="ga", arena=True, use_pallas=True,
+        master_params=True)) is None
