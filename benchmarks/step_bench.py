@@ -17,11 +17,18 @@ Schedules (4 fake devices, reduced bert_large + stablelm_1_6b):
                        reduce-scatters as bf16, upcast in-kernel) +
                        master_params (fp32 master in the arena, bf16
                        working params all-gathered — half bytes both ways)
+  adama_zero1_bucketed_bf16_guard
+                       the bf16 bucketed row with the RESILIENCE layer on:
+                       finite_guard=True + loss_scale="dynamic" — per-micro-
+                       batch fused finite checks on every received slice,
+                       one scalar agreement psum, predicated state commits,
+                       and the dynamic scale folded into the in-kernel
+                       upcast (train/scaler.py)
   layerwise_zero1      Algorithm 2 under ZeRO-1: per-layer grads stream
                        straight out of the backward (bucketed only)
 
 Emits experiments/BENCH_step.json. `--check` (the CI mode) runs only the
-three ZeRO-1 schedules and FAILS (non-zero exit) when
+four ZeRO-1 schedules and FAILS (non-zero exit) when
 
   * the bucketed step time regresses more than 5% vs full-pack, or
   * the bucketed schedule's largest reduce-scatter operand exceeds its
@@ -31,7 +38,11 @@ three ZeRO-1 schedules and FAILS (non-zero exit) when
     bucketed row, or step time above the CPU-emulation ceiling (see
     BF16_TIME_CEILING — XLA CPU legalizes the bf16 wire back to f32 with
     converts, so "no worse" holds on bf16-native backends while the CPU
-    gate bounds the emulation overhead).
+    gate bounds the emulation overhead), or
+  * the guard row costs more than GUARD_TIME_CEILING (1.05x) over the
+    unguarded bf16 row (`guard_overhead`, recorded in the JSON) — the
+    "guards are ~free" claim: the finite reduction rides the fold kernel's
+    existing pass over the slab and the agreement is one scalar psum.
 
 Metric sources: `coll_bytes` is the trip-aware POST-optimization total —
 the bytes this backend really moves (on CPU, XLA float-normalizes bf16
@@ -71,6 +82,13 @@ BF16_WIRE_RATIO = 0.55
 # ceiling bounds that emulation overhead; tightening it to 1.0 would gate
 # the CPU legalizer, not the schedule.
 BF16_TIME_CEILING = 1.15
+# Guard-overhead gate: the resilience row (finite_guard + dynamic loss
+# scaling) vs the identical unguarded bf16 bucketed row. The guard work is
+# one isfinite reduction per received slice (riding data already in cache
+# from the reduce-scatter), one scalar agreement psum per micro-batch, and
+# where-predicated commits inside kernels that were already read-modify-
+# write — so the ceiling is the same 5% noise band the bucketed gate uses.
+GUARD_TIME_CEILING = 1.05
 ARCHS = ("bert_large", "stablelm_1_6b")
 
 
@@ -84,6 +102,10 @@ def _schedules(check_only: bool):
         "adama_zero1_bucketed_bf16": ("adama", dict(base, zero_stage=1,
                                                     grad_dtype="bf16",
                                                     master_params=True)),
+        "adama_zero1_bucketed_bf16_guard": (
+            "adama", dict(base, zero_stage=1, grad_dtype="bf16",
+                          master_params=True, finite_guard=True,
+                          loss_scale="dynamic")),
     }
     if not check_only:
         scheds = {
@@ -249,6 +271,25 @@ def run_checks(metrics) -> list:
             bad.append(
                 f"{arch}: bf16-wire step {bf16['step_us']} us > "
                 f"{BF16_TIME_CEILING}x fp32-wire {buck['step_us']} us")
+        # resilience row: the fused guards + dynamic scale must cost no
+        # more than noise over the identical unguarded schedule
+        guard = scheds.get("adama_zero1_bucketed_bf16_guard")
+        if not guard:
+            continue
+        overhead = guard["step_us"] / bf16["step_us"]
+        guard["guard_overhead"] = round(overhead, 3)
+        if overhead > GUARD_TIME_CEILING:
+            bad.append(
+                f"{arch}: guarded bf16 step {guard['step_us']} us is "
+                f"{overhead:.3f}x the unguarded row's {bf16['step_us']} us "
+                f"(> {GUARD_TIME_CEILING}x) — the finite guards are "
+                f"supposed to ride the existing fold pass")
+        budget = guard.get("grad_peak_budget_bytes", 0)
+        if budget and guard["grad_rs_peak_bytes"] > budget:
+            bad.append(
+                f"{arch}: guarded grad reduce-scatter operand peak "
+                f"{guard['grad_rs_peak_bytes']} B exceeds the max-bucket "
+                f"budget {budget} B — the guard must not re-pack buckets")
     return bad
 
 
@@ -263,6 +304,7 @@ def main(check_only: bool = False, iters: int = 5,
                         "regression_ceiling": REGRESSION_CEILING,
                         "bf16_wire_ratio": BF16_WIRE_RATIO,
                         "bf16_time_ceiling": BF16_TIME_CEILING,
+                        "guard_time_ceiling": GUARD_TIME_CEILING,
                         "failures": bad}
     if json_path:
         Path(json_path).parent.mkdir(parents=True, exist_ok=True)

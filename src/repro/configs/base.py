@@ -272,6 +272,35 @@ class OptimizerConfig:
     # working params are never re-packed. Requires arena=True.
     master_params: bool = False
     grad_clip: Optional[float] = None
+    # Fused non-finite guards (train/scaler.py + kernels/fused_step.py):
+    # every arena fold additionally emits a per-call finite flag (a
+    # reduction over the packed gradient slab, checked BEFORE the state
+    # update commits) and the m/v writes are predicated on it, so a
+    # NaN/Inf micro-batch is a bitwise no-op fold instead of poisoned
+    # state. The begin-minibatch decay shifts to the first GOOD fold, the
+    # mini-batch apply is skipped (and the step counter frozen) when every
+    # micro-batch was bad, and skip counters ride in the optimizer state
+    # ("scaler"). Under the shard_map ZeRO-1 schedule the flag is checked
+    # post-reduce-scatter and psum-agreed so all shards skip or none do.
+    # Under accumulation='ga' the guard is the classic whole-step recipe
+    # instead: one flag over the ACCUMULATED slab predicates the single
+    # fold+apply. Requires arena=True (the flag is a slab reduction).
+    finite_guard: bool = False
+    # Loss scaling for the gradient wire: "off" | "dynamic" | a positive
+    # float literal (e.g. "1024") for a static scale. The loss is
+    # multiplied by the scale before backward and the fold kernels divide
+    # it back out in-kernel (the scale rides next to the decay pair as an
+    # SMEM scalar, so one compiled kernel serves every scale value).
+    # "dynamic" grows the scale 2x after scaler_growth_interval consecutive
+    # good micro-batches and halves it on every skipped one (floor 1.0).
+    # Requires grad_dtype="bf16" (the wire it protects), finite_guard=True
+    # (skips drive the backoff) and an AdamA fold engine.
+    loss_scale: str = "off"
+    # consecutive good micro-batches before a dynamic scale 2x growth
+    scaler_growth_interval: int = 200
+    # abort the training loop after this many CONSECUTIVE skipped
+    # micro-batches (train/loop.py raises); 0 disables the abort.
+    scaler_abort_after: int = 0
 
     def __post_init__(self):
         validate_optimizer_config(self)
@@ -302,6 +331,23 @@ def grad_wire_itemsize(name: str) -> int:
     """Bytes per element on the gradient wire (budget/accounting sites)."""
     import numpy as np
     return np.dtype(grad_wire_dtype(name)).itemsize
+
+
+def parse_loss_scale(value: str):
+    """Parse an OptimizerConfig.loss_scale value: returns "off", "dynamic",
+    or a positive float (static scale). Raises ValueError otherwise — the
+    ONE parser shared by validation, engines and the CLI `--loss-scale`."""
+    if value in ("off", "dynamic"):
+        return value
+    try:
+        scale = float(value)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"loss_scale={value!r} unsupported; expected 'off', 'dynamic', "
+            f"or a positive float literal (e.g. '1024')") from None
+    if not (scale > 0.0):
+        raise ValueError(f"loss_scale={value!r} must be > 0")
+    return scale
 
 
 def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
@@ -341,6 +387,21 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
                         (the master region is row-indexed fp32, so it
                         row-shards exactly like m/v; the working-param
                         all-gather moves bf16).
+      finite_guard    : requires arena=True (the per-fold finite flag is a
+                        reduction over the packed gradient slab). Under the
+                        AdamA engines the guard is per-MICRO-BATCH (a bad
+                        micro-batch is a bitwise no-op fold); under 'ga'
+                        it is the classic whole-step recipe — the flag is
+                        computed over the accumulated slab and predicates
+                        the one fold+apply. Composes with every codec pair,
+                        both ZeRO-1 schedules and the bf16 wire.
+      loss_scale      : 'off' | 'dynamic' | a positive float literal.
+                        != 'off' requires grad_dtype='bf16' (the wire it
+                        protects), finite_guard=True (skipped micro-batches
+                        drive the backoff; an unguarded scaled run would
+                        fold scaled NaNs) and an AdamA fold engine (a ga
+                        skip loses the whole mini-batch — too coarse to
+                        drive the backoff).
 
     One engine-selection caveat lives outside this matrix (engine choice is
     not an OptimizerConfig field): the shard_map DP engine
@@ -400,6 +461,40 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
         return ("master_params=True requires arena=True: the fp32 master "
                 "region is a packed arena alongside m/v "
                 "(core/state_store.py); pass arena=True use_pallas=True")
+    if opt.finite_guard and not opt.arena:
+        return ("finite_guard=True requires arena=True: the per-fold finite "
+                "flag is a reduction over the packed gradient slab "
+                "(kernels/fused_step.py); pass arena=True use_pallas=True")
+    try:
+        scale = parse_loss_scale(opt.loss_scale)
+    except ValueError as e:
+        return str(e)
+    if scale != "off":
+        if opt.accumulation == "ga":
+            return (f"loss_scale={opt.loss_scale!r} with accumulation='ga' "
+                    f"is unsupported: the ga engine folds the whole "
+                    f"accumulated gradient once per step, so a skip loses "
+                    f"the entire mini-batch — too coarse a signal to drive "
+                    f"the dynamic backoff (and the ga wire is fp32-only "
+                    f"anyway); use accumulation='adama' or "
+                    f"'adama_layerwise'")
+        if opt.grad_dtype != "bf16":
+            return (f"loss_scale={opt.loss_scale!r} requires "
+                    f"grad_dtype='bf16': loss scaling protects the reduced-"
+                    f"precision gradient wire, got grad_dtype="
+                    f"{opt.grad_dtype!r}; pass grad_dtype='bf16' or "
+                    f"loss_scale='off'")
+        if not opt.finite_guard:
+            return (f"loss_scale={opt.loss_scale!r} requires "
+                    f"finite_guard=True: skipped micro-batches drive the "
+                    f"scale backoff, and an unguarded scaled run would fold "
+                    f"scaled NaN/Inf into the arena; pass finite_guard=True")
+    if opt.scaler_growth_interval <= 0:
+        return (f"scaler_growth_interval must be > 0, got "
+                f"{opt.scaler_growth_interval}")
+    if opt.scaler_abort_after < 0:
+        return (f"scaler_abort_after must be >= 0 (0 disables the abort), "
+                f"got {opt.scaler_abort_after}")
     return None
 
 
@@ -424,6 +519,13 @@ class RunConfig:
     remat: bool = False          # activation checkpointing per layer
     engine: str = "pjit"         # pjit | shardmap
     checkpoint_dir: Optional[str] = None
+    # checkpoint cadence in steps; 0 = legacy max(log_every*5, 50)
+    checkpoint_every: int = 0
+    # checkpoint retention (train/checkpoint.py _gc)
+    keep_last_n: int = 3
+    # fault-injection spec (train/faults.py parse_fault), test-only:
+    # e.g. "nan@micro=1", "inf@micro=2,device=3,step=0", "crash@step=3"
+    inject_fault: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------

@@ -64,11 +64,26 @@ def _arena_init(opt: OptimizerConfig, state_shards: int = 1):
     padded for `state_shards` equal row ranges whenever the caller may shard
     (zero_stage=1 OR a dp-profile launcher passing its dp size) — padding
     rows are zeros that no kernel result depends on, so over-padding is
-    always safe while an unpadded layout makes shard_rows refuse."""
-    return functools.partial(adama.init_arena, codec=opt.state_codec,
+    always safe while an unpadded layout makes shard_rows refuse.
+
+    With finite_guard the state gains the "scaler" entry (train/scaler.py:
+    loss scale + skip counters) — plain scalars that ride through every
+    dict(state, ...) site, checkpoint like any leaf, and stay replicated
+    under the DP engines because the skip verdicts they fold are
+    psum-agreed."""
+    base = functools.partial(adama.init_arena, codec=opt.state_codec,
                              m_codec=opt.m_codec,
                              n_shards=max(1, state_shards),
                              master_params=opt.master_params)
+    if not opt.finite_guard:
+        return base
+
+    def init(params):
+        from repro.train import scaler as scaler_mod
+        state = base(params)
+        state["scaler"] = scaler_mod.init_scaler(opt)
+        return state
+    return init
 
 
 def _zero_constrain(opt: OptimizerConfig, state):
@@ -118,7 +133,7 @@ def make_loss(cfg: ModelConfig, *, remat: bool = False) -> Callable:
 
 
 def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
-                 lr_schedule=None, state_shards: int = 1):
+                 lr_schedule=None, state_shards: int = 1, fault=None):
     loss = make_loss(cfg, remat=remat)
     n = opt.micro_batches
     opt_mod = OPTIMIZERS[opt.name if opt.name != "adama" else "adam"]
@@ -127,14 +142,19 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
     # arena + non-adam is rejected at OptimizerConfig construction
     # (configs/base.py::optimizer_capability), so opt_mod is adam here
     use_arena = _use_arena(opt)
+    guarded = opt.finite_guard           # config enforces arena=True
 
     def step(params, opt_state, batch):
+        from repro.train import faults as fault_mod
         micro = _split_micro(batch, n)
         layout = opt_state["m"].layout if use_arena else None
 
-        def body(carry, mb):
+        def body(carry, xs):
             acc, lsum = carry
+            i, mb = xs
             l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+            g = fault_mod.corrupt_tree(fault, g, micro=i,
+                                       step=opt_state["step"])
             if use_arena:
                 acc = acc + arena_mod.pack(g, layout) / n
             else:
@@ -146,7 +166,18 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
                  if use_arena else
                  jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
                               params))
-        (grads, lsum), _ = lax.scan(body, (zeros, 0.0), micro)
+        (grads, lsum), _ = lax.scan(body, (zeros, 0.0),
+                                    (jnp.arange(n), micro))
+        # ga keeps the ACCUMULATED gradient alive, so the guard is the
+        # classic whole-step recipe: one flag over the accumulated slab
+        # predicates the single fold + apply (and the step counter).
+        # Checked BEFORE grad_clip — a NaN clip scale is discarded with
+        # everything else the flag gates.
+        ok = None
+        if guarded:
+            ok = jnp.isfinite(grads).all()
+            ok = fault_mod.apply_skip(fault, ok, micro=0,
+                                      step=opt_state["step"])
         if opt.grad_clip:
             gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
                               for g in jax.tree.leaves(grads)))
@@ -155,13 +186,20 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
         lr = lr_schedule(opt_state["step"]) if lr_schedule else opt.lr
         if use_arena:
             from repro.core import state_store
-            step_c = opt_state["step"] + 1
+            step_c = opt_state["step"] + (1 if ok is None
+                                          else ok.astype(jnp.int32))
             t = step_c.astype(jnp.float32)
-            opt_state = state_store.fold_state(
+            out = state_store.fold_state(
                 dict(opt_state, step=step_c), grads, beta1=opt.beta1,
-                beta2=opt.beta2, decay=(opt.beta1, opt.beta2))
+                beta2=opt.beta2, decay=(opt.beta1, opt.beta2), guard=ok)
+            opt_state = out[0] if ok is not None else out
+            if ok is not None:
+                from repro.train import scaler as scaler_mod
+                opt_state = dict(opt_state, scaler=scaler_mod.scaler_update(
+                    opt_state["scaler"], ok, dynamic=False,
+                    growth_interval=opt.scaler_growth_interval))
             kw = dict(lr=lr, bc1=1 - opt.beta1 ** t, bc2=1 - opt.beta2 ** t,
-                      eps=opt.eps, weight_decay=opt.weight_decay)
+                      eps=opt.eps, weight_decay=opt.weight_decay, guard=ok)
             if state_store.has_master(opt_state):
                 work, opt_state = state_store.apply_master_state(
                     opt_state, **kw)
@@ -170,7 +208,11 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
                 p_new = state_store.apply_state(
                     arena_mod.pack(params, layout), opt_state, **kw)
                 params = arena_mod.unpack(p_new, layout)
-            return params, _zero_constrain(opt, opt_state), {"loss": lsum / n}
+            metrics = {"loss": lsum / n}
+            if ok is not None:
+                from repro.train.scaler import scaler_metrics
+                metrics.update(scaler_metrics(opt_state))
+            return params, _zero_constrain(opt, opt_state), metrics
         kw = dict(lr=lr, weight_decay=opt.weight_decay)
         if opt_mod is adam:
             kw.update(beta1=opt.beta1, beta2=opt.beta2, eps=opt.eps)
@@ -191,7 +233,7 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
 
 def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
                     lr_schedule=None, m_devices: int = 1, axis_names=(),
-                    state_shards: int = 1):
+                    state_shards: int = 1, fault=None):
     """m_devices/axis_names are used by the shard_map DP engine (Eqs. 5-8);
     in the pjit engine they stay (1, ()) and gradients arrive pre-reduced."""
     loss = make_loss(cfg, remat=remat)
@@ -199,10 +241,58 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
     b1, b2 = opt.beta1, opt.beta2
     use_arena = _use_arena(opt)
     wire = _wire_dtype(opt)
+    guarded = opt.finite_guard           # config enforces arena=True
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
-        if use_arena:
+        if use_arena and guarded:
+            from repro.core import state_store
+            from repro.train import faults as fault_mod
+            from repro.train import scaler as scaler_mod
+            dyn = scaler_mod.is_dynamic(opt)
+            gi = opt.scaler_growth_interval
+            layout = opt_state["m"].layout
+            # guarded fold scan: the step counter is NOT pre-incremented
+            # (it advances only if some fold commits) and the carry tracks
+            # `good`, the number of committed folds — the begin-minibatch
+            # decay shifts to the first GOOD fold via _fold_decay(good,...)
+
+            def body(carry, xs):
+                st, lsum, good = carry
+                i, mb = xs
+                sc = st["scaler"]
+                l, g = jax.value_and_grad(
+                    lambda p: scaler_mod.scale_loss(loss(p, mb), sc))(params)
+                g = fault_mod.corrupt_tree(fault, g, micro=i,
+                                           step=st["step"])
+                slab = arena_mod.pack(g, layout, dtype=wire)
+                # the flag is computed over the packed slab BEFORE the fold
+                # commits; under shard_map it is psum-AGREED so all shards
+                # skip or none do (a lone folding shard would desync the
+                # averaged states); forced-skip faults land on the final
+                # verdict, defining "a run that never saw micro-batch i"
+                ok = jnp.isfinite(slab).all()
+                if axis_names:
+                    ok = lax.psum(1.0 - ok.astype(jnp.float32),
+                                  axis_names) == 0
+                ok = fault_mod.apply_skip(fault, ok, micro=i,
+                                          step=st["step"])
+                st, _ = state_store.fold_state(
+                    st, slab, beta1=b1, beta2=b2,
+                    scale=scaler_mod.scale_into_fold(1.0 / n, sc),
+                    decay=_fold_decay(good, b1, b2, m_devices),
+                    grad_dtype=wire, guard=ok)
+                st = dict(st, scaler=scaler_mod.scaler_update(
+                    sc, ok, dynamic=dyn, growth_interval=gi))
+                lsum = lsum + jnp.where(ok, l, 0.0) / sc["scale"]
+                return (st, lsum, good + ok.astype(jnp.int32)), None
+
+            (state, lsum, good), _ = lax.scan(
+                body, (opt_state, 0.0, jnp.zeros((), jnp.int32)),
+                (jnp.arange(n), micro))
+            applied = good > 0
+            state = dict(state, step=state["step"] + applied.astype(jnp.int32))
+        elif use_arena:
             # decay is fused into fold 0 (no standalone state-sized pass);
             # 1/N rides in-kernel as the fold's static scale
             state = dict(opt_state, step=opt_state["step"] + 1)
@@ -233,10 +323,19 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
         if axis_names:
             state = adama.allreduce_states(state, axis_names, m_devices)
         lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
-        params, state = adama.finalize(params, state, lr=lr, beta1=b1,
-                                       beta2=b2, eps=opt.eps,
-                                       weight_decay=opt.weight_decay,
-                                       use_pallas=opt.use_pallas)
+        params, state = adama.finalize(
+            params, state, lr=lr, beta1=b1, beta2=b2, eps=opt.eps,
+            weight_decay=opt.weight_decay, use_pallas=opt.use_pallas,
+            guard=applied if use_arena and guarded else None)
+        if use_arena and guarded:
+            from repro.train.scaler import scaler_metrics
+            # mean over COMMITTED micro-batches (0 good -> report 0, the
+            # sum's identity, rather than a NaN from 0/0)
+            loss_m = lsum / jnp.maximum(good, 1).astype(jnp.float32)
+            metrics = {"loss": (lax.pmean(loss_m, axis_names)
+                                if axis_names else loss_m),
+                       **scaler_metrics(state)}
+            return params, _zero_constrain(opt, state), metrics
         if axis_names:
             lsum = lax.pmean(lsum, axis_names)
         return params, _zero_constrain(opt, state), {"loss": lsum / n}
@@ -253,16 +352,62 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
 def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
                               remat=False, lr_schedule=None,
                               m_devices: int = 1, axis_names=(),
-                              state_shards: int = 1):
+                              state_shards: int = 1, fault=None):
     from repro.core.layerwise import layerwise_loss_and_fold
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
     use_arena = _use_arena(opt)
     wire = _wire_dtype(opt)
+    guarded = opt.finite_guard           # config enforces arena=True
+    if guarded and axis_names:
+        raise ValueError(
+            "guarded adama_layerwise under shard_map requires the ZeRO-1 "
+            "streaming schedule (core/dp_shardmap.py, zero_stage=1): the "
+            "per-layer agreement rides the reduce-scatter there; the "
+            "replicated shard_map variant has no per-layer collective to "
+            "agree on")
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
-        if use_arena:
+        if use_arena and guarded:
+            from repro.train import faults as fault_mod
+            from repro.train import scaler as scaler_mod
+            dyn = scaler_mod.is_dynamic(opt)
+            gi = opt.scaler_growth_interval
+
+            def body(carry, xs):
+                st, lsum, good = carry
+                i, mb = xs
+                sc = st["scaler"]
+                # loss scaling rides the VJP SEED: the backward is seeded
+                # with (1/N)*S so every wire slab is S-scaled, and the
+                # slice folds un-scale with fold_scale=1/S in-kernel.
+                # nan/inf faults land on the seed — the loss-originated
+                # failure mode, reaching every layer's slab; skip faults
+                # force the external verdict layerwise ANDs in.
+                seed = fault_mod.corrupt_loss(
+                    fault, jnp.asarray(1.0 / n, jnp.float32) * sc["scale"],
+                    micro=i, step=st["step"])
+                pre = fault_mod.apply_skip(fault, jnp.asarray(True),
+                                           micro=i, step=st["step"])
+                l, st, ok = layerwise_loss_and_fold(
+                    cfg, params, mb, st, beta1=b1, beta2=b2, scale=seed,
+                    use_pallas=True,
+                    decay=_fold_decay(good, b1, b2, m_devices),
+                    grad_dtype=wire,
+                    fold_scale=jnp.float32(1.0) / sc["scale"], guard=pre)
+                st = dict(st, scaler=scaler_mod.scaler_update(
+                    sc, ok, dynamic=dyn, growth_interval=gi))
+                # l is the UNSCALED ce (the scale only seeds the backward)
+                lsum = lsum + jnp.where(ok, l, 0.0)
+                return (st, lsum, good + ok.astype(jnp.int32)), None
+
+            (state, lsum, good), _ = lax.scan(
+                body, (opt_state, 0.0, jnp.zeros((), jnp.int32)),
+                (jnp.arange(n), micro))
+            applied = good > 0
+            state = dict(state, step=state["step"] + applied.astype(jnp.int32))
+        elif use_arena:
             # each arena row is folded exactly once per micro-batch (each
             # layer once in the backward scan, the rest region at the
             # boundary), so the begin-minibatch decay fuses into micro-batch
@@ -295,10 +440,15 @@ def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
         if axis_names:
             state = adama.allreduce_states(state, axis_names, m_devices)
         lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
-        params, state = adama.finalize(params, state, lr=lr, beta1=b1,
-                                       beta2=b2, eps=opt.eps,
-                                       weight_decay=opt.weight_decay,
-                                       use_pallas=opt.use_pallas)
+        params, state = adama.finalize(
+            params, state, lr=lr, beta1=b1, beta2=b2, eps=opt.eps,
+            weight_decay=opt.weight_decay, use_pallas=opt.use_pallas,
+            guard=applied if use_arena and guarded else None)
+        if use_arena and guarded:
+            from repro.train.scaler import scaler_metrics
+            loss_m = lsum / jnp.maximum(good, 1).astype(jnp.float32)
+            return params, _zero_constrain(opt, state), \
+                {"loss": loss_m, **scaler_metrics(state)}
         if axis_names:
             lsum = lax.pmean(lsum, axis_names)
         return params, _zero_constrain(opt, state), {"loss": lsum / n}

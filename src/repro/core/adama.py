@@ -89,7 +89,7 @@ def begin_minibatch(state: State, beta1: float, beta2: float,
 
 def accumulate(state: State, grads, beta1: float, beta2: float,
                use_pallas: bool = False, scale: float = 1.0,
-               decay=None, grad_dtype=jnp.float32) -> State:
+               decay=None, grad_dtype=jnp.float32, guard=None) -> State:
     """Fold one micro-batch's gradients into (m, v); Algorithm 2 inner loop.
 
     `scale` multiplies g before the fold (Alg. 1 line 6's 1/N, applied
@@ -97,13 +97,21 @@ def accumulate(state: State, grads, beta1: float, beta2: float,
     decay into this call (pass it on the first micro-batch only).
     `grad_dtype` is the arena path's gradient WIRE dtype: bf16 packs a
     half-size slab; the fold kernel upcasts in-pass and still accumulates
-    the moments in fp32."""
+    the moments in fp32.
+
+    `guard` (arena path only; OptimizerConfig.finite_guard): True
+    self-checks the packed slab, a traced bool (psum-agreed under
+    shard_map) is used verbatim — either way a non-finite micro-batch is a
+    BITWISE no-op fold and the return becomes (new_state, flag)."""
     if is_arena_state(state):
         from repro.core import state_store
         g = arena_mod.pack(grads, state["m"].layout, dtype=grad_dtype)
         return state_store.fold_state(state, g, beta1=beta1, beta2=beta2,
                                       scale=scale, decay=decay,
-                                      grad_dtype=grad_dtype)
+                                      grad_dtype=grad_dtype, guard=guard)
+    if guard is not None:
+        raise ValueError("finite guards require the arena fold path "
+                         "(OptimizerConfig arena=True use_pallas=True)")
     if decay is not None:
         state = {"m": jax.tree.map(lambda m: decay[0] * m, state["m"]),
                  "v": jax.tree.map(lambda v: decay[1] * v, state["v"]),
@@ -160,9 +168,14 @@ def allreduce_states(state: State, axis_names: Sequence[str],
 
 def finalize(params, state: State, *, lr, beta1: float, beta2: float,
              eps: float = 1e-8, weight_decay: float = 0.0,
-             use_pallas: bool = False):
+             use_pallas: bool = False, guard=None):
     """Bias-correct and apply (Algorithm 1 'Update' line). `state['step']` must
-    already count this mini-batch (begin_minibatch increments it)."""
+    already count this mini-batch (begin_minibatch increments it).
+
+    `guard` (arena path only; traced bool, e.g. `good > 0` after a guarded
+    fold scan): when false the apply is a bitwise identity — the all-
+    skipped mini-batch case, where the step counter never advanced and
+    bc1/bc2 would be 0 (the resulting NaNs are discarded in-kernel)."""
     t = state["step"].astype(jnp.float32)
     bc1 = 1 - beta1 ** t
     bc2 = 1 - beta2 ** t
@@ -175,12 +188,15 @@ def finalize(params, state: State, *, lr, beta1: float, beta2: float,
             # and the same kernel emits the next step's working params
             work, state = state_store.apply_master_state(
                 state, lr=lr, bc1=bc1, bc2=bc2, eps=eps,
-                weight_decay=weight_decay)
+                weight_decay=weight_decay, guard=guard)
             return arena_mod.unpack(work, layout), state
         p_new = state_store.apply_state(
             arena_mod.pack(params, layout), state, lr=lr, bc1=bc1, bc2=bc2,
-            eps=eps, weight_decay=weight_decay)
+            eps=eps, weight_decay=weight_decay, guard=guard)
         return arena_mod.unpack(p_new, layout), state
+    if guard is not None:
+        raise ValueError("finite guards require the arena apply path "
+                         "(OptimizerConfig arena=True use_pallas=True)")
     if use_pallas:
         from repro.kernels.ops import adam_apply_tree
         new_params = adam_apply_tree(params, state["m"], state["v"],

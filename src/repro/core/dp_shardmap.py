@@ -110,18 +110,27 @@ def _shard_map(f, mesh, *, in_specs, out_specs, manual_axes):
 def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                        dp_axes: Tuple[str, ...] = ("data",),
                        variant: str = "adama", *, remat=False,
-                       lr_schedule=None):
+                       lr_schedule=None, fault=None):
     """Returns (step_fn, opt_init_fn). step_fn(params, opt_state, batch) with
     batch globally (GB, ...) sharded over dp_axes; params/opt replicated over
-    dp_axes (tensor sharding over remaining mesh axes passes through)."""
+    dp_axes (tensor sharding over remaining mesh axes passes through).
+    `fault` (train/faults.py FaultSpec) injects NaN/Inf/skip faults inside
+    the compiled step — with the `device` selector resolving to the linear
+    dp index, so one-shard corruption exercises the guard agreement."""
     m_dev = int(math.prod(mesh.shape[a] for a in dp_axes))
     loss = make_loss(cfg, remat=remat)
     n = opt.micro_batches
     b1, b2 = opt.beta1, opt.beta2
     use_arena = opt.use_pallas and opt.arena
     zero1 = opt.zero_stage == 1
+    guarded = opt.finite_guard           # config enforces arena=True
     from repro.configs.base import grad_wire_dtype
     wire = grad_wire_dtype(opt.grad_dtype)
+    if guarded and variant not in ("adama", "adama_layerwise"):
+        raise ValueError(
+            f"finite_guard=True in the shard_map DP engine is defined for "
+            f"the 'adama' and 'adama_layerwise' variants (the guarded fold "
+            f"kernels), got variant={variant!r}")
     if zero1 and not use_arena:
         raise ValueError(
             "zero_stage=1 in the shard_map DP engine requires the arena "
@@ -193,52 +202,167 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             plan = (zero1_bucket_plan(lay, m_dev, opt.zero_bucket_rows)
                     if bucketed else None)
             scale = 1.0 / (n * m_dev)
-            state = dict(opt_state, step=opt_state["step"] + 1)
+            if guarded:
+                from repro.train import faults as fault_mod
+                from repro.train import scaler as scaler_mod
+                dyn = scaler_mod.is_dynamic(opt)
+                gi = opt.scaler_growth_interval
+                dev = jnp.int32(0)
+                for a in dp_axes:
+                    dev = dev * lax.psum(1, a) + lax.axis_index(a)
 
-            def fold_micro(st, i, mb):
-                decay = _fold_decay(i, b1, b2, 1)
-                rdecay = (decay[0], jnp.where(i == 0, b2 / m_dev, 1.0))
-                if variant == "adama_layerwise":
-                    from repro.core.layerwise import (ZeroStream,
-                                                      layerwise_loss_and_fold)
-                    return layerwise_loss_and_fold(
-                        cfg, params, mb, st, beta1=b1, beta2=b2, scale=scale,
-                        use_pallas=True, decay=decay,
-                        zero=ZeroStream(plan, dp_axes, rdecay),
-                        grad_dtype=wire)
-                l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
-                if plan is None:
-                    g_own = lax.psum_scatter(
-                        arena_mod.pack(g, lay, dtype=wire), dp_axes,
-                        scatter_dimension=0, tiled=True)
-                    return l, state_store.fold_state(
-                        st, g_own, beta1=b1, beta2=b2, scale=scale,
-                        decay=decay, replicated_decay=rdecay,
-                        grad_dtype=wire)
-                st = state_store.begin_micro_state(st, rdecay)
-                for b in plan.grad_buckets():
-                    slab = buckets_mod.pack_bucket(g, lay, b, dtype=wire)
-                    own = lax.psum_scatter(slab, dp_axes,
-                                           scatter_dimension=0, tiled=True)
-                    st = state_store.fold_slice_state(
-                        st, own, b.own_offset, beta1=b1, beta2=b2,
-                        block=b.fold_block, scale=scale, decay=decay,
-                        grad_dtype=wire)
-                return l, st
+                def fold_micro_g(st, i, mb, good):
+                    # step counter not yet advanced: decay shifts to the
+                    # first GOOD fold, and the guard verdict is psum-AGREED
+                    # before any shard commits — all shards skip or none
+                    # do, or the averaged/sharded states would desync
+                    sc = st["scaler"]
+                    decay = _fold_decay(good, b1, b2, 1)
+                    rdecay = (decay[0],
+                              jnp.where(good == 0, b2 / m_dev, 1.0))
+                    if variant == "adama_layerwise":
+                        from repro.core.layerwise import (
+                            ZeroStream, layerwise_loss_and_fold)
+                        # loss scale rides the VJP seed (slabs carry S on
+                        # the wire), un-scaled in-kernel via fold_scale;
+                        # nan/inf faults poison the seed (the loss-
+                        # originated failure mode); per-layer agreement
+                        # rides the reduce-scatter inside layerwise
+                        seed = fault_mod.corrupt_loss(
+                            fault,
+                            jnp.asarray(scale, jnp.float32) * sc["scale"],
+                            micro=i, step=st["step"], device=dev)
+                        pre = fault_mod.apply_skip(
+                            fault, jnp.asarray(True), micro=i,
+                            step=st["step"])
+                        return layerwise_loss_and_fold(
+                            cfg, params, mb, st, beta1=b1, beta2=b2,
+                            scale=seed, use_pallas=True, decay=decay,
+                            zero=ZeroStream(plan, dp_axes, rdecay),
+                            grad_dtype=wire,
+                            fold_scale=jnp.float32(1.0) / sc["scale"],
+                            guard=pre)
+                    l, g = jax.value_and_grad(
+                        lambda p: scaler_mod.scale_loss(loss(p, mb),
+                                                        sc))(params)
+                    g = fault_mod.corrupt_tree(fault, g, micro=i,
+                                               step=st["step"], device=dev)
+                    kscale = scaler_mod.scale_into_fold(scale, sc)
+                    l = l / sc["scale"]
+                    if plan is None:
+                        g_own = lax.psum_scatter(
+                            arena_mod.pack(g, lay, dtype=wire), dp_axes,
+                            scatter_dimension=0, tiled=True)
+                        # checked POST-reduce-scatter: one corrupt shard
+                        # poisons only the slices its elements reduce
+                        # into, so the local verdicts differ — agreement
+                        # makes the skip collective
+                        okl = jnp.isfinite(g_own).all()
+                        ok = lax.psum(1.0 - okl.astype(jnp.float32),
+                                      dp_axes) == 0
+                        ok = fault_mod.apply_skip(fault, ok, micro=i,
+                                                  step=st["step"])
+                        st, _ = state_store.fold_state(
+                            st, g_own, beta1=b1, beta2=b2, scale=kscale,
+                            decay=decay, replicated_decay=rdecay,
+                            grad_dtype=wire, guard=ok)
+                        return l, st, ok
+                    # bucketed: reduce-scatter EVERY bucket first (each
+                    # received slice is O(rows/M), so the buffered total
+                    # is about the owned state size), check the received
+                    # slices, and agree ONCE per micro-batch — folding
+                    # before the verdict would commit early buckets of a
+                    # micro-batch whose later bucket turns out bad
+                    slabs = []
+                    okl = jnp.asarray(True)
+                    for bk in plan.grad_buckets():
+                        slab = buckets_mod.pack_bucket(g, lay, bk,
+                                                       dtype=wire)
+                        own = lax.psum_scatter(slab, dp_axes,
+                                               scatter_dimension=0,
+                                               tiled=True)
+                        okl = jnp.logical_and(okl,
+                                              jnp.isfinite(own).all())
+                        slabs.append(own)
+                    ok = lax.psum(1.0 - okl.astype(jnp.float32),
+                                  dp_axes) == 0
+                    ok = fault_mod.apply_skip(fault, ok, micro=i,
+                                              step=st["step"])
+                    st = state_store.begin_micro_state(st, rdecay,
+                                                       guard=ok)
+                    for bk, own in zip(plan.grad_buckets(), slabs):
+                        st, _ = state_store.fold_slice_state(
+                            st, own, bk.own_offset, beta1=b1, beta2=b2,
+                            block=bk.fold_block, scale=kscale,
+                            decay=decay, grad_dtype=wire, guard=ok)
+                    return l, st, ok
 
-            def body(carry, xs):
-                st, lsum = carry
-                i, mb = xs
-                l, st = fold_micro(st, i, mb)
-                return (st, lsum + l), None
+                def body(carry, xs):
+                    st, lsum, good = carry
+                    i, mb = xs
+                    sc = st["scaler"]
+                    l, st, ok = fold_micro_g(st, i, mb, good)
+                    st = dict(st, scaler=scaler_mod.scaler_update(
+                        sc, ok, dynamic=dyn, growth_interval=gi))
+                    lsum = lsum + jnp.where(ok, l, 0.0)
+                    return (st, lsum, good + ok.astype(jnp.int32)), None
 
-            (state, lsum), _ = lax.scan(body, (state, 0.0),
-                                        (jnp.arange(n), micro))
+                (state, lsum, good), _ = lax.scan(
+                    body, (opt_state, 0.0, jnp.zeros((), jnp.int32)),
+                    (jnp.arange(n), micro))
+                applied = good > 0
+                state = dict(state, step=state["step"]
+                             + applied.astype(jnp.int32))
+            else:
+                state = dict(opt_state, step=opt_state["step"] + 1)
+
+                def fold_micro(st, i, mb):
+                    decay = _fold_decay(i, b1, b2, 1)
+                    rdecay = (decay[0], jnp.where(i == 0, b2 / m_dev, 1.0))
+                    if variant == "adama_layerwise":
+                        from repro.core.layerwise import (
+                            ZeroStream, layerwise_loss_and_fold)
+                        return layerwise_loss_and_fold(
+                            cfg, params, mb, st, beta1=b1, beta2=b2,
+                            scale=scale, use_pallas=True, decay=decay,
+                            zero=ZeroStream(plan, dp_axes, rdecay),
+                            grad_dtype=wire)
+                    l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
+                    if plan is None:
+                        g_own = lax.psum_scatter(
+                            arena_mod.pack(g, lay, dtype=wire), dp_axes,
+                            scatter_dimension=0, tiled=True)
+                        return l, state_store.fold_state(
+                            st, g_own, beta1=b1, beta2=b2, scale=scale,
+                            decay=decay, replicated_decay=rdecay,
+                            grad_dtype=wire)
+                    st = state_store.begin_micro_state(st, rdecay)
+                    for b in plan.grad_buckets():
+                        slab = buckets_mod.pack_bucket(g, lay, b, dtype=wire)
+                        own = lax.psum_scatter(slab, dp_axes,
+                                               scatter_dimension=0,
+                                               tiled=True)
+                        st = state_store.fold_slice_state(
+                            st, own, b.own_offset, beta1=b1, beta2=b2,
+                            block=b.fold_block, scale=scale, decay=decay,
+                            grad_dtype=wire)
+                    return l, st
+
+                def body(carry, xs):
+                    st, lsum = carry
+                    i, mb = xs
+                    l, st = fold_micro(st, i, mb)
+                    return (st, lsum + l), None
+
+                (state, lsum), _ = lax.scan(body, (state, 0.0),
+                                            (jnp.arange(n), micro))
             state = state_store.psum_replicated_state(state, dp_axes)
             lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
             t = state["step"].astype(jnp.float32)
             kw = dict(lr=lr, bc1=1 - b1 ** t, bc2=1 - b2 ** t,
                       eps=opt.eps, weight_decay=opt.weight_decay)
+            if guarded:
+                kw["guard"] = applied
             if state_store.has_master(state):
                 # the device already owns its fp32 master rows (partition
                 # order under the bucketed schedule): update them in place
@@ -259,7 +383,68 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             if plan is not None:        # partition order -> arena order
                 p_full = buckets_mod.unpermute_rows(p_full, plan)
             params = arena_mod.unpack(p_full, lay)
+            if guarded:
+                from repro.train import scaler as scaler_mod
+                loss_m = lsum / jnp.maximum(good, 1).astype(jnp.float32)
+                return params, state, {
+                    "loss": lax.pmean(loss_m, dp_axes),
+                    **scaler_mod.scaler_metrics(state)}
             return params, state, {"loss": lax.pmean(lsum / n, dp_axes)}
+
+        if guarded:                 # variant == "adama", replicated arena
+            # Each device folds LOCAL grads, so the verdict must be psum-
+            # AGREED before any local fold commits — otherwise the mini-
+            # batch-end state psum (Eqs. 7-8) would average folded shards
+            # with unfolded ones. The check is on the LOCAL packed slab
+            # (pre-reduce: the local gradient is where the NaN is born).
+            from repro.train import faults as fault_mod
+            from repro.train import scaler as scaler_mod
+            dyn = scaler_mod.is_dynamic(opt)
+            gi = opt.scaler_growth_interval
+            lay = opt_state["m"].layout
+            dev = jnp.int32(0)
+            for a in dp_axes:
+                dev = dev * lax.psum(1, a) + lax.axis_index(a)
+
+            def body(carry, xs):
+                st, lsum, good = carry
+                i, mb = xs
+                sc = st["scaler"]
+                l, g = jax.value_and_grad(
+                    lambda p: scaler_mod.scale_loss(loss(p, mb),
+                                                    sc))(params)
+                g = fault_mod.corrupt_tree(fault, g, micro=i,
+                                           step=st["step"], device=dev)
+                slab = arena_mod.pack(g, lay, dtype=wire)
+                okl = jnp.isfinite(slab).all()
+                ok = lax.psum(1.0 - okl.astype(jnp.float32), dp_axes) == 0
+                ok = fault_mod.apply_skip(fault, ok, micro=i,
+                                          step=st["step"])
+                st, _ = state_store.fold_state(
+                    st, slab, beta1=b1, beta2=b2,
+                    scale=scaler_mod.scale_into_fold(1.0 / n, sc),
+                    decay=_fold_decay(good, b1, b2, m_dev),
+                    grad_dtype=wire, guard=ok)
+                st = dict(st, scaler=scaler_mod.scaler_update(
+                    sc, ok, dynamic=dyn, growth_interval=gi))
+                lsum = lsum + jnp.where(ok, l, 0.0) / sc["scale"]
+                return (st, lsum, good + ok.astype(jnp.int32)), None
+
+            (state, lsum, good), _ = lax.scan(
+                body, (opt_state, 0.0, jnp.zeros((), jnp.int32)),
+                (jnp.arange(n), micro))
+            applied = good > 0
+            state = dict(state,
+                         step=state["step"] + applied.astype(jnp.int32))
+            state = adama.allreduce_states(state, dp_axes, m_dev)  # Eqs. 7-8
+            lr = lr_schedule(state["step"]) if lr_schedule else opt.lr
+            params, state = adama.finalize(params, state, lr=lr, beta1=b1,
+                                           beta2=b2, eps=opt.eps,
+                                           weight_decay=opt.weight_decay,
+                                           use_pallas=True, guard=applied)
+            loss_m = lsum / jnp.maximum(good, 1).astype(jnp.float32)
+            return params, state, {"loss": lax.pmean(loss_m, dp_axes),
+                                   **scaler_mod.scaler_metrics(state)}
 
         if variant == "naive":
             state = adama.begin_minibatch(opt_state, b1, b2, m_devices=1)
@@ -350,6 +535,9 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                                          opt.zero_bucket_rows)
                 st["p"] = st["p"].with_data(
                     buckets_mod.permute_rows(st["p"].data, plan))
+            if opt.finite_guard:
+                from repro.train import scaler as scaler_mod
+                st["scaler"] = scaler_mod.init_scaler(opt)
             return st
         return adama.init(params)
 

@@ -83,10 +83,35 @@ def _fold_tree(m, v, g, beta1, beta2, use_pallas):
     return new_m, new_v
 
 
+def _agree(ok, zero):
+    """Cross-device agreement of a guard verdict under ZeRO-1 streaming:
+    all shards skip or none do (a shard folding while its peers skip would
+    desync the row ranges). One scalar psum; identity without `zero`."""
+    if zero is None:
+        return ok
+    return lax.psum(1.0 - ok.astype(jnp.float32), zero.axis_names) == 0
+
+
+def _pre_guard(guard, dx, d_rest_post, zero):
+    """The pre-backward guard flag: the external verdict (True = none)
+    ANDed with finiteness of the head/final-norm gradients and the backward
+    seed dx — computed BEFORE any fold or replicated decay commits, and
+    psum-agreed under `zero`. A loss-originated NaN is caught here, making
+    the whole micro-batch a bitwise no-op."""
+    if guard is None:
+        return None
+    ok = jnp.asarray(True) if guard is True else jnp.asarray(guard)
+    ok = jnp.logical_and(ok, jnp.isfinite(dx).all())
+    for leaf in jax.tree.leaves(d_rest_post):
+        ok = jnp.logical_and(ok, jnp.isfinite(leaf).all())
+    return _agree(ok, zero)
+
+
 def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
                             beta1: float, beta2: float, scale: float,
                             use_pallas: bool = False, decay=None, zero=None,
-                            grad_dtype=jnp.float32):
+                            grad_dtype=jnp.float32, fold_scale=1.0,
+                            guard=None):
     """One micro-batch: forward, then layer-by-layer backward folding grads
     into (m, v). Returns (loss, new_state). Gradients are scaled by `scale`
     (= 1/N; 1/(N*M) under DP), matching Algorithm 1 line 6. `decay` (arena
@@ -96,16 +121,37 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     the shard-local columns, in partition order. `grad_dtype` (arena mode)
     is the gradient WIRE dtype: each layer's slab is packed — and
     reduce-scattered, under `zero` — as bf16, halving the live slab and the
-    collective payload; the slice-fold kernel upcasts in-pass."""
+    collective payload; the slice-fold kernel upcasts in-pass.
+
+    Loss scaling (train/scaler.py): the engine seeds the backward with
+    `scale * S` (a traced `scale` is fine) so every wire slab carries
+    S-scaled values, and passes `fold_scale = 1/S` so the kernels divide S
+    back out on the fp32 upcast — the folded moments never see the scale.
+
+    `guard` (arena mode; OptimizerConfig.finite_guard): True self-checks,
+    a traced bool is ANDed in (the engines' forced-skip fault hook). The
+    pre-backward flag checks dx and the post-head rest gradients — and is
+    psum-AGREED under `zero` — then predicates the begin_micro decay;
+    every layer/rest slab is re-checked where it is FOLDED (post-reduce-
+    scatter under `zero`, with per-slab agreement) and the verdict carried
+    monotonically (once false, every later fold is off). The return
+    becomes (loss, new_state, ok). A loss-originated NaN (the realistic
+    case) reaches dx and therefore every slab, so the whole micro-batch is
+    a bitwise no-op; a NaN born INSIDE one layer's backward can leave
+    later-folded (earlier-scanned) layers committed — the streaming
+    engine's documented tradeoff, bounded by the monotone carry."""
     assert decay is None or is_arena_state(state), \
         "fused decay requires arena-backed state"
     assert zero is None or is_arena_state(state), \
         "ZeRO-1 streaming requires arena-backed state"
+    assert guard is None or is_arena_state(state), \
+        "finite guards require arena-backed state"
     if cfg.arch_type == "audio":
         return _layerwise_audio(cfg, params, batch, state, beta1=beta1,
                                 beta2=beta2, scale=scale,
                                 use_pallas=use_pallas, decay=decay,
-                                zero=zero, grad_dtype=grad_dtype)
+                                zero=zero, grad_dtype=grad_dtype,
+                                fold_scale=fold_scale, guard=guard)
 
     kind = main_stack_kind(cfg)
     causal = cfg.arch_type != "encoder"
@@ -177,6 +223,8 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     # folds into layer j's row slice via one offset-indexed kernel (rows
     # outside the slice pass through aliased, so there is no re-write).
     arena_st = is_arena_state(state)
+    guarded = guard is not None
+    ok = _pre_guard(guard, dx, d_rest_post, zero)
     if arena_st:
         from repro.core import state_store
         mc, vc = state_store.state_codecs(state)
@@ -190,10 +238,12 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
             # each see only part of the rows and must not decay them again.
             # Under ZeRO-1 the dv is pre-divided by the DP size so the
             # per-shard partials psum to the exact global statistic.
+            # Guarded, the decay is where-predicated on the pre-backward
+            # flag (skip => replicated columns stay bitwise).
             rdm, rdv = (decay if zero is None or zero.replicated_decay is None
                         else zero.replicated_decay)
-            m_acc = mc.begin_micro(m_acc, rdm)
-            v_acc = vc.begin_micro(v_acc, rdv)
+            m_acc = state_store._guarded_begin_micro(mc, m_acc, rdm, ok)
+            v_acc = state_store._guarded_begin_micro(vc, v_acc, rdv, ok)
     else:
         codec = None
         new_m = dict(state["m"])
@@ -203,24 +253,34 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
         spec = lay.stack(name) if arena_st else None
 
         def bwd(carry, xs, knd=knd, spec=spec):
-            dx_c, m_c, v_c = carry
+            if guarded:
+                dx_c, m_c, v_c, ok_c = carry
+            else:
+                (dx_c, m_c, v_c), ok_c = carry, None
             j, lp, xin = xs
             _, vjp = jax.vjp(
                 lambda lp_, xi_: apply_block(cfg, lp_, xi_, positions,
                                              kind=knd, causal=causal),
                 lp, xin)
             dlp, dxin = vjp((dx_c, scale))               # aux cotangent=scale
-            m_c, v_c = _fold_layer(m_c, v_c, dlp, j, spec, lay if arena_st
-                                   else None, beta1, beta2, use_pallas, decay,
-                                   codec, zero, grad_dtype)
+            out = _fold_layer(m_c, v_c, dlp, j, spec, lay if arena_st
+                              else None, beta1, beta2, use_pallas, decay,
+                              codec, zero, grad_dtype, fold_scale, ok_c)
+            if guarded:
+                m_c, v_c, ok_c = out
+                return (dxin, m_c, v_c, ok_c), None
+            m_c, v_c = out
             return (dxin, m_c, v_c), None
 
-        carry0 = ((dx, m_acc, v_acc) if arena_st else
+        carry0 = ((dx, m_acc, v_acc, ok) if guarded else
+                  (dx, m_acc, v_acc) if arena_st else
                   (dx, state["m"][name], state["v"][name]))
-        (dx, m_new, v_new), _ = lax.scan(
-            bwd, carry0,
-            (jnp.arange(n_layers), params[name], saved_inputs[name]),
-            reverse=True)
+        xs = (jnp.arange(n_layers), params[name], saved_inputs[name])
+        if guarded:
+            (dx, m_new, v_new, ok), _ = lax.scan(bwd, carry0, xs,
+                                                 reverse=True)
+        else:
+            (dx, m_new, v_new), _ = lax.scan(bwd, carry0, xs, reverse=True)
         if arena_st:
             m_acc, v_acc = m_new, v_new
         else:
@@ -229,10 +289,13 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     (d_rest_pre,) = pre_vjp(dx)
     d_rest = jax.tree.map(lambda a, b_: a + b_, d_rest_post, d_rest_pre)
     if arena_st:
-        m_acc, v_acc = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
-                                  decay, codec, zero, grad_dtype)
-        return loss, dict(state, m=mc.wrap(lay, m_acc),
-                          v=vc.wrap(lay, v_acc))
+        out = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
+                         decay, codec, zero, grad_dtype, fold_scale, ok)
+        m_acc, v_acc = out[0], out[1]
+        new_state = dict(state, m=mc.wrap(lay, m_acc), v=vc.wrap(lay, v_acc))
+        if guarded:
+            return loss, new_state, out[2]
+        return loss, new_state
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],
                                         d_rest[k], beta1, beta2, use_pallas)
@@ -240,16 +303,21 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
 
 
 def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
-                codec=None, zero=None, grad_dtype=jnp.float32):
+                codec=None, zero=None, grad_dtype=jnp.float32,
+                fold_scale=1.0, guard_ok=None):
     """Fold one layer's gradient tree. Tree mode: per-leaf fold into row j of
     the (m, v) stacks. Arena mode: pack dlp into one slab and fold it into
     the layer's arena row slice with a single offset-indexed kernel fusing
     BOTH moments' codec transforms (codec is the (m_codec, v_codec) pair;
     m_c/v_c their column tuples). Grads arrive pre-scaled (via the VJP
-    cotangent), so the kernel scale is 1. With `zero` the slab is
+    cotangent), so the kernel scale is `fold_scale` = 1 — or 1/S under loss
+    scaling, un-scaling in the upcast. With `zero` the slab is
     reduce-scattered the moment it exists and the received slice folds into
     the OWNED block at the layer's partition offset — the slab has no
-    reader after the collective, so its buffer dies inside the iteration."""
+    reader after the collective, so its buffer dies inside the iteration.
+    `guard_ok` (traced bool): the carried finite verdict; this slab is
+    re-checked where it lands (post-reduce-scatter, agreed under `zero`),
+    the fold is guard-predicated, and the return gains the updated flag."""
     if lay is not None:
         from repro.core import state_store
         g2 = arena_mod.pack_layer(dlp, spec, dtype=grad_dtype)
@@ -261,9 +329,17 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
         else:
             off = spec.row + j * spec.layer_rows
             block = lay.slice_block(spec)
+        if guard_ok is not None:
+            ok = jnp.logical_and(guard_ok,
+                                 _agree(jnp.isfinite(g2).all(), zero))
+            m2, v2, _ = state_store.fold_slice(
+                codec[0], codec[1], m_c, v_c, g2, off, beta1=beta1,
+                beta2=beta2, block=block, scale=fold_scale, decay=decay,
+                grad_dtype=grad_dtype, guard=ok)
+            return m2, v2, ok
         return state_store.fold_slice(
             codec[0], codec[1], m_c, v_c, g2, off, beta1=beta1, beta2=beta2,
-            block=block, decay=decay, grad_dtype=grad_dtype)
+            block=block, scale=fold_scale, decay=decay, grad_dtype=grad_dtype)
     m_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
         s, j, 0, keepdims=False), m_c)
     v_j = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
@@ -277,15 +353,20 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
 
 
 def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
-               zero=None, grad_dtype=jnp.float32):
+               zero=None, grad_dtype=jnp.float32, fold_scale=1.0,
+               guard_ok=None):
     """Arena mode: fold ALL non-stacked leaves' gradients with one
     codec-aware kernel over the contiguous rest region. With `zero` the
     region streams one size-capped bucket at a time: pack the bucket's rows
     only, reduce-scatter, fold the received slice into the owned block —
-    the region's packed gradient is never live all at once."""
+    the region's packed gradient is never live all at once. `guard_ok`
+    (traced bool): each slab re-checked where it folds, verdict carried
+    monotonically, return gains the final flag."""
     if not lay.rest.rows:
-        return m_acc, v_acc
+        return (m_acc, v_acc, guard_ok) if guard_ok is not None \
+            else (m_acc, v_acc)
     from repro.core import state_store
+    ok = guard_ok
     if zero is not None:
         for b in zero.plan.grad_buckets():
             if b.kind != "rest":
@@ -294,16 +375,33 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
                                             dtype=grad_dtype)
             own = lax.psum_scatter(slab, zero.axis_names,
                                    scatter_dimension=0, tiled=True)
-            m_acc, v_acc = state_store.fold_slice(
-                codec[0], codec[1], m_acc, v_acc, own, b.own_offset,
-                beta1=beta1, beta2=beta2, block=b.fold_block, decay=decay,
-                grad_dtype=grad_dtype)
-        return m_acc, v_acc
+            if ok is not None:
+                ok = jnp.logical_and(ok,
+                                     _agree(jnp.isfinite(own).all(), zero))
+                m_acc, v_acc, _ = state_store.fold_slice(
+                    codec[0], codec[1], m_acc, v_acc, own, b.own_offset,
+                    beta1=beta1, beta2=beta2, block=b.fold_block,
+                    scale=fold_scale, decay=decay, grad_dtype=grad_dtype,
+                    guard=ok)
+            else:
+                m_acc, v_acc = state_store.fold_slice(
+                    codec[0], codec[1], m_acc, v_acc, own, b.own_offset,
+                    beta1=beta1, beta2=beta2, block=b.fold_block,
+                    scale=fold_scale, decay=decay, grad_dtype=grad_dtype)
+        return (m_acc, v_acc, ok) if guard_ok is not None \
+            else (m_acc, v_acc)
     g2 = arena_mod.pack_rest(d_rest, lay, dtype=grad_dtype)
+    if ok is not None:
+        ok = jnp.logical_and(ok, jnp.isfinite(g2).all())
+        m_acc, v_acc, _ = state_store.fold_slice(
+            codec[0], codec[1], m_acc, v_acc, g2, lay.rest.row, beta1=beta1,
+            beta2=beta2, block=lay.slice_block(lay.rest), scale=fold_scale,
+            decay=decay, grad_dtype=grad_dtype, guard=ok)
+        return m_acc, v_acc, ok
     return state_store.fold_slice(
         codec[0], codec[1], m_acc, v_acc, g2, lay.rest.row, beta1=beta1,
-        beta2=beta2, block=lay.slice_block(lay.rest), decay=decay,
-        grad_dtype=grad_dtype)
+        beta2=beta2, block=lay.slice_block(lay.rest), scale=fold_scale,
+        decay=decay, grad_dtype=grad_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -313,7 +411,7 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
 
 def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                      use_pallas, decay=None, zero=None,
-                     grad_dtype=jnp.float32):
+                     grad_dtype=jnp.float32, fold_scale=1.0, guard=None):
     tokens = batch["tokens"]
     frames = batch["frames"].astype(_cdt(cfg))
     b, s = tokens.shape
@@ -364,6 +462,8 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
     d_rest_post, dx = post_vjp(scale)
 
     arena_st = is_arena_state(state)
+    guarded = guard is not None
+    ok = _pre_guard(guard, dx, d_rest_post, zero)
     if arena_st:
         from repro.core import state_store
         mc, vc = state_store.state_codecs(state)
@@ -373,8 +473,8 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         if decay is not None:            # replicated columns: once per micro
             rdm, rdv = (decay if zero is None or zero.replicated_decay is None
                         else zero.replicated_decay)
-            m0 = mc.begin_micro(m0, rdm)
-            v0 = vc.begin_micro(v0, rdv)
+            m0 = state_store._guarded_begin_micro(mc, m0, rdm, ok)
+            v0 = state_store._guarded_begin_micro(vc, v0, rdv, ok)
         dec_spec, enc_spec = lay.stack("blocks"), lay.stack("enc_blocks")
     else:
         codec = None
@@ -383,22 +483,33 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         new_v = dict(state["v"])
         m0, v0 = state["m"]["blocks"], state["v"]["blocks"]
 
-    # decoder backward: carry (dx, d_enc_out accumulator, m, v)
+    # decoder backward: carry (dx, d_enc_out accumulator, m, v[, ok])
     def dbwd(carry, xs):
-        dx_c, denc, m_c, v_c = carry
+        if guarded:
+            dx_c, denc, m_c, v_c, ok_c = carry
+        else:
+            (dx_c, denc, m_c, v_c), ok_c = carry, None
         j, lp, xin = xs
         _, vjp = jax.vjp(dec_block, lp, xin, enc_out)
         dlp, dxin, denc_j = vjp((dx_c, scale))
-        m_c, v_c = _fold_layer(m_c, v_c, dlp, j, dec_spec, lay, beta1, beta2,
-                               use_pallas, decay, codec, zero, grad_dtype)
+        out = _fold_layer(m_c, v_c, dlp, j, dec_spec, lay, beta1, beta2,
+                          use_pallas, decay, codec, zero, grad_dtype,
+                          fold_scale, ok_c)
+        if guarded:
+            m_c, v_c, ok_c = out
+            return (dxin, denc + denc_j, m_c, v_c, ok_c), None
+        m_c, v_c = out
         return (dxin, denc + denc_j, m_c, v_c), None
 
     denc0 = jnp.zeros_like(enc_out)
     nl = jax.tree.leaves(params["blocks"])[0].shape[0]
-    (dx, denc, m_new, v_new), _ = lax.scan(
-        dbwd, (dx, denc0, m0, v0),
-        (jnp.arange(nl), params["blocks"], dec_saved),
-        reverse=True)
+    dxs = (jnp.arange(nl), params["blocks"], dec_saved)
+    if guarded:
+        (dx, denc, m_new, v_new, ok), _ = lax.scan(
+            dbwd, (dx, denc0, m0, v0, ok), dxs, reverse=True)
+    else:
+        (dx, denc, m_new, v_new), _ = lax.scan(
+            dbwd, (dx, denc0, m0, v0), dxs, reverse=True)
     if arena_st:
         m0, v0 = m_new, v_new
     else:
@@ -409,30 +520,44 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
 
     # encoder backward
     def ebwd(carry, xs):
-        dx_c, m_c, v_c = carry
+        if guarded:
+            dx_c, m_c, v_c, ok_c = carry
+        else:
+            (dx_c, m_c, v_c), ok_c = carry, None
         j, lp, xin = xs
         _, vjp = jax.vjp(
             lambda lp_, xi_: apply_block(cfg, lp_, xi_, epos, kind="dense",
                                          causal=False), lp, xin)
         dlp, dxin = vjp((dx_c, scale))
-        m_c, v_c = _fold_layer(m_c, v_c, dlp, j, enc_spec, lay, beta1, beta2,
-                               use_pallas, decay, codec, zero, grad_dtype)
+        out = _fold_layer(m_c, v_c, dlp, j, enc_spec, lay, beta1, beta2,
+                          use_pallas, decay, codec, zero, grad_dtype,
+                          fold_scale, ok_c)
+        if guarded:
+            m_c, v_c, ok_c = out
+            return (dxin, m_c, v_c, ok_c), None
+        m_c, v_c = out
         return (dxin, m_c, v_c), None
 
     ne = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
-    (_, m_new, v_new), _ = lax.scan(
-        ebwd, (d_eN, m0, v0),
-        (jnp.arange(ne), params["enc_blocks"], enc_saved),
-        reverse=True)
+    exs = (jnp.arange(ne), params["enc_blocks"], enc_saved)
+    if guarded:
+        (_, m_new, v_new, ok), _ = lax.scan(
+            ebwd, (d_eN, m0, v0, ok), exs, reverse=True)
+    else:
+        (_, m_new, v_new), _ = lax.scan(
+            ebwd, (d_eN, m0, v0), exs, reverse=True)
 
     (d_rest_pre,) = pre_vjp(dx)
     d_rest = jax.tree.map(lambda a, b_, c: a + b_ + c,
                           d_rest_post, d_rest_encn, d_rest_pre)
     if arena_st:
-        m_new, v_new = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
-                                  decay, codec, zero, grad_dtype)
-        return ce, dict(state, m=mc.wrap(lay, m_new),
-                        v=vc.wrap(lay, v_new))
+        out = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
+                         decay, codec, zero, grad_dtype, fold_scale, ok)
+        m_new, v_new = out[0], out[1]
+        new_state = dict(state, m=mc.wrap(lay, m_new), v=vc.wrap(lay, v_new))
+        if guarded:
+            return ce, new_state, out[2]
+        return ce, new_state
     new_m["enc_blocks"], new_v["enc_blocks"] = m_new, v_new
     for k in d_rest:
         new_m[k], new_v[k] = _fold_tree(state["m"][k], state["v"][k],

@@ -340,8 +340,33 @@ def _decay_pair(decay):
     return (1.0, 1.0) if decay is None else decay
 
 
+def _resolve_guard(guard, g):
+    """None -> unguarded. True -> self-check: finite flag over the packed
+    slab, computed BEFORE anything (kernel write or replicated decay)
+    commits. A traced array (the psum-agreed flag under shard_map) passes
+    through verbatim."""
+    if guard is None:
+        return None
+    if guard is True:
+        return jnp.isfinite(g).all()
+    return guard
+
+
+def _guarded_begin_micro(codec, parts, decay, flag):
+    """begin_micro with the replicated-column decay predicated on the
+    finite flag: a skipped micro-batch must be a BITWISE no-op, and the
+    rowcol column sums decay outside the kernel — so the decayed and
+    original parts are `where`-selected instead of multiplying by a
+    conditional 1.0 (x*1.0 is not a bitwise identity for all floats)."""
+    parts = tuple(parts)
+    decayed = codec.begin_micro(parts, decay)
+    if flag is None or decayed is parts:
+        return decayed
+    return tuple(jnp.where(flag, d, o) for d, o in zip(decayed, parts))
+
+
 def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
-         decay=None, replicated_decay=None, grad_dtype=None):
+         decay=None, replicated_decay=None, grad_dtype=None, guard=None):
     """Whole-arena fold of one micro-batch's gradient arena into both
     moments: one fused pallas_call. `decay=(dm, dv)` fuses the
     begin-minibatch decay (row-indexed columns decay in-kernel; replicated
@@ -351,49 +376,62 @@ def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
     `g` may ride the bf16 wire (upcast in-kernel, fp32 accumulation);
     `grad_dtype` pins the caller's CONFIGURED wire against the slab it
     actually packed (a pack site that dropped the dtype fails loudly
-    instead of silently widening the wire)."""
+    instead of silently widening the wire).
+
+    `guard` (True = self-check the slab, traced array = use verbatim)
+    makes the whole fold — in-kernel writes AND the outside-the-kernel
+    replicated decay — a bitwise no-op when the flag is false, and the
+    return becomes (m_parts, v_parts, flag)."""
     mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
+    flag = _resolve_guard(guard, g)
     if decay is not None or replicated_decay is not None:
         rdm, rdv = _decay_pair(decay if replicated_decay is None
                                else replicated_decay)
-        m_parts = mc.begin_micro(tuple(m_parts), rdm)
-        v_parts = vc.begin_micro(tuple(v_parts), rdv)
+        m_parts = _guarded_begin_micro(mc, m_parts, rdm, flag)
+        v_parts = _guarded_begin_micro(vc, v_parts, rdv, flag)
     from repro.kernels import fused_step
     return fused_step.arena_fold(tuple(m_parts), tuple(v_parts), g,
                                  beta1=beta1, beta2=beta2, scale=scale,
                                  decay=decay, m_codec=mc.kernel,
-                                 v_codec=vc.kernel, grad_dtype=grad_dtype)
+                                 v_codec=vc.kernel, grad_dtype=grad_dtype,
+                                 guard=flag)
 
 
 def fold_slice(m_codec, v_codec, m_parts, v_parts, g, row_offset, *,
-               beta1, beta2, block, scale=1.0, decay=None, grad_dtype=None):
+               beta1, beta2, block, scale=1.0, decay=None, grad_dtype=None,
+               guard=None):
     """Fold a gradient slab into rows [row_offset, row_offset+rows_g).
     Unlike `fold`, replicated columns are NOT decayed here — a micro-batch
     is many slice folds, so the engine decays them once per micro-batch via
     `codec.begin_micro` (see core/layerwise.py). `grad_dtype` as in
-    `fold`: the declared wire is validated against the slab."""
+    `fold`: the declared wire is validated against the slab. `guard` as in
+    `fold` (the return gains the flag); slice-fold callers predicate their
+    own begin_micro decay with the same flag."""
     mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
     from repro.kernels import fused_step
     return fused_step.arena_fold_slice(tuple(m_parts), tuple(v_parts), g,
                                        row_offset, beta1=beta1, beta2=beta2,
                                        block=block, scale=scale, decay=decay,
                                        m_codec=mc.kernel, v_codec=vc.kernel,
-                                       grad_dtype=grad_dtype)
+                                       grad_dtype=grad_dtype,
+                                       guard=_resolve_guard(guard, g))
 
 
 def apply(m_codec, v_codec, p, m_parts, v_parts, *, lr, bc1, bc2, eps=1e-8,
-          weight_decay=0.0, work_dtype=None):
+          weight_decay=0.0, work_dtype=None, guard=None):
     """Bias-corrected apply over the packed param arena, decoding both
     moments in-pass; p aliased in-place. With `work_dtype`, `p` is the fp32
     master region and the kernel also emits the `work_dtype` working params
-    — returns (master_new, work) instead of the single updated arena."""
+    — returns (master_new, work) instead of the single updated arena.
+    `guard` (traced bool): when false the params pass through bitwise
+    (all-skipped mini-batch -> identity apply)."""
     mc, vc = get_codec(m_codec, "m"), get_codec(v_codec, "v")
     from repro.kernels import fused_step
     return fused_step.arena_apply(p, tuple(m_parts), tuple(v_parts), lr=lr,
                                   bc1=bc1, bc2=bc2, eps=eps,
                                   weight_decay=weight_decay,
                                   m_codec=mc.kernel, v_codec=vc.kernel,
-                                  work_dtype=work_dtype)
+                                  work_dtype=work_dtype, guard=guard)
 
 
 # ---------------------------------------------------------------------------
@@ -413,62 +451,72 @@ def has_master(state) -> bool:
 
 
 def fold_state(state, g, *, beta1, beta2, scale=1.0, decay=None,
-               replicated_decay=None, grad_dtype=None):
-    """One fused fold of a packed gradient arena into the state dict."""
+               replicated_decay=None, grad_dtype=None, guard=None):
+    """One fused fold of a packed gradient arena into the state dict.
+    With `guard` the return is (new_state, flag) — see `fold`."""
     mc, vc = state_codecs(state)
     layout = state["m"].layout
-    m_parts, v_parts = fold(mc, vc, mc.parts_of(state["m"]),
-                            vc.parts_of(state["v"]), g, beta1=beta1,
-                            beta2=beta2, scale=scale, decay=decay,
-                            replicated_decay=replicated_decay,
-                            grad_dtype=grad_dtype)
-    return dict(state, m=mc.wrap(layout, m_parts),
-                v=vc.wrap(layout, v_parts))
+    out = fold(mc, vc, mc.parts_of(state["m"]),
+               vc.parts_of(state["v"]), g, beta1=beta1,
+               beta2=beta2, scale=scale, decay=decay,
+               replicated_decay=replicated_decay,
+               grad_dtype=grad_dtype, guard=guard)
+    m_parts, v_parts = out[0], out[1]
+    new = dict(state, m=mc.wrap(layout, m_parts),
+               v=vc.wrap(layout, v_parts))
+    return (new, out[2]) if len(out) == 3 else new
 
 
-def begin_micro_state(state, decay):
+def begin_micro_state(state, decay, guard=None):
     """Apply this micro-batch's decay pair to the REPLICATED codec columns
     only (e.g. rowcol's column sums) — row-indexed columns decay inside the
     fold kernels. The bucketed ZeRO-1 schedule calls this once per
     micro-batch before its per-bucket slice folds, exactly as the layer-wise
-    engine does before its backward scan; identity for row-local codecs."""
+    engine does before its backward scan; identity for row-local codecs.
+    `guard` (traced bool, e.g. the psum-agreed finite flag) predicates the
+    decay — a skipped micro-batch leaves the replicated columns bitwise."""
     if decay is None:
         return state
     mc, vc = state_codecs(state)
     layout = state["m"].layout
     return dict(state,
-                m=mc.wrap(layout, mc.begin_micro(
-                    mc.parts_of(state["m"]), decay[0])),
-                v=vc.wrap(layout, vc.begin_micro(
-                    vc.parts_of(state["v"]), decay[1])))
+                m=mc.wrap(layout, _guarded_begin_micro(
+                    mc, mc.parts_of(state["m"]), decay[0], guard)),
+                v=vc.wrap(layout, _guarded_begin_micro(
+                    vc, vc.parts_of(state["v"]), decay[1], guard)))
 
 
 def fold_slice_state(state, g, row_offset, *, beta1, beta2, block, scale=1.0,
-                     decay=None, grad_dtype=None):
+                     decay=None, grad_dtype=None, guard=None):
     """One fused slice fold of a gradient slab into rows
     [row_offset, row_offset + g.shape[0]) of the state dict. Replicated
     codec columns are NOT decayed here (see fold_slice) — pair with
-    begin_micro_state once per micro-batch."""
+    begin_micro_state once per micro-batch. With `guard` the return is
+    (new_state, flag)."""
     mc, vc = state_codecs(state)
     layout = state["m"].layout
-    m_parts, v_parts = fold_slice(mc, vc, mc.parts_of(state["m"]),
-                                  vc.parts_of(state["v"]), g, row_offset,
-                                  beta1=beta1, beta2=beta2, block=block,
-                                  scale=scale, decay=decay,
-                                  grad_dtype=grad_dtype)
-    return dict(state, m=mc.wrap(layout, m_parts),
-                v=vc.wrap(layout, v_parts))
+    out = fold_slice(mc, vc, mc.parts_of(state["m"]),
+                     vc.parts_of(state["v"]), g, row_offset,
+                     beta1=beta1, beta2=beta2, block=block,
+                     scale=scale, decay=decay,
+                     grad_dtype=grad_dtype, guard=guard)
+    m_parts, v_parts = out[0], out[1]
+    new = dict(state, m=mc.wrap(layout, m_parts),
+               v=vc.wrap(layout, v_parts))
+    return (new, out[2]) if len(out) == 3 else new
 
 
-def apply_state(p, state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0):
+def apply_state(p, state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0,
+                guard=None):
     """One fused bias-corrected apply of the state dict onto a param arena."""
     mc, vc = state_codecs(state)
     return apply(mc, vc, p, mc.parts_of(state["m"]), vc.parts_of(state["v"]),
-                 lr=lr, bc1=bc1, bc2=bc2, eps=eps, weight_decay=weight_decay)
+                 lr=lr, bc1=bc1, bc2=bc2, eps=eps, weight_decay=weight_decay,
+                 guard=guard)
 
 
 def apply_master_state(state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0,
-                       work_dtype=jnp.bfloat16):
+                       work_dtype=jnp.bfloat16, guard=None):
     """Master-param apply: one fused kernel updates the fp32 master region
     (`state["p"]`, aliased in-place) AND emits the `work_dtype` working-
     param arena the next forward consumes. Returns (work_arena, new_state).
@@ -479,7 +527,7 @@ def apply_master_state(state, *, lr, bc1, bc2, eps=1e-8, weight_decay=0.0,
     p_master, p_work = apply(
         mc, vc, state["p"].data, mc.parts_of(state["m"]),
         vc.parts_of(state["v"]), lr=lr, bc1=bc1, bc2=bc2, eps=eps,
-        weight_decay=weight_decay, work_dtype=work_dtype)
+        weight_decay=weight_decay, work_dtype=work_dtype, guard=guard)
     return p_work, dict(state, p=state["p"].with_data(p_master))
 
 

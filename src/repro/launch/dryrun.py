@@ -68,7 +68,7 @@ def _sharded_bytes(tree, spec_tree, mesh) -> int:
 def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
                   accum="adama", micro_batches=8, fsdp=True, remat=True,
                   use_pallas=False, optimizer="adama", zero1=False,
-                  profile="tp2d", extra_opt=None, info=None):
+                  profile="tp2d", extra_opt=None, retention=3, info=None):
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     ok, why = shape_supported(cfg, shape)
@@ -91,6 +91,23 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
         dp_size = int(np.prod([mesh.shape[a] for a in rules.dp_axes()])) \
             if rules.dp_axes() else 1
         if engine == "shardmap":
+            # shard_map splits micro-batches on the PER-DEVICE batch shard
+            # (the dp axes are manual), so micro_batches must divide
+            # global_batch / dp_size; the pure-DP profile at 256-way leaves
+            # one local sample, forcing micro_batches=1. Clamp to the
+            # largest feasible count instead of asserting mid-trace.
+            local_gb = shape.global_batch // dp_size
+            if local_gb == 0:
+                return None, (f"global_batch {shape.global_batch} < "
+                              f"{dp_size}-way manual DP (no local sample)")
+            mb = min(opt.micro_batches, local_gb)
+            while local_gb % mb:
+                mb -= 1
+            if mb != opt.micro_batches:
+                print(f"[dryrun] {arch}/{shape_name}: micro_batches "
+                      f"{opt.micro_batches} -> {mb} (local batch {local_gb} "
+                      f"under {dp_size}-way manual DP must split evenly)")
+                opt = dataclasses.replace(opt, micro_batches=mb)
             from repro.core.dp_shardmap import make_dp_train_step
             dp = rules.dp_axes()
             if accum == "ga":
@@ -164,14 +181,23 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
             info["grad_wire_dtype"] = opt.grad_dtype
             info["master_param_bytes"] = optimizer_state_bytes(
                 aopt.get("p", ()))
+            # resilience surface: whether the compiled step carries the
+            # fused finite guards, the loss-scaling mode riding them, and
+            # the checkpoint retention a real launch of this combo would
+            # run with (roofline/compare tooling keys off these)
+            info["finite_guard"] = bool(opt.finite_guard)
+            info["loss_scale"] = str(opt.loss_scale)
+            info["checkpoint_retention"] = int(retention)
         osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
         batch = input_specs(cfg, shape)
         bspecs = rules.batch_pspecs(batch)
         bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs)
         # under shard_map the dp axes are manual: activation constraints may
-        # only reference the auto ("model") axis
+        # only reference the auto ("model") axis — the ctx drops manual
+        # axes from every constraint it emits (pure-DP profile: all of them)
         ctx_dp = () if engine == "shardmap" else rules.dp_axes()
-        with mesh, shard_ctx.use_mesh(mesh, ctx_dp):
+        manual = rules.dp_axes() if engine == "shardmap" else ()
+        with mesh, shard_ctx.use_mesh(mesh, ctx_dp, manual_axes=manual):
             lowered = jax.jit(
                 step,
                 in_shardings=(psh, osh, bsh),
@@ -239,6 +265,10 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
             tag += f"__wire-{v['grad_dtype']}"
         if k == "extra_opt" and v and v.get("master_params"):
             tag += "__master"
+        if k == "extra_opt" and v and v.get("finite_guard"):
+            tag += "__guard"
+            if v.get("loss_scale", "off") != "off":
+                tag += f"-{v['loss_scale']}"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     info = {}
@@ -377,17 +407,31 @@ def main():
                     help="fp32 master params in the arena + bf16 working "
                          "params emitted by the fused apply (AMP contract); "
                          "requires --arena")
+    ap.add_argument("--finite-guard", action="store_true",
+                    help="fused non-finite guards in the compiled step "
+                         "(train/scaler.py); implies --arena")
+    ap.add_argument("--loss-scale", default="off",
+                    help="'off', 'dynamic', or a positive float — loss "
+                         "scaling fused into the guarded fold kernels; "
+                         "implies --finite-guard and --arena, requires "
+                         "--grad-dtype bf16")
+    ap.add_argument("--keep-last-n", type=int, default=3,
+                    help="checkpoint retention recorded in the artifact "
+                         "(the dryrun itself saves nothing)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
     extra_opt = None
+    guard = args.finite_guard or args.loss_scale != "off"
     if args.arena or args.state_codec != "fp32" or args.m_codec != "fp32" \
-            or args.grad_dtype != "fp32" or args.master_params:
+            or args.grad_dtype != "fp32" or args.master_params or guard:
         extra_opt = {"arena": True, "state_codec": args.state_codec,
                      "m_codec": args.m_codec,
                      "grad_dtype": args.grad_dtype,
-                     "master_params": args.master_params}
+                     "master_params": args.master_params,
+                     "finite_guard": guard,
+                     "loss_scale": args.loss_scale}
     if args.zero_full_pack or args.zero_bucket_rows:
         extra_opt = dict(extra_opt or {},
                          zero_bucketed=not args.zero_full_pack,
@@ -398,7 +442,8 @@ def main():
               use_pallas=args.use_pallas or args.arena or
               extra_opt is not None,
               optimizer=args.optimizer,
-              profile=args.profile, extra_opt=extra_opt)
+              profile=args.profile, extra_opt=extra_opt,
+              retention=args.keep_last_n)
     combos = []
     if args.all:
         for a in ARCH_IDS:

@@ -66,7 +66,28 @@ def main():
                     help="fp32 master params packed in the arena; the fused "
                          "apply emits bf16 working params (AMP contract); "
                          "requires --arena")
+    ap.add_argument("--finite-guard", action="store_true",
+                    help="fused non-finite guards: each micro-batch's packed "
+                         "gradient is checked before the fold commits and a "
+                         "bad micro-batch is skipped as a bitwise no-op "
+                         "(train/scaler.py); requires --arena")
+    ap.add_argument("--loss-scale", default="off",
+                    help="'off', 'dynamic', or a positive float: loss "
+                         "scaling fused into the fold kernels' upcast; "
+                         "implies --finite-guard, requires --grad-dtype "
+                         "bf16 and a non-'ga' accumulation")
+    ap.add_argument("--scaler-abort-after", type=int, default=0,
+                    help="abort after N CONSECUTIVE skipped micro-batches "
+                         "(0 = never abort)")
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save every N steps (0 = the 5*log-every heuristic)")
+    ap.add_argument("--keep-last-n", type=int, default=3,
+                    help="checkpoint retention: keep only the newest N steps")
+    ap.add_argument("--inject-fault", default=None,
+                    help="fault-injection spec (train/faults.py grammar), "
+                         "e.g. nan@micro=1 | inf@micro=0,step=2 | "
+                         "crash@step=3")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -86,9 +107,14 @@ def main():
             zero_bucketed=not args.zero_full_pack,
             zero_bucket_rows=args.zero_bucket_rows,
             grad_dtype=args.grad_dtype,
-            master_params=args.master_params),
+            master_params=args.master_params,
+            finite_guard=args.finite_guard or args.loss_scale != "off",
+            loss_scale=args.loss_scale,
+            scaler_abort_after=args.scaler_abort_after),
         shape=shape, seed=args.seed, steps=args.steps,
-        log_every=args.log_every, checkpoint_dir=args.checkpoint_dir)
+        log_every=args.log_every, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        keep_last_n=args.keep_last_n, inject_fault=args.inject_fault)
     lr_fn = sched.warmup_cosine(args.lr, args.warmup, args.steps)
     out = train(run, lr_schedule=lr_fn)
     print(f"[train] done; final loss {out['losses'][-1]:.4f} "

@@ -11,17 +11,28 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 _MESH = contextvars.ContextVar("repro_mesh", default=None)
 _DP = contextvars.ContextVar("repro_dp_axes", default=())
+_MANUAL = contextvars.ContextVar("repro_manual_axes", default=())
 
 
 @contextlib.contextmanager
-def use_mesh(mesh, dp_axes: Tuple[str, ...]):
+def use_mesh(mesh, dp_axes: Tuple[str, ...],
+             manual_axes: Tuple[str, ...] = ()):
+    """Install mesh + dp axes for `maybe_shard`. `manual_axes`: axes a
+    surrounding shard_map holds MANUAL — with_sharding_constraint inside
+    the manual region may not reference them (jax raises "Axis ... is also
+    found in manual_axes"), so maybe_shard silently drops them from every
+    constraint it emits. Under the pure-DP shard_map profile every mesh
+    axis is manual and the constraints degrade to no-ops, which is correct:
+    the values they would pin are already device-local."""
     t1 = _MESH.set(mesh)
     t2 = _DP.set(tuple(dp_axes))
+    t3 = _MANUAL.set(tuple(manual_axes))
     try:
         yield
     finally:
         _MESH.reset(t1)
         _DP.reset(t2)
+        _MANUAL.reset(t3)
 
 
 def dp_axes() -> Tuple[str, ...]:
@@ -66,5 +77,19 @@ def maybe_shard(x, *spec_entries):
             continue
         used.update(axes)
         dedup.append(e)
+    manual = set(_MANUAL.get())
+    if manual:
+        # a constraint may not name an axis a surrounding shard_map holds
+        # manual — drop those axes; skip the call entirely if nothing is
+        # left to constrain
+        filt = []
+        for e in dedup:
+            axes = e if isinstance(e, tuple) else (e,) if e else ()
+            keep = tuple(a for a in axes if a not in manual)
+            filt.append(keep if len(keep) > 1
+                        else (keep[0] if keep else None))
+        dedup = filt
+        if all(e is None for e in dedup):
+            return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*dedup)))

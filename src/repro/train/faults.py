@@ -1,0 +1,179 @@
+"""Fault injection for the resilience layer (test-only, but shipped as a
+real module so the CLI `--inject-fault` flag and the test suite share one
+implementation and one spec grammar).
+
+A `FaultSpec` names WHAT goes wrong and WHERE:
+
+    nan@micro=1              NaN into micro-batch 1's gradient, every step
+    inf@micro=2,device=3     Inf on device 3 only (shard_map engines)
+    nan@micro=0,step=2       only on train step 2
+    zero@micro=1             silent corruption: zero a gradient leaf —
+                             finite, so the guards must NOT fire (what
+                             checksums catch, guards cannot)
+    skip@micro=1             force the guard verdict to False WITHOUT
+                             corrupting anything — the reference semantics
+                             for "a run that never saw micro-batch k"
+    crash@step=3             raise InjectedCrash between apply and save on
+                             step 3 (host-side, train/loop.py)
+
+Selectors default to -1 = match every value. `micro`, `device` and `step`
+comparisons are traced (jnp.where), so one compiled step function serves
+any spec — injection happens INSIDE jit, exactly where a real NaN would
+appear, and the "skip" kind is the bitwise-parity reference: a guarded run
+that catches an injected NaN at micro-batch k must leave m/v/p identical
+to a run that forced a skip at k.
+
+Host-side helpers (`corrupt_checkpoint_array`, `truncate_checkpoint`)
+damage checkpoints on disk for the CheckpointCorruptError tests.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("nan", "inf", "zero", "skip", "crash")
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by train/loop.py for `crash@step=N` AFTER the step's update
+    (apply committed, donation done) and BEFORE any checkpoint save — the
+    worst-case kill point the auto-resume path must survive."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    kind: str                    # one of KINDS
+    micro_batch: int = -1        # -1 = every micro-batch
+    device: int = -1             # -1 = every device (shard_map engines)
+    step: int = -1               # -1 = every step
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; expected "
+                             f"one of {KINDS}")
+
+
+_SEL = re.compile(r"^(micro|device|step)=(-?\d+)$")
+
+
+def parse_fault(spec: Optional[str]) -> Optional[FaultSpec]:
+    """Parse the CLI/RunConfig grammar: `<kind>[@sel=val[,sel=val...]]`
+    with selectors micro/device/step. None/empty passes through as None."""
+    if not spec:
+        return None
+    kind, _, rest = spec.partition("@")
+    kw = {}
+    if rest:
+        for part in rest.split(","):
+            m = _SEL.match(part.strip())
+            if not m:
+                raise ValueError(
+                    f"bad fault selector {part!r} in {spec!r}; expected "
+                    f"micro=<i>, device=<i> or step=<i>")
+            key = {"micro": "micro_batch"}.get(m.group(1), m.group(1))
+            kw[key] = int(m.group(2))
+    return FaultSpec(kind=kind.strip(), **kw)
+
+
+def _hit(spec: FaultSpec, micro, step, device):
+    """Traced bool: does this (micro, step, device) coordinate match?"""
+    h = jnp.asarray(True)
+    if spec.micro_batch >= 0:
+        h = h & (jnp.asarray(micro) == spec.micro_batch)
+    if spec.step >= 0:
+        if step is None:
+            raise ValueError(f"fault {spec} selects a step but the engine "
+                             f"did not thread the step counter")
+        h = h & (jnp.asarray(step) == spec.step)
+    if spec.device >= 0:
+        if device is None:
+            raise ValueError(f"fault {spec} selects a device but the engine "
+                             f"is not running under shard_map")
+        h = h & (jnp.asarray(device) == spec.device)
+    return h
+
+
+def corrupt_tree(spec: Optional[FaultSpec], tree, *, micro, step=None,
+                 device=None):
+    """Inject the fault into a gradient pytree (inside jit). nan/inf poison
+    one element of the first leaf — enough for any finite-flag reduction;
+    zero silently zeros the first leaf (finite: guards must NOT fire).
+    skip/crash/None leave the tree untouched."""
+    if spec is None or spec.kind not in ("nan", "inf", "zero"):
+        return tree
+    hit = _hit(spec, micro, step, device)
+    leaves, treedef = jax.tree.flatten(tree)
+    leaf = leaves[0]
+    if spec.kind == "zero":
+        leaves[0] = leaf * jnp.where(hit, 0.0, 1.0).astype(leaf.dtype)
+    else:
+        bad = jnp.asarray(jnp.nan if spec.kind == "nan" else jnp.inf,
+                          leaf.dtype)
+        idx = (0,) * leaf.ndim
+        leaves[0] = leaf.at[idx].set(jnp.where(hit, bad, leaf[idx]))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def corrupt_loss(spec: Optional[FaultSpec], loss, *, micro, step=None,
+                 device=None):
+    """Inject nan/inf at the LOSS (before backward): the realistic failure
+    mode, and the one the layer-wise engine's streaming guard covers
+    end-to-end (a loss-originated NaN reaches every layer's slab)."""
+    if spec is None or spec.kind not in ("nan", "inf"):
+        return loss
+    hit = _hit(spec, micro, step, device)
+    bad = jnp.asarray(jnp.nan if spec.kind == "nan" else jnp.inf, loss.dtype)
+    return jnp.where(hit, bad, loss)
+
+
+def apply_skip(spec: Optional[FaultSpec], ok, *, micro, step=None,
+               device=None):
+    """AND a guard verdict with a forced `skip` fault (identity for every
+    other kind). Engines call this on the flag they are about to commit
+    with — after any psum agreement, so a device-selected forced skip
+    would desync; the skip kind therefore matches by micro/step only."""
+    if spec is None or spec.kind != "skip":
+        return ok
+    if spec.device >= 0:
+        raise ValueError("skip faults cannot be device-selective: the "
+                         "forced verdict is applied after cross-device "
+                         "agreement (use kind=nan to test agreement)")
+    return jnp.logical_and(ok, jnp.logical_not(
+        _hit(spec, micro, step, device)))
+
+
+def crash_due(spec: Optional[FaultSpec], step: int) -> bool:
+    """Host-side: should train/loop.py raise InjectedCrash after this
+    step's update (0-based step index, BEFORE any save)?"""
+    return (spec is not None and spec.kind == "crash"
+            and (spec.step < 0 or spec.step == step))
+
+
+# ---------------------------------------------------------------------------
+# Host-side checkpoint damage (CheckpointCorruptError tests)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_checkpoint_array(ckpt_dir, step: int, *, offset: int = -64) -> str:
+    """Flip one bit inside <ckpt_dir>/step_<n>/arrays.npz (at `offset`
+    bytes from the end by default; pass a positive mid-file offset to land
+    in array data instead of the zip trailer) and return the damaged path.
+    restore() must raise CheckpointCorruptError naming the file."""
+    path = Path(ckpt_dir) / f"step_{step:08d}" / "arrays.npz"
+    data = bytearray(path.read_bytes())
+    data[offset] ^= 0x01
+    path.write_bytes(bytes(data))
+    return str(path)
+
+
+def truncate_checkpoint(ckpt_dir, step: int, *, keep_bytes: int = 128) -> str:
+    """Truncate arrays.npz to its first `keep_bytes` bytes (a torn write
+    that an atomic rename prevents, reproduced deliberately)."""
+    path = Path(ckpt_dir) / f"step_{step:08d}" / "arrays.npz"
+    path.write_bytes(path.read_bytes()[:keep_bytes])
+    return str(path)

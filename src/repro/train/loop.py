@@ -1,5 +1,13 @@
 """Training loop: metrics, logging, checkpointing, restore — engine-agnostic
-(any step_fn from core.accumulation / core.dp_shardmap)."""
+(any step_fn from core.accumulation / core.dp_shardmap).
+
+Resilience wiring: `run.inject_fault` (train/faults.py grammar) threads a
+FaultSpec into the compiled step (nan/inf/zero/skip) or arms a host-side
+`InjectedCrash` after a step's update commits and BEFORE its checkpoint
+save — the worst-case kill the auto-resume path must survive. With
+`finite_guard=True` the loop surfaces loss_scale / skipped_micro_batches /
+consec_skips in the logs and aborts when `scaler_abort_after` consecutive
+micro-batches skip (a run that is only skipping is not training)."""
 from __future__ import annotations
 
 import contextlib
@@ -16,6 +24,7 @@ from repro.data import make_data
 from repro.models.model import init_params
 from repro.optim import schedule as sched
 from repro.train import checkpoint as ckpt
+from repro.train import faults as faults_mod
 
 
 def train(run: RunConfig, *, lr_schedule=None, log_fn=print,
@@ -44,9 +53,11 @@ def train(run: RunConfig, *, lr_schedule=None, log_fn=print,
                "this single-process loop (only the arena row-range path is "
                "wired here); per-leaf ZeRO-1 runs via launch/dryrun.py or "
                "a pjit launcher with sharding rules — pass --arena to shard")
+    fault = faults_mod.parse_fault(run.inject_fault)
     step_fn, opt_init = make_train_step(cfg, opt, remat=run.remat,
                                         lr_schedule=lr_schedule,
-                                        state_shards=state_shards)
+                                        state_shards=state_shards,
+                                        fault=fault)
     opt_state = opt_init(params)
     start = 0
     if run.checkpoint_dir:
@@ -61,6 +72,7 @@ def train(run: RunConfig, *, lr_schedule=None, log_fn=print,
 
     if data is None:
         data = make_data(cfg, run.shape, seed=run.seed)
+    every = run.checkpoint_every or max(run.log_every * 5, 50)
     jstep = jax.jit(step_fn, donate_argnums=(0, 1))
     losses = []
     t0 = time.time()
@@ -69,15 +81,37 @@ def train(run: RunConfig, *, lr_schedule=None, log_fn=print,
             batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
             params, opt_state, metrics = jstep(params, opt_state, batch)
             losses.append(float(metrics["loss"]))
+            consec = int(metrics.get("consec_skips", 0))
+            if opt.scaler_abort_after and consec >= opt.scaler_abort_after:
+                raise RuntimeError(
+                    f"aborting at step {i + 1}: {consec} consecutive "
+                    f"micro-batches skipped non-finite (>= scaler_abort_"
+                    f"after={opt.scaler_abort_after}); loss_scale="
+                    f"{float(metrics.get('loss_scale', 1.0)):g} — the run "
+                    f"is diverging, not merely overflowing")
             if (i + 1) % run.log_every == 0:
                 dt = (time.time() - t0) / (i + 1 - start)
+                extra = ""
+                if "loss_scale" in metrics:
+                    extra = (f" scale={float(metrics['loss_scale']):g}"
+                             f" skipped="
+                             f"{int(metrics['skipped_micro_batches'])}")
                 log_fn(f"[train] step {i+1}/{run.steps} "
-                       f"loss={losses[-1]:.4f} ({dt:.2f}s/step)")
-            if run.checkpoint_dir and \
-                    (i + 1) % max(run.log_every * 5, 50) == 0:
+                       f"loss={losses[-1]:.4f}{extra} ({dt:.2f}s/step)")
+            if faults_mod.crash_due(fault, i):
+                # update committed, checkpoint NOT saved: the auto-resume
+                # path above must replay from the last saved step bitwise
+                raise faults_mod.InjectedCrash(
+                    f"injected crash after step {i + 1}'s update, before "
+                    f"its save")
+            if run.checkpoint_dir and (i + 1) % every == 0:
                 ckpt.save(run.checkpoint_dir, i + 1,
-                          {"params": params, "opt": opt_state})
+                          {"params": params, "opt": opt_state},
+                          keep=run.keep_last_n)
     if run.checkpoint_dir:
         ckpt.save(run.checkpoint_dir, run.steps,
-                  {"params": params, "opt": opt_state})
-    return {"params": params, "opt_state": opt_state, "losses": losses}
+                  {"params": params, "opt": opt_state},
+                  keep=run.keep_last_n)
+    return {"params": params, "opt_state": opt_state, "losses": losses,
+            "metrics": {k: float(v) for k, v in metrics.items()}
+            if run.steps > start else {}}

@@ -1,0 +1,127 @@
+"""GradScaler for the bf16 gradient wire: dynamic loss scaling + skip
+accounting, built around the fused finite guards (kernels/fused_step.py).
+
+The classic AMP recipe checks the ACCUMULATED gradient for overflow and
+skips the whole optimizer step. AdamA breaks that recipe by design — the
+gradient is folded into (m, v) and released per micro-batch, so by the
+time an overflow is visible it would already be in the arena. The guarded
+fold kernels restore the invariant at micro-batch granularity: every fold
+emits a finite flag and commits nothing when it is false. This module owns
+the policy ON TOP of that mechanism:
+
+  scale     the live loss scale. The loss is multiplied by it before
+            backward; the fold kernels divide it back out via the SMEM
+            scale scalar (scale_into_fold), so the moments never see it.
+  growth    consecutive good micro-batches since the last skip/growth;
+            at `growth_interval` the scale doubles (capped at SCALE_MAX).
+  skipped   total skipped micro-batches (monotonic; surfaced in metrics).
+  consec    CURRENT run of consecutive skips; train/loop.py aborts when it
+            reaches OptimizerConfig.scaler_abort_after (> 0).
+
+All four ride in the optimizer state dict under "scaler" (plain fp32/int32
+scalars — they pass through dict(state, ...) sites, checkpoint like any
+other leaf, and are replicated under the shard_map engines because the
+skip decision is psum-agreed before scaler_update runs: every device
+applies the identical transition, so the counters never diverge).
+
+Note bf16 shares fp32's exponent range, so the fp16-style overflow story
+barely applies to today's wire — the guards' realistic prey is NaN losses
+and data corruption, and the scaler is the policy layer the ROADMAP's fp8
+wire (true 4-bit exponent class) will need unchanged.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import parse_loss_scale
+
+SCALE_GROWTH = 2.0          # growth factor at each growth_interval
+SCALE_BACKOFF = 0.5         # backoff factor on every skipped micro-batch
+SCALE_MIN = 1.0             # backoff floor (never scale DOWN the loss)
+SCALE_MAX = float(2 ** 24)  # growth ceiling
+DYNAMIC_INIT = float(2 ** 15)
+
+
+def wants_scaler(opt) -> bool:
+    """Whether this OptimizerConfig carries scaler state: any finite_guard
+    run does (skip accounting), with the scale frozen at 1.0 unless
+    loss_scale is on."""
+    return bool(opt.finite_guard)
+
+
+def init_scaler(opt):
+    """The "scaler" entry of the optimizer state dict, or None when the
+    config has no guards (the key is simply absent — legacy states keep
+    their treedef)."""
+    if not wants_scaler(opt):
+        return None
+    parsed = parse_loss_scale(opt.loss_scale)
+    if parsed == "off":
+        scale = 1.0
+    elif parsed == "dynamic":
+        scale = DYNAMIC_INIT
+    else:
+        scale = float(parsed)
+    return {"scale": jnp.asarray(scale, jnp.float32),
+            "growth": jnp.zeros((), jnp.int32),
+            "skipped": jnp.zeros((), jnp.int32),
+            "consec": jnp.zeros((), jnp.int32)}
+
+
+def is_dynamic(opt) -> bool:
+    return parse_loss_scale(opt.loss_scale) == "dynamic"
+
+
+def scaler_update(sc, ok, *, dynamic: bool, growth_interval: int):
+    """One micro-batch's scaler transition, pure jnp (runs inside the
+    engines' fold scans, after the — psum-agreed, under shard_map — finite
+    flag is known).
+
+    ok=False: scale halves (floored at SCALE_MIN), the growth run resets,
+    skipped and consec advance. ok=True: the growth run advances and at
+    `growth_interval` the scale doubles (capped at SCALE_MAX), consec
+    resets. With dynamic=False the scale is left untouched (static or off)
+    but the skip counters still track."""
+    okf = jnp.asarray(ok)
+    grown = sc["growth"] + 1
+    if dynamic:
+        scale_good = jnp.where(grown >= growth_interval,
+                               jnp.minimum(sc["scale"] * SCALE_GROWTH,
+                                           SCALE_MAX),
+                               sc["scale"])
+        scale_bad = jnp.maximum(sc["scale"] * SCALE_BACKOFF, SCALE_MIN)
+    else:
+        scale_good = scale_bad = sc["scale"]
+    growth_good = jnp.where(grown >= growth_interval, 0, grown)
+    return {
+        "scale": jnp.where(okf, scale_good, scale_bad),
+        "growth": jnp.where(okf, growth_good, 0),
+        "skipped": sc["skipped"] + jnp.where(okf, 0, 1),
+        "consec": jnp.where(okf, 0, sc["consec"] + 1),
+    }
+
+
+def scale_loss(loss, sc):
+    """Multiply the loss by the live scale before backward (identity when
+    the state has no scaler)."""
+    return loss if sc is None else loss * sc["scale"]
+
+
+def scale_into_fold(scale, sc):
+    """Fold-kernel scale operand: the engine's 1/N (or 1/(N*M)) divided by
+    the live loss scale, so the un-scaling fuses into the in-kernel upcast
+    multiply. Returns a traced scalar when a scaler is present (one
+    compiled kernel serves every scale value via SMEM)."""
+    return scale if sc is None else jnp.asarray(scale, jnp.float32) \
+        / sc["scale"]
+
+
+def scaler_metrics(state, prefix=""):
+    """Flat {name: scalar} metrics for train/loop.py logging; {} when the
+    state carries no scaler."""
+    sc = state.get("scaler") if isinstance(state, dict) else None
+    if sc is None:
+        return {}
+    return {prefix + "loss_scale": sc["scale"],
+            prefix + "skipped_micro_batches": sc["skipped"],
+            prefix + "consec_skips": sc["consec"]}

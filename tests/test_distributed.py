@@ -515,3 +515,134 @@ def test_shardmap_engine_lowers():
         lowered.compile()
         print('OK')
     """, devices=8)
+
+
+def test_zero1_guard_one_bad_device_agreement():
+    """Resilience under shard_map: a NaN born on exactly ONE device of a
+    4-way DP mesh must make ALL shards skip that micro-batch (the verdict
+    is psum-agreed), leaving params and both sharded moments BITWISE equal
+    to a run whose guard was forced False on every device — for all four
+    engine layouts: bucketed ZeRO-1, full-pack ZeRO-1, replicated, and the
+    layerwise ZeroStream. Also pins guarded == legacy bitwise with no
+    fault."""
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.dp_shardmap import make_dp_train_step
+        from repro.train.faults import parse_fault
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        batch = {'tokens': tokens, 'labels': tokens}
+        mesh = make_mesh((4,), ('data',))
+
+        def run(oc, variant, fault=None, steps=2):
+            step, init = make_dp_train_step(cfg, oc, mesh, ('data',), variant,
+                                            fault=parse_fault(fault))
+            p, st = params, init(params)
+            with mesh:
+                f = jax.jit(step)
+                for _ in range(steps):
+                    p, st, mx = f(p, st, batch)
+            return p, st, {k: float(v) for k, v in mx.items()}
+
+        def leaves_eq(a, b):
+            la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+            assert len(la) == len(lb)
+            return all(jnp.array_equal(x, y) for x, y in zip(la, lb))
+
+        base = dict(name='adama', accumulation='adama', micro_batches=2,
+                    use_pallas=True, arena=True)
+        for label, oc, variant in [
+            ('zero1-bucketed', OptimizerConfig(**base, zero_stage=1), 'adama'),
+            ('zero1-fullpack', OptimizerConfig(**base, zero_stage=1,
+                                               zero_bucketed=False), 'adama'),
+            ('replicated', OptimizerConfig(**base), 'adama'),
+            ('layerwise', OptimizerConfig(**dict(base,
+                              accumulation='adama_layerwise'), zero_stage=1),
+             'adama_layerwise'),
+        ]:
+            ocg = dataclasses.replace(oc, finite_guard=True)
+            p0, st0, _ = run(oc, variant)
+            p1, st1, _ = run(ocg, variant)
+            assert leaves_eq(p0, p1), (label, 'guarded != legacy')
+            pn, stn, mn = run(ocg, variant, fault='nan@micro=1,device=2,step=0')
+            ps, sts, ms = run(ocg, variant, fault='skip@micro=1,step=0')
+            assert leaves_eq(pn, ps), (label, 'nan != skip params')
+            assert leaves_eq(stn['m'], sts['m']), (label, 'nan != skip m')
+            assert leaves_eq(stn['v'], sts['v']), (label, 'nan != skip v')
+            assert int(stn['step']) == 2 == int(sts['step'])
+            assert mn['skipped_micro_batches'] == 1.0, (label, mn)
+            assert not leaves_eq(pn, p1), (label, 'fault had no effect')
+            print('OK', label)
+        print('ALL-OK')
+    """, devices=4)
+    assert "ALL-OK" in out
+
+
+def test_zero1_dynamic_scale_bf16_recovers():
+    """Dynamic loss scaling over the bucketed ZeRO-1 bf16 wire: an injected
+    NaN backs the scale off exactly once (2^15 -> 2^14 on every shard —
+    the scaler state is replicated and updated from the agreed verdict),
+    the step counter still reaches 3, and the params stay finite."""
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, OptimizerConfig
+        from repro.models.model import init_params
+        from repro.core.dp_shardmap import make_dp_train_step
+        from repro.train.faults import parse_fault
+        cfg = dataclasses.replace(get_config('stablelm_1_6b').reduced(),
+                                  compute_dtype='float32')
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+        batch = {'tokens': tokens, 'labels': tokens}
+        mesh = make_mesh((4,), ('data',))
+        oc = dataclasses.replace(
+            OptimizerConfig(name='adama', accumulation='adama',
+                            micro_batches=2, use_pallas=True, arena=True,
+                            zero_stage=1, grad_dtype='bf16',
+                            finite_guard=True),
+            loss_scale='dynamic')
+        step, init = make_dp_train_step(cfg, oc, mesh, ('data',), 'adama',
+                                        fault=parse_fault('nan@micro=1,step=0'))
+        p, st = params, init(params)
+        with mesh:
+            f = jax.jit(step)
+            for _ in range(3):
+                p, st, mx = f(p, st, batch)
+        mx = {k: float(v) for k, v in mx.items()}
+        assert mx['loss_scale'] == 2.0 ** 14, mx
+        assert int(st['step']) == 3
+        assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(p))
+        print('OK', mx)
+    """, devices=4)
+    assert "OK" in out
+
+
+def test_dryrun_dp_profile_shardmap_compiles():
+    """Regression pin for the recorded `--engine shardmap --profile dp`
+    pod16x16 failure, which had TWO layers: (1) shard_map splits
+    micro-batches on the PER-DEVICE batch, so global_batch/dp_size=1 made
+    micro_batches=8 impossible ('global batch 1 not divisible by micro 8')
+    — build_lowered now clamps; (2) with that fixed, the pure-DP profile
+    makes EVERY mesh axis manual, and shard_attention_operand's activation
+    constraint naming 'model' raised "Axis: model ... is also found in
+    manual_axes" — sharding ctx now drops manual axes from constraints."""
+    run_sub("""
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch.dryrun import build_lowered
+        mesh = make_production_mesh()
+        info = {}
+        lowered, why = build_lowered('stablelm_1_6b', 'train_4k', mesh,
+                                     engine='shardmap', profile='dp',
+                                     micro_batches=8, info=info)
+        assert lowered is not None, why
+        lowered.compile()
+        assert info['finite_guard'] is False
+        assert info['checkpoint_retention'] == 3
+        print('OK')
+    """, devices=512)

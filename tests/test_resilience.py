@@ -1,0 +1,343 @@
+"""Resilience layer: fused non-finite guards, micro-batch skip + dynamic
+loss scaling, fault injection, crash-safe checkpointing.
+
+The load-bearing contract, pinned bitwise: a guarded run that CATCHES an
+injected NaN at micro-batch k must leave params and both moments identical
+to a run that was TOLD to skip micro-batch k (the `skip` fault kind) — the
+predicated fold is a bitwise no-op, not merely a small perturbation. And a
+guarded run that sees no fault is bitwise the legacy unguarded engine.
+
+Single-device engines here; the 4-fake-device shard_map agreement tests
+live in tests/test_distributed.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import batch_for, tiny
+from repro.configs.base import OptimizerConfig, RunConfig, InputShape
+from repro.core.accumulation import make_train_step
+from repro.train import checkpoint as ckpt
+from repro.train import faults as faults_mod
+from repro.train import scaler as scaler_mod
+from repro.train.checkpoint import CheckpointCorruptError
+from repro.train.faults import (FaultSpec, InjectedCrash, parse_fault)
+from repro.train.loop import train
+
+ARCH = "stablelm_1_6b"
+N_MICRO = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny(ARCH)
+    from repro.models.model import init_params
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    return cfg, params, batch
+
+
+def _opt(accum="adama", **kw):
+    return OptimizerConfig(name="adama", accumulation=accum,
+                           micro_batches=N_MICRO, use_pallas=True,
+                           arena=True, **kw)
+
+
+def _run(setup, oc, steps=2, fault=None):
+    cfg, params, batch = setup
+    step, init = make_train_step(cfg, oc, fault=parse_fault(fault))
+    p, st = params, init(params)
+    f = jax.jit(step)
+    for _ in range(steps):
+        p, st, mx = f(p, st, batch)
+    return p, st, {k: float(v) for k, v in mx.items()}
+
+
+def _leaves_eq(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# guard semantics: bitwise no-op skip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("accum", ["adama", "adama_layerwise"])
+def test_caught_nan_equals_forced_skip_bitwise(setup, accum):
+    """NaN injected at micro-batch 1 of step 0 leaves m/v/params BITWISE
+    identical to a run whose guard was simply forced False there: the
+    predicated fold commits nothing — no decay, no requant, no partial
+    write — and the step counter advances identically."""
+    oc = _opt(accum, finite_guard=True)
+    pn, stn, mn = _run(setup, oc, fault="nan@micro=1,step=0")
+    ps, sts, ms = _run(setup, oc, fault="skip@micro=1,step=0")
+    assert _leaves_eq(pn, ps)
+    assert _leaves_eq(stn["m"], sts["m"]) and _leaves_eq(stn["v"], sts["v"])
+    assert int(stn["step"]) == 2 == int(sts["step"])
+    assert mn["skipped_micro_batches"] == 1.0 == ms["skipped_micro_batches"]
+    # and the skip actually removed a micro-batch's contribution
+    pc, _, _ = _run(setup, oc)
+    assert not _leaves_eq(pn, pc)
+
+
+@pytest.mark.parametrize("accum", ["adama", "adama_layerwise", "ga"])
+def test_guarded_clean_run_is_bitwise_legacy(setup, accum):
+    """finite_guard=True with no fault is a bitwise no-op vs the legacy
+    unguarded engine — the guard predicate folds to constant-true commits,
+    not to a numerically-similar variant."""
+    pg, stg, _ = _run(setup, _opt(accum, finite_guard=True))
+    pl, stl, _ = _run(setup, _opt(accum))
+    assert _leaves_eq(pg, pl)
+    assert _leaves_eq(stg["m"], stl["m"]) and _leaves_eq(stg["v"], stl["v"])
+
+
+def test_ga_whole_step_guard(setup):
+    """The ga engine's guard is the classic whole-step skip: one verdict
+    over the accumulated gradient. Its step counter does NOT advance on a
+    skipped step, so a fault with step=0 re-fires every iteration — the
+    counter semantics ('fires while optimizer step == N') are pinned here."""
+    oc = _opt("ga", finite_guard=True)
+    pn, stn, mn = _run(setup, oc, fault="nan@micro=1,step=0")
+    ps, sts, _ = _run(setup, oc, fault="skip@step=0")
+    assert _leaves_eq(pn, ps)
+    assert int(stn["step"]) == 0              # frozen: the fault re-fires
+    assert mn["skipped_micro_batches"] == 2.0
+    assert _leaves_eq(pn, setup[1])           # apply never ran
+
+
+def test_all_micro_batches_skipped_is_identity(setup):
+    """Every micro-batch non-finite -> the mini-batch commits nothing:
+    params and moments bitwise untouched, the step counter does not
+    advance (the skipped mini-batch never happened, so a later clean
+    mini-batch becomes step 1 with first-fold decay semantics)."""
+    cfg, params, batch = setup
+    oc = _opt(finite_guard=True)
+    p, st, mx = _run(setup, oc, steps=1, fault="nan")
+    assert _leaves_eq(p, params)
+    fresh = make_train_step(cfg, oc, fault=None)[1](params)
+    assert _leaves_eq(st["m"], fresh["m"]) and _leaves_eq(st["v"], fresh["v"])
+    assert int(st["step"]) == 0
+    assert mx["skipped_micro_batches"] == float(N_MICRO)
+    assert mx["consec_skips"] == float(N_MICRO)
+
+
+def test_finite_corruption_does_not_trip_guard(setup):
+    """The `zero` fault kind silently zeroes a gradient leaf — finite, so
+    the guard must NOT fire: it changes the trajectory without a skip.
+    (What checksums catch; guards cannot.)"""
+    oc = _opt(finite_guard=True)
+    pz, _, mz = _run(setup, oc, fault="zero@micro=0,step=0")
+    pc, _, _ = _run(setup, oc)
+    assert mz["skipped_micro_batches"] == 0.0
+    assert not _leaves_eq(pz, pc)
+
+
+def test_nonfinite_inf_also_caught(setup):
+    oc = _opt(finite_guard=True)
+    pi, _, mi = _run(setup, oc, fault="inf@micro=0,step=0")
+    ps, _, _ = _run(setup, oc, fault="skip@micro=0,step=0")
+    assert _leaves_eq(pi, ps)
+    assert mi["skipped_micro_batches"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# dynamic loss scaling
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_bf16_backs_off_recovers_and_matches_fp32(setup):
+    """bf16 wire + dynamic scaling: an injected NaN at step 0 backs the
+    scale off once (2^15 -> 2^14), the run keeps training (finite params,
+    step counter full), and the surviving trajectory matches the fp32-wire
+    guarded run that skipped the same micro-batch within the declared bf16
+    wire tolerance."""
+    ocd = dataclasses.replace(_opt(finite_guard=True, grad_dtype="bf16"),
+                              loss_scale="dynamic")
+    pd, std, md = _run(setup, ocd, steps=3, fault="nan@micro=1,step=0")
+    assert md["loss_scale"] == 2.0 ** 14
+    assert int(std["step"]) == 3
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(pd))
+    ocf = _opt(finite_guard=True)
+    pf, _, mf = _run(setup, ocf, steps=3, fault="skip@micro=1,step=0")
+    dloss = abs(md["loss"] - mf["loss"])
+    assert dloss < 0.05, (md["loss"], mf["loss"])
+
+
+def test_static_scale_is_transparent(setup):
+    """A static loss scale S scales every fold's input by S and un-scales
+    in-kernel by 1/S — the trajectory must match the unscaled guarded bf16
+    run to wire tolerance (not bitwise: the bf16 rounding happens at a
+    different magnitude)."""
+    oc1 = dataclasses.replace(_opt(finite_guard=True, grad_dtype="bf16"),
+                              loss_scale="1024.0")
+    oc0 = _opt(finite_guard=True, grad_dtype="bf16")
+    p1, _, m1 = _run(setup, oc1)
+    p0, _, m0 = _run(setup, oc0)
+    assert m1["loss_scale"] == 1024.0
+    assert abs(m1["loss"] - m0["loss"]) < 0.05
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p0)))
+    assert d < 5e-3, d
+
+
+def test_scaler_backoff_floor_and_growth_cap():
+    """Pure scaler-state unit test: consecutive overflows halve the scale
+    but never below SCALE_MIN; consecutive good micro-batches double it
+    every growth_interval but never above SCALE_MAX."""
+    sc = {"scale": jnp.float32(4.0), "growth": jnp.int32(0),
+          "skipped": jnp.int32(0), "consec": jnp.int32(0)}
+    for _ in range(10):
+        sc = scaler_mod.scaler_update(sc, jnp.asarray(False), dynamic=True,
+                                      growth_interval=2)
+    assert float(sc["scale"]) == scaler_mod.SCALE_MIN
+    assert int(sc["skipped"]) == 10 and int(sc["consec"]) == 10
+    sc = {"scale": jnp.float32(scaler_mod.SCALE_MAX), "growth": jnp.int32(0),
+          "skipped": jnp.int32(0), "consec": jnp.int32(0)}
+    for _ in range(6):
+        sc = scaler_mod.scaler_update(sc, jnp.asarray(True), dynamic=True,
+                                      growth_interval=2)
+    assert float(sc["scale"]) == scaler_mod.SCALE_MAX
+    assert int(sc["consec"]) == 0
+
+
+def test_scaler_grows_after_interval():
+    sc = {"scale": jnp.float32(8.0), "growth": jnp.int32(0),
+          "skipped": jnp.int32(0), "consec": jnp.int32(0)}
+    for _ in range(3):
+        sc = scaler_mod.scaler_update(sc, jnp.asarray(True), dynamic=True,
+                                      growth_interval=3)
+    assert float(sc["scale"]) == 16.0
+    assert int(sc["growth"]) == 0             # interval counter reset
+
+
+# ---------------------------------------------------------------------------
+# fault spec grammar
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_grammar():
+    f = parse_fault("nan@micro=1,device=2,step=3")
+    assert f == FaultSpec("nan", micro_batch=1, device=2, step=3)
+    assert parse_fault("crash@step=4") == FaultSpec("crash", step=4)
+    assert parse_fault("inf") == FaultSpec("inf")
+    assert parse_fault(None) is None and parse_fault("") is None
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_fault("bogus@micro=1")
+    with pytest.raises(ValueError, match="bad fault selector"):
+        parse_fault("nan@layer=3")
+
+
+def test_device_selective_skip_refused():
+    """A forced skip is applied AFTER cross-device agreement, so a
+    device-selective skip would desync the shards — refused loudly."""
+    with pytest.raises(ValueError, match="device-selective"):
+        faults_mod.apply_skip(FaultSpec("skip", device=1),
+                              jnp.asarray(True), micro=0, step=0)
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": jnp.arange(4096, dtype=jnp.float32).reshape(4, 1024),
+            "b": jnp.ones((8,), jnp.bfloat16),
+            "step": jnp.int32(7)}
+
+
+def test_checkpoint_checksum_detects_bit_flip(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 3, tree)
+    # flip a bit in the middle of the archive — inside array data, so the
+    # zip structure stays valid and the CRC check has to catch it
+    path = tmp_path / "step_00000003" / "arrays.npz"
+    mid = path.stat().st_size // 2
+    faults_mod.corrupt_checkpoint_array(tmp_path, 3, offset=mid)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        ckpt.restore(tmp_path, 3, jax.eval_shape(lambda: tree))
+    assert "arrays.npz" in str(ei.value)
+
+
+def test_checkpoint_trailer_corruption_detected(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 1, tree)
+    faults_mod.corrupt_checkpoint_array(tmp_path, 1)   # zip trailer bytes
+    with pytest.raises(CheckpointCorruptError, match="arrays.npz"):
+        ckpt.restore(tmp_path, 1, jax.eval_shape(lambda: tree))
+
+
+def test_checkpoint_truncation_detected(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 2, tree)
+    faults_mod.truncate_checkpoint(tmp_path, 2)
+    with pytest.raises(CheckpointCorruptError, match="truncated or "):
+        ckpt.restore(tmp_path, 2, jax.eval_shape(lambda: tree))
+
+
+def test_checkpoint_clean_roundtrip_with_checksums(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 5, tree)
+    out = ckpt.restore(tmp_path, 5, jax.eval_shape(lambda: tree))
+    assert _leaves_eq(out, tree)
+    assert out["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_keeps_last_n(tmp_path):
+    for s in (1, 2, 3, 4):
+        ckpt.save(tmp_path, s, _tree(), keep=2)
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert names == ["step_00000003", "step_00000004"]
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_crash_between_apply_and_save_resumes_bitwise(setup, tmp_path):
+    """InjectedCrash fires AFTER step 2's update commits and BEFORE its
+    save. Auto-resume restores step 1's checkpoint, replays, and the final
+    params/moments are bitwise the uninterrupted run's."""
+    cfg, params, _ = setup
+    oc = _opt(finite_guard=True)
+    shape = InputShape("t", 16, 4, "train")
+    mk = lambda d, fault: RunConfig(
+        model=cfg, optimizer=oc, shape=shape, steps=3, log_every=10,
+        checkpoint_dir=str(d), checkpoint_every=1, keep_last_n=2,
+        inject_fault=fault)
+    quiet = lambda *a: None
+    # the loop donates params into the jitted step — give each run a copy
+    fresh = lambda: jax.tree.map(jnp.copy, params)
+    clean = train(mk(tmp_path / "a", None), params=fresh(), log_fn=quiet)
+    crashed_dir = tmp_path / "b"
+    with pytest.raises(InjectedCrash):
+        train(mk(crashed_dir, "crash@step=1"), params=fresh(), log_fn=quiet)
+    assert ckpt.latest_step(crashed_dir) == 1   # step 2's save never ran
+    resumed = train(mk(crashed_dir, None), params=fresh(), log_fn=quiet)
+    assert _leaves_eq(clean["params"], resumed["params"])
+    assert _leaves_eq(clean["opt_state"]["m"], resumed["opt_state"]["m"])
+    assert _leaves_eq(clean["opt_state"]["v"], resumed["opt_state"]["v"])
+
+
+def test_loop_aborts_after_consecutive_skips(setup):
+    cfg, params, _ = setup
+    oc = _opt(finite_guard=True, scaler_abort_after=3)
+    run = RunConfig(model=cfg, optimizer=oc,
+                    shape=InputShape("t", 16, 4, "train"), steps=4,
+                    log_every=10, inject_fault="nan")
+    with pytest.raises(RuntimeError, match="consecutive"):
+        train(run, params=jax.tree.map(jnp.copy, params),
+              log_fn=lambda *a: None)
+
+
+def test_loop_surfaces_scaler_metrics(setup):
+    cfg, params, _ = setup
+    oc = _opt(finite_guard=True)
+    run = RunConfig(model=cfg, optimizer=oc,
+                    shape=InputShape("t", 16, 4, "train"), steps=1,
+                    log_every=1, inject_fault="nan@micro=0,step=0")
+    out = train(run, params=jax.tree.map(jnp.copy, params),
+                log_fn=lambda *a: None)
+    assert out["metrics"]["skipped_micro_batches"] == 1.0
+    assert out["metrics"]["loss_scale"] == 1.0
