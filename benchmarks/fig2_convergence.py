@@ -3,7 +3,15 @@ parity on a real training run (reduced BERT-class model, synthetic corpus).
 
 Paper claim: "the convergence curve of AdamA coincides with that of Adam"
 regardless of micro-batch count. Derived metric: max |loss_AdamA - loss_Adam|
-over the run, and final-loss delta."""
+over the run, and final-loss delta.
+
+Second section — gradient WIRE dtypes on the arena engine: fp32 vs bf16 vs
+fp8_e4m3 with the error-feedback residual vs fp8 WITHOUT it (the ablation).
+The claim under test: raw fp8 rounding visibly perturbs the trajectory, and
+the residual (state["ef"], carrying each fold's quantization error into the
+next micro-batch) closes most of that gap — fp8+EF must track the fp32 wire
+at least as closely as the ablation does, within the declared per-codec
+fp8 tolerance band."""
 from __future__ import annotations
 
 import dataclasses
@@ -48,6 +56,44 @@ def main():
             f"final={cur[-1]:.4f};adam_ga_final={base[-1]:.4f}")
         assert final < 0.15 and dev < 0.5, \
             f"AdamA(N={n}) diverged from Adam+GA(N={n}): max {dev}, final {final}"
+    wire_comparison(cfg)
+
+
+def wire_comparison(cfg, n=4):
+    """fp32 vs bf16 vs fp8+EF vs fp8-noEF on the guarded arena engine —
+    identical data, seed, and schedule; only the gradient wire differs."""
+    import time
+
+    def arena_opt(**kw):
+        return OptimizerConfig(name="adama", accumulation="adama",
+                               micro_batches=n, lr=1e-3, use_pallas=True,
+                               arena=True, finite_guard=True, **kw)
+
+    base = _run(cfg, arena_opt())
+    runs = {
+        "bf16": arena_opt(grad_dtype="bf16"),
+        "fp8_ef": arena_opt(grad_dtype="fp8_e4m3", loss_scale="1024"),
+        "fp8_noef": arena_opt(grad_dtype="fp8_e4m3", loss_scale="1024",
+                              error_feedback=False),
+    }
+    devs = {}
+    for name, opt in runs.items():
+        t0 = time.perf_counter()
+        cur = _run(cfg, opt)
+        us = (time.perf_counter() - t0) / STEPS * 1e6
+        devs[name] = dev = float(np.max(np.abs(cur - base)))
+        final = float(np.abs(cur[-1] - base[-1]))
+        row(f"fig2/wire_{name}_loss_dev", us,
+            f"max_dev={dev:.4f};final_dev={final:.4f};final={cur[-1]:.4f};"
+            f"fp32_final={base[-1]:.4f}")
+    # the error-feedback claim: the residual closes the fp8 gap — the EF
+    # run must track fp32 at least as closely as the ablation, and land
+    # inside the fp8 tolerance band the conformance records declare
+    assert devs["fp8_ef"] <= devs["fp8_noef"] + 1e-4, \
+        (f"error feedback did not close the fp8 gap: dev {devs['fp8_ef']} "
+         f"with EF vs {devs['fp8_noef']} without")
+    assert devs["fp8_ef"] < 0.5, \
+        f"fp8+EF diverged from the fp32 wire: max dev {devs['fp8_ef']}"
 
 
 if __name__ == "__main__":

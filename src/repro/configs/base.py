@@ -261,7 +261,30 @@ class OptimizerConfig:
     # backend-defined (ring implementations may keep partial sums in bf16
     # hop-by-hop, so deviation can grow with DP size; tolerances are
     # validated at 4 devices).
+    #
+    # "fp8_e4m3" quarters the wire: gradients move as float8_e4m3fn codes
+    # plus a per-row fp32 scale column (kernels/adama_accum.fp8_encode_rows;
+    # the scale is pmax-agreed across devices so summed codes decode, with
+    # n_devices of headroom against overflow), the fold kernels fuse the
+    # decode into the in-kernel upcast (`grad_scale`), and accuracy is
+    # recovered by a MicroAdam-style error-feedback residual state["ef"]
+    # (the quantization error each device left on its OWNED rows, re-
+    # injected into its next micro-batch's pre-quantization gradient;
+    # ZeRO-1 row-sharded, checkpointed, finite-guard-predicated).
+    # fp8_e4m3 additionally requires finite_guard=True: e4m3 has no inf,
+    # NaN codes are the only overflow signal, and the error-feedback
+    # residual must be skip-predicated or a vetoed micro-batch would
+    # corrupt it. In the shard_map DP engine it also requires the bucketed
+    # ZeRO-1 schedule (the residual is per-owned-row; replicated state
+    # would diverge across devices — the engine raises its own error).
     grad_dtype: str = "fp32"
+    # MicroAdam-style error feedback for the fp8_e4m3 wire (inert for
+    # fp32/bf16): each device's quantization error on its owned rows is
+    # kept in state["ef"] and added into the next micro-batch's gradient
+    # before quantization. False drops the residual (ablation knob for the
+    # fig2 convergence comparison) — the wire still quantizes, nothing
+    # recovers the error.
+    error_feedback: bool = True
     # fp32 MASTER params in the arena (the standard AMP contract for
     # compute_dtype=bfloat16 runs): state gains a third packed fp32 region
     # "p"; the fused apply updates it in place and emits bf16 WORKING
@@ -271,6 +294,19 @@ class OptimizerConfig:
     # ZeRO-1 schedule the param all-gather moves bf16 (half bytes) and the
     # working params are never re-packed. Requires arena=True.
     master_params: bool = False
+    # bf16 working-param cache between steps (pjit engines): keep the bf16
+    # work arena the master apply emits as state["wp"] and source each
+    # step's model params from it with ONE unpack — the engines never
+    # re-pack the incoming param tree, and the tree input to the step is
+    # dead (XLA prunes it). Step 1's loss then consumes bf16-cast params
+    # (the standard AMP contract — every later step already did); from
+    # step 2 on the trajectory is bitwise identical to the uncached master
+    # run. Requires master_params=True (the fp32 truth must live in "p" —
+    # caching bf16 params without a master would make the cast lossy).
+    # pjit engines only: the shard_map ZeRO-1 schedule already never
+    # re-packs params (it all-gathers the emitted work rows) and raises on
+    # this knob.
+    work_param_cache: bool = False
     grad_clip: Optional[float] = None
     # Fused non-finite guards (train/scaler.py + kernels/fused_step.py):
     # every arena fold additionally emits a per-call finite flag (a
@@ -293,8 +329,9 @@ class OptimizerConfig:
     # SMEM scalar, so one compiled kernel serves every scale value).
     # "dynamic" grows the scale 2x after scaler_growth_interval consecutive
     # good micro-batches and halves it on every skipped one (floor 1.0).
-    # Requires grad_dtype="bf16" (the wire it protects), finite_guard=True
-    # (skips drive the backoff) and an AdamA fold engine.
+    # Requires a reduced-precision wire (grad_dtype="bf16" or "fp8_e4m3" —
+    # the wire it protects), finite_guard=True (skips drive the backoff)
+    # and an AdamA fold engine.
     loss_scale: str = "off"
     # consecutive good micro-batches before a dynamic scale 2x growth
     scaler_growth_interval: int = 200
@@ -314,7 +351,7 @@ STATE_CODECS = ("fp32", "int8", "factored", "rowcol")    # second moment (v)
 M_CODECS = ("fp32", "int8")                              # first moment (m)
 ZERO_STAGES = (0, 1)
 ACCUM_ENGINES = ("ga", "adama", "adama_layerwise")
-GRAD_DTYPES = ("fp32", "bf16")                           # gradient wire
+GRAD_DTYPES = ("fp32", "bf16", "fp8_e4m3")               # gradient wire
 
 
 def grad_wire_dtype(name: str):
@@ -324,7 +361,8 @@ def grad_wire_dtype(name: str):
     if name not in GRAD_DTYPES:
         raise ValueError(f"unknown grad_dtype {name!r}; expected one of "
                          f"{GRAD_DTYPES}")
-    return jnp.bfloat16 if name == "bf16" else jnp.float32
+    return {"bf16": jnp.bfloat16,
+            "fp8_e4m3": jnp.float8_e4m3fn}.get(name, jnp.float32)
 
 
 def grad_wire_itemsize(name: str) -> int:
@@ -383,10 +421,30 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
                         wire to each codec's declared bf16_wire tolerance
                         (a psum of bf16 payloads over many micro-batches is
                         to-tolerance, not bitwise).
+      grad_dtype=fp8_e4m3 : everything bf16 requires, PLUS finite_guard=True
+                        — e4m3 has no inf (NaN codes are the only overflow
+                        signal, which only the fused guards catch) and the
+                        error-feedback residual state["ef"] must be
+                        skip-predicated so a vetoed micro-batch does not
+                        corrupt it. Gradients move as fp8 codes + a per-row
+                        fp32 scale column (0.25x the fp32 wire); accuracy
+                        is declared per codec pair (Conformance.fp8_wire_lr)
+                        and recovered across micro-batches by the residual
+                        (error_feedback=False ablates it). The shard_map DP
+                        engine additionally requires the bucketed ZeRO-1
+                        schedule for fp8 (per-owned-row residual; it raises
+                        its own actionable error otherwise).
       master_params   : requires arena=True; any engine, any zero stage
                         (the master region is row-indexed fp32, so it
                         row-shards exactly like m/v; the working-param
                         all-gather moves bf16).
+      work_param_cache: requires master_params=True (and therefore arena).
+                        The pjit engines keep the bf16 work arena the
+                        master apply emits as state["wp"] and read each
+                        step's model params from it — the step's param-tree
+                        input is dead and never re-packed. pjit engines
+                        only; the shard_map DP engine raises (its ZeRO-1
+                        schedule already never re-packs params).
       finite_guard    : requires arena=True (the per-fold finite flag is a
                         reduction over the packed gradient slab). Under the
                         AdamA engines the guard is per-MICRO-BATCH (a bad
@@ -457,10 +515,23 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
                 f"loses the fp32-accumulation guarantee the AdamA fold "
                 f"kernels provide (they upcast in-kernel); use "
                 f"accumulation='adama' or 'adama_layerwise'")
+    if opt.grad_dtype == "fp8_e4m3" and not opt.finite_guard:
+        return ("grad_dtype='fp8_e4m3' requires finite_guard=True: e4m3 "
+                "has no inf (overflow surfaces only as NaN codes, which "
+                "the fused guards catch) and the error-feedback residual "
+                "state['ef'] must be skip-predicated so a vetoed "
+                "micro-batch does not corrupt it; pass finite_guard=True")
     if opt.master_params and not opt.arena:
         return ("master_params=True requires arena=True: the fp32 master "
                 "region is a packed arena alongside m/v "
                 "(core/state_store.py); pass arena=True use_pallas=True")
+    if opt.work_param_cache and not opt.master_params:
+        return ("work_param_cache=True requires master_params=True: the "
+                "cache holds BF16 working params, so the fp32 truth must "
+                "live in the master region 'p' — caching without a master "
+                "would make the bf16 cast the stored truth and the "
+                "precision loss would compound every step; pass "
+                "master_params=True (or drop work_param_cache)")
     if opt.finite_guard and not opt.arena:
         return ("finite_guard=True requires arena=True: the per-fold finite "
                 "flag is a reduction over the packed gradient slab "
@@ -478,12 +549,12 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
                     f"the dynamic backoff (and the ga wire is fp32-only "
                     f"anyway); use accumulation='adama' or "
                     f"'adama_layerwise'")
-        if opt.grad_dtype != "bf16":
-            return (f"loss_scale={opt.loss_scale!r} requires "
-                    f"grad_dtype='bf16': loss scaling protects the reduced-"
-                    f"precision gradient wire, got grad_dtype="
-                    f"{opt.grad_dtype!r}; pass grad_dtype='bf16' or "
-                    f"loss_scale='off'")
+        if opt.grad_dtype not in ("bf16", "fp8_e4m3"):
+            return (f"loss_scale={opt.loss_scale!r} requires a reduced-"
+                    f"precision gradient wire (grad_dtype='bf16' or "
+                    f"'fp8_e4m3' — loss scaling protects the wire), got "
+                    f"grad_dtype={opt.grad_dtype!r}; pass grad_dtype='bf16' "
+                    f"or loss_scale='off'")
         if not opt.finite_guard:
             return (f"loss_scale={opt.loss_scale!r} requires "
                     f"finite_guard=True: skipped micro-batches drive the "

@@ -59,6 +59,19 @@ def _wire_dtype(opt: OptimizerConfig):
     return grad_wire_dtype(opt.grad_dtype)
 
 
+def is_fp8_wire(opt: OptimizerConfig) -> bool:
+    """fp8_e4m3 gradient wire: slabs move as fp8 codes + a per-row fp32
+    scale column, decoded inside the fold kernels (`grad_scale`)."""
+    return opt.grad_dtype == "fp8_e4m3"
+
+
+def use_error_feedback(opt: OptimizerConfig) -> bool:
+    """Whether the state carries the fp8 error-feedback residual "ef":
+    only the fp8 wire quantizes coarsely enough to need one, and
+    error_feedback=False ablates it (the fig2 convergence comparison)."""
+    return is_fp8_wire(opt) and opt.error_feedback
+
+
 def _arena_init(opt: OptimizerConfig, state_shards: int = 1):
     """Arena state initializer honouring the configured codec; the layout is
     padded for `state_shards` equal row ranges whenever the caller may shard
@@ -74,7 +87,9 @@ def _arena_init(opt: OptimizerConfig, state_shards: int = 1):
     base = functools.partial(adama.init_arena, codec=opt.state_codec,
                              m_codec=opt.m_codec,
                              n_shards=max(1, state_shards),
-                             master_params=opt.master_params)
+                             master_params=opt.master_params,
+                             error_feedback=use_error_feedback(opt),
+                             work_param_cache=opt.work_param_cache)
     if not opt.finite_guard:
         return base
 
@@ -90,8 +105,9 @@ def _zero_constrain(opt: OptimizerConfig, state):
     """ZeRO-1 over the arena in the pjit engine: constrain every ROW-INDEXED
     state column to row-range sharding over the dp axes (replicated codec
     columns — e.g. the rowcol column sums, whose leading dim is 1 — stay
-    unconstrained; the fp32 master-param region "p" is row-indexed and
-    shards with them). GSPMD then owns the reduce-scatter/all-gather
+    unconstrained; the fp32 master-param region "p", the fp8 error-feedback
+    residual "ef" and the bf16 working-param cache "wp" are row-indexed and
+    shard with them). GSPMD then owns the reduce-scatter/all-gather
     schedule; without an installed mesh this is a no-op (single-device
     runs, tests)."""
     if opt.zero_stage != 1 or not _use_arena(opt):
@@ -103,7 +119,7 @@ def _zero_constrain(opt: OptimizerConfig, state):
                 lambda x, ri: maybe_shard(x, "dp", None) if ri else x,
                 v, mask[k]) if k in ("m", "v") else
                 (jax.tree.map(lambda x: maybe_shard(x, "dp", None), v)
-                 if k == "p" else v))
+                 if k in ("p", "ef", "wp") else v))
             for k, v in state.items()}
 
 
@@ -148,6 +164,8 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
         from repro.train import faults as fault_mod
         micro = _split_micro(batch, n)
         layout = opt_state["m"].layout if use_arena else None
+        if "wp" in opt_state:    # bf16 working-param cache (see adama)
+            params = adama.working_params(opt_state)
 
         def body(carry, xs):
             acc, lsum = carry
@@ -203,6 +221,9 @@ def make_ga_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
             if state_store.has_master(opt_state):
                 work, opt_state = state_store.apply_master_state(
                     opt_state, **kw)
+                if "wp" in opt_state:
+                    opt_state = dict(opt_state, wp=opt_state["wp"]
+                                     .with_data(work))
                 params = arena_mod.unpack(work, layout)
             else:
                 p_new = state_store.apply_state(
@@ -241,10 +262,25 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
     b1, b2 = opt.beta1, opt.beta2
     use_arena = _use_arena(opt)
     wire = _wire_dtype(opt)
+    fp8 = is_fp8_wire(opt)
     guarded = opt.finite_guard           # config enforces arena=True
+    if fp8 and axis_names:
+        raise ValueError(
+            "grad_dtype='fp8_e4m3' in the replicated shard_map adama "
+            "schedule is unsupported: there is no gradient collective to "
+            "quantize (states are psum'd, Eqs. 7-8) and a per-device "
+            "error-feedback residual would desync the replicated state; "
+            "use zero_stage=1 (core/dp_shardmap.py reduce-scatters fp8 "
+            "codes) or the pjit engine")
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
+        if "wp" in opt_state:
+            # bf16 working-param cache: the step's model params come from
+            # ONE unpack of state["wp"]; the passed-in tree is dead and
+            # never re-packed (finalize refreshes the cache from the
+            # master apply's emitted work rows)
+            params = adama.working_params(opt_state)
         if use_arena and guarded:
             from repro.core import state_store
             from repro.train import faults as fault_mod
@@ -252,6 +288,10 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
             dyn = scaler_mod.is_dynamic(opt)
             gi = opt.scaler_growth_interval
             layout = opt_state["m"].layout
+            use_ef = fp8 and "ef" in opt_state
+            if fp8:
+                from repro.kernels.adama_accum import (fp8_decode_rows,
+                                                       fp8_encode_rows)
             # guarded fold scan: the step counter is NOT pre-incremented
             # (it advances only if some fold commits) and the carry tracks
             # `good`, the number of committed folds — the begin-minibatch
@@ -265,23 +305,52 @@ def make_adama_step(cfg: ModelConfig, opt: OptimizerConfig, *, remat=False,
                     lambda p: scaler_mod.scale_loss(loss(p, mb), sc))(params)
                 g = fault_mod.corrupt_tree(fault, g, micro=i,
                                            step=st["step"])
-                slab = arena_mod.pack(g, layout, dtype=wire)
+                if fp8:
+                    # fp8 wire: pack fp32, inject the error-feedback
+                    # residual (stored UNSCALED — the dynamic loss scale
+                    # can change between micro-batches, so the S-scaled
+                    # slab gets ef*S), then encode codes + per-row scale.
+                    # Gradients arrive pre-reduced in the pjit engine, so
+                    # the encode needs no summation headroom (n_summands=1)
+                    slab = arena_mod.pack(g, layout, dtype=jnp.float32)
+                    if use_ef:
+                        slab = slab + st["ef"].data * sc["scale"]
+                else:
+                    slab = arena_mod.pack(g, layout, dtype=wire)
                 # the flag is computed over the packed slab BEFORE the fold
-                # commits; under shard_map it is psum-AGREED so all shards
-                # skip or none do (a lone folding shard would desync the
-                # averaged states); forced-skip faults land on the final
-                # verdict, defining "a run that never saw micro-batch i"
+                # commits (for fp8: pre-encode, residual included — finite
+                # inputs always encode to finite codes); under shard_map it
+                # is psum-AGREED so all shards skip or none do (a lone
+                # folding shard would desync the averaged states);
+                # forced-skip faults land on the final verdict, defining
+                # "a run that never saw micro-batch i"
                 ok = jnp.isfinite(slab).all()
                 if axis_names:
                     ok = lax.psum(1.0 - ok.astype(jnp.float32),
                                   axis_names) == 0
                 ok = fault_mod.apply_skip(fault, ok, micro=i,
                                           step=st["step"])
-                st, _ = state_store.fold_state(
-                    st, slab, beta1=b1, beta2=b2,
-                    scale=scaler_mod.scale_into_fold(1.0 / n, sc),
-                    decay=_fold_decay(good, b1, b2, m_devices),
-                    grad_dtype=wire, guard=ok)
+                if fp8:
+                    codes, gs = fp8_encode_rows(slab)
+                    st, _ = state_store.fold_state(
+                        st, codes, beta1=b1, beta2=b2,
+                        scale=scaler_mod.scale_into_fold(1.0 / n, sc),
+                        decay=_fold_decay(good, b1, b2, m_devices),
+                        grad_dtype=wire, grad_scale=gs, guard=ok)
+                    if use_ef:
+                        # e = (g*S + ef*S - decode)/S, back in unscaled
+                        # units; predicated on the SAME flag as the fold,
+                        # so a skipped micro-batch leaves ef bitwise
+                        ef_new = (slab - fp8_decode_rows(codes, gs)) \
+                            / sc["scale"]
+                        st = dict(st, ef=st["ef"].with_data(
+                            jnp.where(ok, ef_new, st["ef"].data)))
+                else:
+                    st, _ = state_store.fold_state(
+                        st, slab, beta1=b1, beta2=b2,
+                        scale=scaler_mod.scale_into_fold(1.0 / n, sc),
+                        decay=_fold_decay(good, b1, b2, m_devices),
+                        grad_dtype=wire, guard=ok)
                 st = dict(st, scaler=scaler_mod.scaler_update(
                     sc, ok, dynamic=dyn, growth_interval=gi))
                 lsum = lsum + jnp.where(ok, l, 0.0) / sc["scale"]
@@ -369,6 +438,8 @@ def make_adama_layerwise_step(cfg: ModelConfig, opt: OptimizerConfig, *,
 
     def step(params, opt_state, batch):
         micro = _split_micro(batch, n)
+        if "wp" in opt_state:    # bf16 working-param cache (see adama)
+            params = adama.working_params(opt_state)
         if use_arena and guarded:
             from repro.train import faults as fault_mod
             from repro.train import scaler as scaler_mod

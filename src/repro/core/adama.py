@@ -38,7 +38,9 @@ def init(params) -> State:
 
 
 def init_arena(params, codec: str = "fp32", m_codec: str = "fp32",
-               n_shards: int = 1, master_params: bool = False) -> State:
+               n_shards: int = 1, master_params: bool = False,
+               error_feedback: bool = False,
+               work_param_cache: bool = False) -> State:
     """Arena-backed state: both moments are codec-encoded arena columns
     (core/state_store.py; `codec` selects v's codec, `m_codec` m's), so each
     fold/apply is ONE kernel dispatch for every registered pair. `n_shards`
@@ -48,7 +50,22 @@ def init_arena(params, codec: str = "fp32", m_codec: str = "fp32",
     packs `params` as a third fp32 arena alongside m and v. The apply then
     updates the master and emits bf16 working params from the same kernel
     (state_store.apply_master_state) — the standard AMP contract, with the
-    round-trip exact by construction."""
+    round-trip exact by construction.
+
+    `error_feedback=True` adds the fp8-wire RESIDUAL region: state["ef"] is
+    a zero-initialized fp32 arena holding the quantization error each fold
+    left behind, in UNSCALED gradient units (the dynamic loss scale can
+    change between micro-batches, so the stored residual must not carry
+    it). Row-indexed like the master region, it rides the same extra-state-
+    key plumbing: ZeRO-1 row-sharded, bucket-permuted (zeros are
+    permutation-invariant, so no pre-permute), checkpointed, and guard-
+    predicated by the engines.
+
+    `work_param_cache=True` adds the bf16 WORKING-PARAM cache: state["wp"]
+    packs `params` as bf16; the pjit engines read each step's model params
+    from it (one unpack, no re-pack of the tree) and finalize refreshes it
+    with the work rows the master apply emits. Requires master_params
+    (enforced by OptimizerConfig)."""
     from repro.core import state_store
     layout = arena_mod.build_layout(params, n_shards=n_shards)
     state = {"m": state_store.get_codec(m_codec, "m").init(layout),
@@ -56,7 +73,22 @@ def init_arena(params, codec: str = "fp32", m_codec: str = "fp32",
              "step": jnp.zeros((), jnp.int32)}
     if master_params:
         state["p"] = Arena(arena_mod.pack(params, layout), layout)
+    if error_feedback:
+        state["ef"] = Arena.zeros(layout)
+    if work_param_cache:
+        state["wp"] = Arena(arena_mod.pack(params, layout,
+                                           dtype=jnp.bfloat16), layout)
     return state
+
+
+def working_params(state: State):
+    """Model-param tree from the bf16 working-param cache (state["wp"]):
+    one unpack, leaves cast back to their recorded dtypes. The engines call
+    this at step start when the cache is present, making the step's param-
+    tree INPUT dead — XLA prunes it, and the pack/unpack pair the non-
+    cached path pays at the jit boundary disappears."""
+    wp = state["wp"]
+    return arena_mod.unpack(wp.data, wp.layout)
 
 
 def is_arena_state(state: State) -> bool:
@@ -189,6 +221,8 @@ def finalize(params, state: State, *, lr, beta1: float, beta2: float,
             work, state = state_store.apply_master_state(
                 state, lr=lr, bc1=bc1, bc2=bc2, eps=eps,
                 weight_decay=weight_decay, guard=guard)
+            if "wp" in state:    # refresh the bf16 working-param cache
+                state = dict(state, wp=state["wp"].with_data(work))
             return arena_mod.unpack(work, layout), state
         p_new = state_store.apply_state(
             arena_mod.pack(params, layout), state, lr=lr, bc1=bc1, bc2=bc2,

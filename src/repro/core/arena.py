@@ -233,10 +233,25 @@ def build_layout(tree, n_shards: int = 1) -> ArenaLayout:
 # ---------------------------------------------------------------------------
 
 
+def _check_pack_dtype(dtype):
+    """The pack helpers CAST; fp8 needs a scaled encode. A raw cast to
+    e4m3 (dynamic range ±448, 3 mantissa bits) silently flushes most of a
+    gradient to zero/saturation, so packing straight to fp8 is always a
+    bug — the fp8 wire packs fp32 (or bf16) first and then encodes with
+    kernels.adama_accum.fp8_encode_rows (codes + per-row scale column)."""
+    if jnp.dtype(dtype) == jnp.dtype(jnp.float8_e4m3fn):
+        raise TypeError(
+            "cannot pack a tree directly to float8_e4m3fn: an unscaled "
+            "cast destroys the gradient. Pack fp32 and encode with "
+            "kernels.adama_accum.fp8_encode_rows (codes + per-row scale "
+            "column) instead")
+
+
 def _pack_region(leaves, specs, region_rows, lead: Tuple[int, ...] = (),
                  dtype=jnp.float32):
     """Concatenate leaves (each reshaped (*lead, -1), zero-padded to whole
     rows) into a (*lead, region_rows, LANES) `dtype` block."""
+    _check_pack_dtype(dtype)
     mats = []
     for x, spec in zip(leaves, specs):
         flat = x.reshape(lead + (-1,)).astype(dtype)
@@ -282,6 +297,7 @@ def pack_rest_rows(rest_tree, layout: ArenaLayout, row_lo: int, row_hi: int,
     the leaves that intersect the range (the bucketed ZeRO-1 schedule packs
     the rest region one size-capped bucket at a time). The range may cut
     through a leaf mid-row-run; cuts are static, so the slices are too."""
+    _check_pack_dtype(dtype)
     rest = layout.rest
     lo, hi = row_lo - rest.row, row_hi - rest.row
     assert 0 <= lo < hi <= rest.rows, (row_lo, row_hi, rest.row, rest.rows)

@@ -199,6 +199,22 @@ def pack_bucket(grads, layout: ArenaLayout, b: Bucket,
     return jnp.zeros((b.rows, LANES), dtype)
 
 
+def pack_bucket_fp8(grads, layout: ArenaLayout, b: Bucket,
+                    n_summands: int = 1):
+    """fp8 wire form of pack_bucket: the bucket's fp32 slab encoded as
+    ((b.rows, LANES) e4m3 codes, (b.rows, 1) fp32 scale column). The arena
+    pack helpers refuse a raw fp8 dtype (an unscaled cast destroys the
+    gradient), so the fp8 wire always goes through this scaled encode.
+    `n_summands` is the overflow headroom when the codes will be SUMMED by
+    a collective — the shard_map schedule instead packs fp32, injects the
+    error-feedback residual, pmax-agrees the rowmax and quantizes manually
+    (see core/dp_shardmap.py); this helper serves the single-device/pjit
+    path and the conformance tests."""
+    from repro.kernels.adama_accum import fp8_encode_rows
+    slab = pack_bucket(grads, layout, b, dtype=jnp.float32)
+    return fp8_encode_rows(slab, n_summands)
+
+
 def gather_owned_rows(x: jnp.ndarray, plan: BucketPlan, idx) -> jnp.ndarray:
     """Device `idx`'s owned rows of an arena-ordered (rows, LANES) array, in
     partition order: the concatenation of its slice of every bucket. `idx`

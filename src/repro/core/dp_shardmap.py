@@ -60,6 +60,23 @@ backend-defined (a ring implementation may round intermediate partial
 sums to bf16 at every hop, so the deviation can grow with the DP size;
 the declared per-codec tolerances are validated at M=4).
 
+fp8 wire (OptimizerConfig.grad_dtype="fp8_e4m3", bucketed ZeRO-1 +
+master_params only): each bucket packs fp32, injects this device's
+error-feedback residual into its OWNED rows (state["ef"], row-sharded like
+the master region, stored in UNSCALED units), pmax-agrees the per-row
+maxima so all M summands quantize under ONE shared scale column (with M
+summation headroom inside e4m3's finite range), and the reduce-scatter
+moves 1-byte codes — 4x fewer gradient-collective bytes than fp32. The
+slice-fold kernels decode in-pass via the `grad_scale` column; the
+residual update is predicated on the SAME agreed flag as the fold, so a
+skipped micro-batch leaves it bitwise on every shard. The param
+all-gather is quantized the same way (encode the emitted working rows,
+gather codes + scales, decode on arrival) — total wire bytes land at
+~0.26x fp32 for N=4, M=4 (the step-bench ≤0.3x gate). The fp32 master is
+the stored truth, so neither quantization ever compounds across steps;
+cross-device quantization error on the gradient wire (the part of the
+residual only peers could see) is dropped by construction.
+
 Master params (OptimizerConfig.master_params): under ZeRO-1 the state
 carries a third row-indexed fp32 region "p" — each device persistently owns
 its master rows (partition order under the bucketed schedule), the fused
@@ -125,7 +142,35 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
     zero1 = opt.zero_stage == 1
     guarded = opt.finite_guard           # config enforces arena=True
     from repro.configs.base import grad_wire_dtype
+    from repro.core.accumulation import is_fp8_wire, use_error_feedback
     wire = grad_wire_dtype(opt.grad_dtype)
+    fp8 = is_fp8_wire(opt)
+    use_ef = use_error_feedback(opt)
+    if opt.work_param_cache:
+        raise ValueError(
+            "work_param_cache=True is a pjit-engine knob: the shard_map DP "
+            "engine's master path already sources params from the owned "
+            "arena rows (never re-packing the tree), so there is no "
+            "pack/unpack pair to skip — drop work_param_cache or use the "
+            "pjit engine")
+    if fp8 and not (zero1 and use_arena and
+                    (opt.zero_bucketed or variant == "adama_layerwise")):
+        raise ValueError(
+            "grad_dtype='fp8_e4m3' in the shard_map DP engine requires the "
+            "bucketed ZeRO-1 schedule (zero_stage=1, arena=True, "
+            "zero_bucketed=True or variant='adama_layerwise'): fp8 codes "
+            "ride the per-bucket gradient reduce-scatters under one "
+            "pmax-agreed scale column; the replicated schedule psums STATES "
+            "(nothing to quantize) and the full-pack scatter has no "
+            "per-bucket scale plumbing")
+    if fp8 and not opt.master_params:
+        raise ValueError(
+            "grad_dtype='fp8_e4m3' in the shard_map DP engine requires "
+            "master_params=True: the ≤0.3x wire-byte budget only closes "
+            "when the param all-gather is quantized too (fp8 grads alone "
+            "leave the fp32 gather dominating at ~0.44x), and a quantized "
+            "gather needs the fp32 truth resident in the master region so "
+            "the wire rounding never compounds across steps")
     if guarded and variant not in ("adama", "adama_layerwise"):
         raise ValueError(
             f"finite_guard=True in the shard_map DP engine is defined for "
@@ -272,29 +317,62 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                     # is about the owned state size), check the received
                     # slices, and agree ONCE per micro-batch — folding
                     # before the verdict would commit early buckets of a
-                    # micro-batch whose later bucket turns out bad
+                    # micro-batch whose later bucket turns out bad.
+                    # fp8 wire: pack fp32, inject the owned-row residual,
+                    # pmax-agree one scale column per bucket (M summation
+                    # headroom), scatter 1-byte codes; the buffered
+                    # residual pieces (inj, mine) are pre-sliced to the
+                    # owned rows so the live set stays O(owned)
+                    from repro.core.layerwise import (_fp8_ef_update,
+                                                      _fp8_wire_slab)
+                    ef_d = st["ef"].data if use_ef else None
+                    ef_scale = sc["scale"] if fp8 else None
                     slabs = []
                     okl = jnp.asarray(True)
                     for bk in plan.grad_buckets():
-                        slab = buckets_mod.pack_bucket(g, lay, bk,
-                                                       dtype=wire)
-                        own = lax.psum_scatter(slab, dp_axes,
-                                               scatter_dimension=0,
-                                               tiled=True)
+                        if fp8:
+                            slab = buckets_mod.pack_bucket(
+                                g, lay, bk, dtype=jnp.float32)
+                            row0 = dev * bk.slice_rows
+                            codes, s_own, slab = _fp8_wire_slab(
+                                slab, dp_axes, ef_d, ef_scale,
+                                bk.own_offset, bk.slice_rows, row0)
+                            own = lax.psum_scatter(codes, dp_axes,
+                                                   scatter_dimension=0,
+                                                   tiled=True)
+                            inj = lax.dynamic_slice_in_dim(
+                                slab, row0, bk.slice_rows, 0)
+                            mine = lax.dynamic_slice_in_dim(
+                                codes, row0, bk.slice_rows, 0)
+                            slabs.append((own, s_own, inj, mine))
+                        else:
+                            slab = buckets_mod.pack_bucket(g, lay, bk,
+                                                           dtype=wire)
+                            own = lax.psum_scatter(slab, dp_axes,
+                                                   scatter_dimension=0,
+                                                   tiled=True)
+                            slabs.append((own, None, None, None))
                         okl = jnp.logical_and(okl,
                                               jnp.isfinite(own).all())
-                        slabs.append(own)
                     ok = lax.psum(1.0 - okl.astype(jnp.float32),
                                   dp_axes) == 0
                     ok = fault_mod.apply_skip(fault, ok, micro=i,
                                               step=st["step"])
                     st = state_store.begin_micro_state(st, rdecay,
                                                        guard=ok)
-                    for bk, own in zip(plan.grad_buckets(), slabs):
+                    for bk, (own, s_own, inj, mine) in zip(
+                            plan.grad_buckets(), slabs):
                         st, _ = state_store.fold_slice_state(
                             st, own, bk.own_offset, beta1=b1, beta2=b2,
                             block=bk.fold_block, scale=kscale,
-                            decay=decay, grad_dtype=wire, guard=ok)
+                            decay=decay, grad_dtype=wire,
+                            grad_scale=s_own, guard=ok)
+                        if use_ef:
+                            ef_d = _fp8_ef_update(
+                                ef_d, ok, inj, mine, s_own, ef_scale,
+                                bk.own_offset, bk.slice_rows, 0, None)
+                    if use_ef:
+                        st = dict(st, ef=st["ef"].with_data(ef_d))
                     return l, st, ok
 
                 def body(carry, xs):
@@ -379,7 +457,21 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                          if plan is None else
                          buckets_mod.gather_owned_rows(p_arena, plan, idx))
                 p_own = state_store.apply_state(p_own, state, **kw)
-            p_full = lax.all_gather(p_own, dp_axes, axis=0, tiled=True)
+            if fp8:
+                # quantized param all-gather: encode the owned working
+                # rows (no summation — headroom 1), move 1-byte codes plus
+                # the (rows, 1) fp32 scale column, decode on arrival. The
+                # fp32 master rows stay resident, so this rounding is
+                # re-derived fresh each step and never compounds
+                from repro.kernels.adama_accum import (fp8_decode_rows,
+                                                       fp8_encode_rows)
+                codes, s_col = fp8_encode_rows(p_own.astype(jnp.float32))
+                p_full = fp8_decode_rows(
+                    lax.all_gather(codes, dp_axes, axis=0, tiled=True),
+                    lax.all_gather(s_col, dp_axes, axis=0, tiled=True),
+                ).astype(p_own.dtype)
+            else:
+                p_full = lax.all_gather(p_own, dp_axes, axis=0, tiled=True)
             if plan is not None:        # partition order -> arena order
                 p_full = buckets_mod.unpermute_rows(p_full, plan)
             params = arena_mod.unpack(p_full, lay)
@@ -497,14 +589,15 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
     def _zero1_ospec(opt_state):
         """ZeRO-1: every ROW-INDEXED state column (per the codec's declared
         column list) is sharded over the dp axes; the fp32 master-param
-        region "p" (when present) is row-indexed and shards with them;
+        region "p" and the fp8 error-feedback residual "ef" (when present)
+        are row-indexed and shard with them;
         replicated codec columns (rowcol's (1, LANES) column sums) and the
         scalar step ride alongside replicated."""
         mask = state_store.row_indexed_mask(opt_state)
         row = P(dp_axes, None)
         return {k: (jax.tree.map(lambda ri: row if ri else rep,
                                  mask[k]) if k in ("m", "v") else
-                    row if k == "p" else rep)
+                    row if k in ("p", "ef") else rep)
                 for k in opt_state}
 
     def step(params, opt_state, batch):
@@ -520,10 +613,13 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
         if variant == "ga":
             return adam.init(params)
         if use_arena:
+            # the "ef" residual starts at zeros — permutation-invariant, so
+            # unlike the master it needs no bucket-order pre-permute
             st = adama.init_arena(params, codec=opt.state_codec,
                                   m_codec=opt.m_codec,
                                   n_shards=m_dev if zero1 else 1,
-                                  master_params=opt.master_params)
+                                  master_params=opt.master_params,
+                                  error_feedback=use_ef)
             if opt.master_params and zero1 and \
                     (opt.zero_bucketed or variant == "adama_layerwise"):
                 # the bucketed schedule's resident row order is the

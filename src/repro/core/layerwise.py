@@ -92,6 +92,72 @@ def _agree(ok, zero):
     return lax.psum(1.0 - ok.astype(jnp.float32), zero.axis_names) == 0
 
 
+def _is_fp8(grad_dtype) -> bool:
+    return jnp.dtype(grad_dtype) == jnp.dtype(jnp.float8_e4m3fn)
+
+
+def _lin_index(axis_names):
+    """Linear device index over the DP axes, matching the tiled block
+    order of psum_scatter/all_gather (same nesting as dp_shardmap)."""
+    d = jnp.int32(0)
+    for a in axis_names:
+        d = d * lax.psum(1, a) + lax.axis_index(a)
+    return d
+
+
+def _fp8_wire_slab(slab, axis_names, ef_c, ef_scale, own_offset, own_rows,
+                   row0):
+    """Shared fp8-wire front half for a packed gradient slab (used by this
+    engine AND core/dp_shardmap.py's bucketed schedule): inject this
+    device's error-feedback residual into its OWNED rows (`row0` within the
+    slab; `own_offset` within the residual/owned block), pmax-agree the
+    per-row maxima so every summand of the coming reduce-scatter quantizes
+    under ONE shared scale column (with a device-count of headroom so the
+    sum of codes stays inside e4m3's finite range), and encode. Returns
+    (codes, own-rows scale column, injected slab). axis_names=None is the
+    pjit/single-device path: whole-slab residual, headroom 1, and the
+    codes ARE the received slab."""
+    from repro.kernels.adama_accum import fp8_quantize_rows, fp8_scale_rows
+    if axis_names is None:
+        if ef_c is not None:
+            ef_rows = lax.dynamic_slice_in_dim(ef_c, own_offset, own_rows, 0)
+            slab = slab + ef_rows * ef_scale
+        rowmax = jnp.max(jnp.abs(slab), axis=-1, keepdims=True)
+        s_col = fp8_scale_rows(rowmax)
+        return fp8_quantize_rows(slab, s_col), s_col, slab
+    if ef_c is not None:
+        ef_rows = lax.dynamic_slice_in_dim(ef_c, own_offset, own_rows, 0)
+        mine = lax.dynamic_slice_in_dim(slab, row0, own_rows, 0)
+        slab = lax.dynamic_update_slice_in_dim(
+            slab, mine + ef_rows * ef_scale, row0, 0)
+    rowmax = lax.pmax(jnp.max(jnp.abs(slab), axis=-1, keepdims=True),
+                      axis_names)
+    s_col = fp8_scale_rows(rowmax, lax.psum(1, axis_names))
+    codes = fp8_quantize_rows(slab, s_col)
+    s_own = lax.dynamic_slice_in_dim(s_col, row0, own_rows, 0)
+    return codes, s_own, slab
+
+
+def _fp8_ef_update(ef_c, ok, slab, codes, s_own, ef_scale, own_offset,
+                   own_rows, row0, axis_names):
+    """Back half of the fp8 wire: fold the quantization error THIS device
+    left on its owned rows back into the residual, in unscaled units
+    (divide the loss scale out), predicated on the same flag as the fold —
+    a skipped micro-batch leaves the residual bitwise. Under `axis_names`
+    the peers' quantization errors on those rows are dropped (each device
+    only knows its own contribution); the pjit path keeps the textbook
+    residual."""
+    from repro.kernels.adama_accum import fp8_decode_rows
+    if axis_names is None:
+        inj, mine = slab, codes
+    else:
+        inj = lax.dynamic_slice_in_dim(slab, row0, own_rows, 0)
+        mine = lax.dynamic_slice_in_dim(codes, row0, own_rows, 0)
+    ef_new = (inj - fp8_decode_rows(mine, s_own)) / ef_scale
+    return jnp.where(ok, lax.dynamic_update_slice_in_dim(
+        ef_c, ef_new, own_offset, 0), ef_c)
+
+
 def _pre_guard(guard, dx, d_rest_post, zero):
     """The pre-backward guard flag: the external verdict (True = none)
     ANDed with finiteness of the head/final-norm gradients and the backward
@@ -121,7 +187,12 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     the shard-local columns, in partition order. `grad_dtype` (arena mode)
     is the gradient WIRE dtype: each layer's slab is packed — and
     reduce-scattered, under `zero` — as bf16, halving the live slab and the
-    collective payload; the slice-fold kernel upcasts in-pass.
+    collective payload; the slice-fold kernel upcasts in-pass. With
+    float8_e4m3fn each slab is instead ENCODED (fp8 codes + a pmax-agreed
+    per-row scale column, 0.25x the fp32 payload) and decoded inside the
+    fold kernel; when the state carries the error-feedback residual "ef",
+    the owned rows' residual is injected pre-quantization and updated
+    per slab, riding the backward scan's carry. fp8 requires `guard`.
 
     Loss scaling (train/scaler.py): the engine seeds the backward with
     `scale * S` (a traced `scale` is fine) so every wire slab carries
@@ -224,6 +295,15 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     # outside the slice pass through aliased, so there is no re-write).
     arena_st = is_arena_state(state)
     guarded = guard is not None
+    fp8 = _is_fp8(grad_dtype)
+    assert not fp8 or (guarded and arena_st), \
+        "fp8 wire requires finite guards over arena state " \
+        "(OptimizerConfig enforces finite_guard for grad_dtype='fp8_e4m3')"
+    use_ef = fp8 and "ef" in state
+    # residual stored UNSCALED; slabs carry the loss scale S (the VJP seed),
+    # so injection multiplies by S = 1/fold_scale and the update divides it
+    ef_scale = 1.0 / fold_scale if fp8 else None
+    ef_acc = state["ef"].data if use_ef else None
     ok = _pre_guard(guard, dx, d_rest_post, zero)
     if arena_st:
         from repro.core import state_store
@@ -253,7 +333,10 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
         spec = lay.stack(name) if arena_st else None
 
         def bwd(carry, xs, knd=knd, spec=spec):
-            if guarded:
+            ef_cc = None
+            if use_ef:
+                dx_c, m_c, v_c, ef_cc, ok_c = carry
+            elif guarded:
                 dx_c, m_c, v_c, ok_c = carry
             else:
                 (dx_c, m_c, v_c), ok_c = carry, None
@@ -265,18 +348,26 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
             dlp, dxin = vjp((dx_c, scale))               # aux cotangent=scale
             out = _fold_layer(m_c, v_c, dlp, j, spec, lay if arena_st
                               else None, beta1, beta2, use_pallas, decay,
-                              codec, zero, grad_dtype, fold_scale, ok_c)
+                              codec, zero, grad_dtype, fold_scale, ok_c,
+                              ef_cc, ef_scale)
+            if use_ef:
+                m_c, v_c, ef_cc, ok_c = out
+                return (dxin, m_c, v_c, ef_cc, ok_c), None
             if guarded:
                 m_c, v_c, ok_c = out
                 return (dxin, m_c, v_c, ok_c), None
             m_c, v_c = out
             return (dxin, m_c, v_c), None
 
-        carry0 = ((dx, m_acc, v_acc, ok) if guarded else
+        carry0 = ((dx, m_acc, v_acc, ef_acc, ok) if use_ef else
+                  (dx, m_acc, v_acc, ok) if guarded else
                   (dx, m_acc, v_acc) if arena_st else
                   (dx, state["m"][name], state["v"][name]))
         xs = (jnp.arange(n_layers), params[name], saved_inputs[name])
-        if guarded:
+        if use_ef:
+            (dx, m_new, v_new, ef_acc, ok), _ = lax.scan(bwd, carry0, xs,
+                                                         reverse=True)
+        elif guarded:
             (dx, m_new, v_new, ok), _ = lax.scan(bwd, carry0, xs,
                                                  reverse=True)
         else:
@@ -290,9 +381,13 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
     d_rest = jax.tree.map(lambda a, b_: a + b_, d_rest_post, d_rest_pre)
     if arena_st:
         out = _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2,
-                         decay, codec, zero, grad_dtype, fold_scale, ok)
+                         decay, codec, zero, grad_dtype, fold_scale, ok,
+                         ef_c=ef_acc, ef_scale=ef_scale)
         m_acc, v_acc = out[0], out[1]
         new_state = dict(state, m=mc.wrap(lay, m_acc), v=vc.wrap(lay, v_acc))
+        if use_ef:
+            new_state = dict(new_state, ef=state["ef"].with_data(out[2]))
+            return loss, new_state, out[3]
         if guarded:
             return loss, new_state, out[2]
         return loss, new_state
@@ -304,7 +399,7 @@ def layerwise_loss_and_fold(cfg: ModelConfig, params, batch, state, *,
 
 def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
                 codec=None, zero=None, grad_dtype=jnp.float32,
-                fold_scale=1.0, guard_ok=None):
+                fold_scale=1.0, guard_ok=None, ef_c=None, ef_scale=None):
     """Fold one layer's gradient tree. Tree mode: per-leaf fold into row j of
     the (m, v) stacks. Arena mode: pack dlp into one slab and fold it into
     the layer's arena row slice with a single offset-indexed kernel fusing
@@ -317,7 +412,45 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
     reader after the collective, so its buffer dies inside the iteration.
     `guard_ok` (traced bool): the carried finite verdict; this slab is
     re-checked where it lands (post-reduce-scatter, agreed under `zero`),
-    the fold is guard-predicated, and the return gains the updated flag."""
+    the fold is guard-predicated, and the return gains the updated flag.
+
+    fp8 wire (grad_dtype=float8_e4m3fn; requires guard_ok): the slab packs
+    fp32, the owned rows gain the error-feedback residual (`ef_c`, scaled
+    back up by `ef_scale` = the loss scale), the CODES reduce-scatter under
+    a pmax-agreed per-row scale column, and the fold decodes in-kernel
+    (`grad_scale`). With `ef_c` the return becomes (m, v, ef, ok)."""
+    if lay is not None and _is_fp8(grad_dtype):
+        from repro.core import state_store
+        assert guard_ok is not None, \
+            "fp8 wire requires finite guards (e4m3 has no inf; NaN codes " \
+            "are the only overflow signal)"
+        g2 = arena_mod.pack_layer(dlp, spec, dtype=jnp.float32)
+        if zero is not None:
+            base, lslice, block = zero.plan.stack_slice(spec.name)
+            off = base + j * lslice
+            row0 = _lin_index(zero.axis_names) * lslice
+            rows = lslice
+        else:
+            off = spec.row + j * spec.layer_rows
+            block = lay.slice_block(spec)
+            row0, rows = off, spec.layer_rows
+        names = zero.axis_names if zero is not None else None
+        codes, s_own, g2 = _fp8_wire_slab(g2, names, ef_c, ef_scale, off,
+                                          rows, row0)
+        own = (lax.psum_scatter(codes, zero.axis_names,
+                                scatter_dimension=0, tiled=True)
+               if zero is not None else codes)
+        ok = jnp.logical_and(guard_ok,
+                             _agree(jnp.isfinite(own).all(), zero))
+        m2, v2, _ = state_store.fold_slice(
+            codec[0], codec[1], m_c, v_c, own, off, beta1=beta1,
+            beta2=beta2, block=block, scale=fold_scale, decay=decay,
+            grad_dtype=grad_dtype, grad_scale=s_own, guard=ok)
+        if ef_c is None:
+            return m2, v2, ok
+        ef_c = _fp8_ef_update(ef_c, ok, g2, codes, s_own, ef_scale, off,
+                              rows, row0, names)
+        return m2, v2, ef_c, ok
     if lay is not None:
         from repro.core import state_store
         g2 = arena_mod.pack_layer(dlp, spec, dtype=grad_dtype)
@@ -354,19 +487,66 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
 
 def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
                zero=None, grad_dtype=jnp.float32, fold_scale=1.0,
-               guard_ok=None):
+               guard_ok=None, ef_c=None, ef_scale=None):
     """Arena mode: fold ALL non-stacked leaves' gradients with one
     codec-aware kernel over the contiguous rest region. With `zero` the
     region streams one size-capped bucket at a time: pack the bucket's rows
     only, reduce-scatter, fold the received slice into the owned block —
     the region's packed gradient is never live all at once. `guard_ok`
     (traced bool): each slab re-checked where it folds, verdict carried
-    monotonically, return gains the final flag."""
+    monotonically, return gains the final flag. fp8 wire: each slab runs
+    the encode + scale-agreement front half (_fp8_wire_slab) so the
+    reduce-scatter moves codes; with `ef_c` the residual updates per slab
+    and the return becomes (m, v, ef, ok)."""
+    fp8 = _is_fp8(grad_dtype)
+    tail = ((ef_c, guard_ok) if ef_c is not None else
+            (guard_ok,) if guard_ok is not None else ())
     if not lay.rest.rows:
-        return (m_acc, v_acc, guard_ok) if guard_ok is not None \
-            else (m_acc, v_acc)
+        return (m_acc, v_acc) + tail
     from repro.core import state_store
     ok = guard_ok
+    if fp8:
+        assert ok is not None, "fp8 wire requires finite guards"
+        if zero is not None:
+            for b in zero.plan.grad_buckets():
+                if b.kind != "rest":
+                    continue
+                slab = arena_mod.pack_rest_rows(d_rest, lay, b.start,
+                                                b.stop, dtype=jnp.float32)
+                row0 = _lin_index(zero.axis_names) * b.slice_rows
+                codes, s_own, slab = _fp8_wire_slab(
+                    slab, zero.axis_names, ef_c, ef_scale, b.own_offset,
+                    b.slice_rows, row0)
+                own = lax.psum_scatter(codes, zero.axis_names,
+                                       scatter_dimension=0, tiled=True)
+                ok = jnp.logical_and(ok,
+                                     _agree(jnp.isfinite(own).all(), zero))
+                m_acc, v_acc, _ = state_store.fold_slice(
+                    codec[0], codec[1], m_acc, v_acc, own, b.own_offset,
+                    beta1=beta1, beta2=beta2, block=b.fold_block,
+                    scale=fold_scale, decay=decay, grad_dtype=grad_dtype,
+                    grad_scale=s_own, guard=ok)
+                if ef_c is not None:
+                    ef_c = _fp8_ef_update(ef_c, ok, slab, codes, s_own,
+                                          ef_scale, b.own_offset,
+                                          b.slice_rows, row0,
+                                          zero.axis_names)
+        else:
+            g2 = arena_mod.pack_rest(d_rest, lay, dtype=jnp.float32)
+            off, rows = lay.rest.row, lay.rest.rows
+            codes, s_col, g2 = _fp8_wire_slab(g2, None, ef_c, ef_scale,
+                                              off, rows, off)
+            ok = jnp.logical_and(ok, jnp.isfinite(codes).all())
+            m_acc, v_acc, _ = state_store.fold_slice(
+                codec[0], codec[1], m_acc, v_acc, codes, off, beta1=beta1,
+                beta2=beta2, block=lay.slice_block(lay.rest),
+                scale=fold_scale, decay=decay, grad_dtype=grad_dtype,
+                grad_scale=s_col, guard=ok)
+            if ef_c is not None:
+                ef_c = _fp8_ef_update(ef_c, ok, g2, codes, s_col, ef_scale,
+                                      off, rows, off, None)
+        return ((m_acc, v_acc, ef_c, ok) if ef_c is not None
+                else (m_acc, v_acc, ok))
     if zero is not None:
         for b in zero.plan.grad_buckets():
             if b.kind != "rest":
@@ -463,6 +643,12 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
 
     arena_st = is_arena_state(state)
     guarded = guard is not None
+    fp8 = _is_fp8(grad_dtype)
+    assert not fp8 or (guarded and arena_st), \
+        "fp8 wire requires finite guards over arena state"
+    use_ef = fp8 and "ef" in state
+    ef_scale = 1.0 / fold_scale if fp8 else None
+    ef0 = state["ef"].data if use_ef else None
     ok = _pre_guard(guard, dx, d_rest_post, zero)
     if arena_st:
         from repro.core import state_store
@@ -483,9 +669,12 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         new_v = dict(state["v"])
         m0, v0 = state["m"]["blocks"], state["v"]["blocks"]
 
-    # decoder backward: carry (dx, d_enc_out accumulator, m, v[, ok])
+    # decoder backward: carry (dx, d_enc_out accumulator, m, v[, ef][, ok])
     def dbwd(carry, xs):
-        if guarded:
+        ef_cc = None
+        if use_ef:
+            dx_c, denc, m_c, v_c, ef_cc, ok_c = carry
+        elif guarded:
             dx_c, denc, m_c, v_c, ok_c = carry
         else:
             (dx_c, denc, m_c, v_c), ok_c = carry, None
@@ -494,7 +683,10 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         dlp, dxin, denc_j = vjp((dx_c, scale))
         out = _fold_layer(m_c, v_c, dlp, j, dec_spec, lay, beta1, beta2,
                           use_pallas, decay, codec, zero, grad_dtype,
-                          fold_scale, ok_c)
+                          fold_scale, ok_c, ef_cc, ef_scale)
+        if use_ef:
+            m_c, v_c, ef_cc, ok_c = out
+            return (dxin, denc + denc_j, m_c, v_c, ef_cc, ok_c), None
         if guarded:
             m_c, v_c, ok_c = out
             return (dxin, denc + denc_j, m_c, v_c, ok_c), None
@@ -504,7 +696,10 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
     denc0 = jnp.zeros_like(enc_out)
     nl = jax.tree.leaves(params["blocks"])[0].shape[0]
     dxs = (jnp.arange(nl), params["blocks"], dec_saved)
-    if guarded:
+    if use_ef:
+        (dx, denc, m_new, v_new, ef0, ok), _ = lax.scan(
+            dbwd, (dx, denc0, m0, v0, ef0, ok), dxs, reverse=True)
+    elif guarded:
         (dx, denc, m_new, v_new, ok), _ = lax.scan(
             dbwd, (dx, denc0, m0, v0, ok), dxs, reverse=True)
     else:
@@ -520,7 +715,10 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
 
     # encoder backward
     def ebwd(carry, xs):
-        if guarded:
+        ef_cc = None
+        if use_ef:
+            dx_c, m_c, v_c, ef_cc, ok_c = carry
+        elif guarded:
             dx_c, m_c, v_c, ok_c = carry
         else:
             (dx_c, m_c, v_c), ok_c = carry, None
@@ -531,7 +729,10 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
         dlp, dxin = vjp((dx_c, scale))
         out = _fold_layer(m_c, v_c, dlp, j, enc_spec, lay, beta1, beta2,
                           use_pallas, decay, codec, zero, grad_dtype,
-                          fold_scale, ok_c)
+                          fold_scale, ok_c, ef_cc, ef_scale)
+        if use_ef:
+            m_c, v_c, ef_cc, ok_c = out
+            return (dxin, m_c, v_c, ef_cc, ok_c), None
         if guarded:
             m_c, v_c, ok_c = out
             return (dxin, m_c, v_c, ok_c), None
@@ -540,7 +741,10 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
 
     ne = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
     exs = (jnp.arange(ne), params["enc_blocks"], enc_saved)
-    if guarded:
+    if use_ef:
+        (_, m_new, v_new, ef0, ok), _ = lax.scan(
+            ebwd, (d_eN, m0, v0, ef0, ok), exs, reverse=True)
+    elif guarded:
         (_, m_new, v_new, ok), _ = lax.scan(
             ebwd, (d_eN, m0, v0, ok), exs, reverse=True)
     else:
@@ -552,9 +756,13 @@ def _layerwise_audio(cfg, params, batch, state, *, beta1, beta2, scale,
                           d_rest_post, d_rest_encn, d_rest_pre)
     if arena_st:
         out = _fold_rest(m_new, v_new, d_rest, lay, beta1, beta2,
-                         decay, codec, zero, grad_dtype, fold_scale, ok)
+                         decay, codec, zero, grad_dtype, fold_scale, ok,
+                         ef_c=ef0, ef_scale=ef_scale)
         m_new, v_new = out[0], out[1]
         new_state = dict(state, m=mc.wrap(lay, m_new), v=vc.wrap(lay, v_new))
+        if use_ef:
+            new_state = dict(new_state, ef=state["ef"].with_data(out[2]))
+            return ce, new_state, out[3]
         if guarded:
             return ce, new_state, out[2]
         return ce, new_state

@@ -128,6 +128,16 @@ class Conformance:
     row_local: bool
     # adama vs adama_layerwise engine parity on the same codec pair
     engine_tol: float
+    # elementwise |p(fp8+EF wire) - p(fp32 wire)| after one mini-batch, in
+    # units of lr, same codec pair both sides: the drift the fp8 (e4m3)
+    # gradient wire WITH its error-feedback residual may add. e4m3's
+    # mantissa step is 2^-4 of the row max (16x coarser than bf16), but the
+    # residual state["ef"] re-injects each fold's quantization error into
+    # the next micro-batch's pre-quantization gradient, so the declared
+    # bound is well under the naive 16x-of-bf16 scaling. Defaulted (last
+    # field) so pre-fp8 Conformance call sites stay source-compatible;
+    # every registered codec declares it explicitly.
+    fp8_wire_lr: float = 4.0
 
 
 class MomentCodec:
@@ -187,7 +197,7 @@ class Fp32Codec(MomentCodec):
     name = "fp32"
     conformance = Conformance(drift_lr=0.0, never_amplify=True,
                               row_local=True, engine_tol=5e-6,
-                              bf16_wire_lr=0.25)
+                              bf16_wire_lr=0.25, fp8_wire_lr=2.0)
 
     def __init__(self, moment: str):
         self.moment = moment
@@ -213,7 +223,7 @@ class Int8Codec(MomentCodec):
     name = "int8"
     conformance = Conformance(drift_lr=2.0, never_amplify=True,
                               row_local=True, engine_tol=2e-3,
-                              bf16_wire_lr=2.0)
+                              bf16_wire_lr=2.0, fp8_wire_lr=4.0)
 
     def __init__(self, moment: str):
         self.moment = moment
@@ -240,7 +250,7 @@ class FactoredCodec(MomentCodec):
     name = "factored"
     conformance = Conformance(drift_lr=None, never_amplify=True,
                               row_local=True, engine_tol=5e-6,
-                              bf16_wire_lr=1.0)
+                              bf16_wire_lr=1.0, fp8_wire_lr=2.0)
 
     moment = "v"
 
@@ -269,7 +279,7 @@ class RowColCodec(MomentCodec):
     name = "rowcol"
     conformance = Conformance(drift_lr=None, never_amplify=False,
                               row_local=False, engine_tol=2e-3,
-                              bf16_wire_lr=1.0)
+                              bf16_wire_lr=1.0, fp8_wire_lr=2.0)
 
     moment = "v"
 
@@ -366,7 +376,8 @@ def _guarded_begin_micro(codec, parts, decay, flag):
 
 
 def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
-         decay=None, replicated_decay=None, grad_dtype=None, guard=None):
+         decay=None, replicated_decay=None, grad_dtype=None, grad_scale=None,
+         guard=None):
     """Whole-arena fold of one micro-batch's gradient arena into both
     moments: one fused pallas_call. `decay=(dm, dv)` fuses the
     begin-minibatch decay (row-indexed columns decay in-kernel; replicated
@@ -377,6 +388,9 @@ def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
     `grad_dtype` pins the caller's CONFIGURED wire against the slab it
     actually packed (a pack site that dropped the dtype fails loudly
     instead of silently widening the wire).
+
+    An fp8 wire slab additionally carries its per-row `grad_scale` column
+    (decode fused in-kernel; see kernels/fused_step).
 
     `guard` (True = self-check the slab, traced array = use verbatim)
     makes the whole fold — in-kernel writes AND the outside-the-kernel
@@ -394,12 +408,12 @@ def fold(m_codec, v_codec, m_parts, v_parts, g, *, beta1, beta2, scale=1.0,
                                  beta1=beta1, beta2=beta2, scale=scale,
                                  decay=decay, m_codec=mc.kernel,
                                  v_codec=vc.kernel, grad_dtype=grad_dtype,
-                                 guard=flag)
+                                 grad_scale=grad_scale, guard=flag)
 
 
 def fold_slice(m_codec, v_codec, m_parts, v_parts, g, row_offset, *,
                beta1, beta2, block, scale=1.0, decay=None, grad_dtype=None,
-               guard=None):
+               grad_scale=None, guard=None):
     """Fold a gradient slab into rows [row_offset, row_offset+rows_g).
     Unlike `fold`, replicated columns are NOT decayed here — a micro-batch
     is many slice folds, so the engine decays them once per micro-batch via
@@ -414,6 +428,7 @@ def fold_slice(m_codec, v_codec, m_parts, v_parts, g, row_offset, *,
                                        block=block, scale=scale, decay=decay,
                                        m_codec=mc.kernel, v_codec=vc.kernel,
                                        grad_dtype=grad_dtype,
+                                       grad_scale=grad_scale,
                                        guard=_resolve_guard(guard, g))
 
 
@@ -451,7 +466,8 @@ def has_master(state) -> bool:
 
 
 def fold_state(state, g, *, beta1, beta2, scale=1.0, decay=None,
-               replicated_decay=None, grad_dtype=None, guard=None):
+               replicated_decay=None, grad_dtype=None, grad_scale=None,
+               guard=None):
     """One fused fold of a packed gradient arena into the state dict.
     With `guard` the return is (new_state, flag) — see `fold`."""
     mc, vc = state_codecs(state)
@@ -460,7 +476,7 @@ def fold_state(state, g, *, beta1, beta2, scale=1.0, decay=None,
                vc.parts_of(state["v"]), g, beta1=beta1,
                beta2=beta2, scale=scale, decay=decay,
                replicated_decay=replicated_decay,
-               grad_dtype=grad_dtype, guard=guard)
+               grad_dtype=grad_dtype, grad_scale=grad_scale, guard=guard)
     m_parts, v_parts = out[0], out[1]
     new = dict(state, m=mc.wrap(layout, m_parts),
                v=vc.wrap(layout, v_parts))
@@ -487,7 +503,8 @@ def begin_micro_state(state, decay, guard=None):
 
 
 def fold_slice_state(state, g, row_offset, *, beta1, beta2, block, scale=1.0,
-                     decay=None, grad_dtype=None, guard=None):
+                     decay=None, grad_dtype=None, grad_scale=None,
+                     guard=None):
     """One fused slice fold of a gradient slab into rows
     [row_offset, row_offset + g.shape[0]) of the state dict. Replicated
     codec columns are NOT decayed here (see fold_slice) — pair with
@@ -498,8 +515,8 @@ def fold_slice_state(state, g, row_offset, *, beta1, beta2, block, scale=1.0,
     out = fold_slice(mc, vc, mc.parts_of(state["m"]),
                      vc.parts_of(state["v"]), g, row_offset,
                      beta1=beta1, beta2=beta2, block=block,
-                     scale=scale, decay=decay,
-                     grad_dtype=grad_dtype, guard=guard)
+                     scale=scale, decay=decay, grad_dtype=grad_dtype,
+                     grad_scale=grad_scale, guard=guard)
     m_parts, v_parts = out[0], out[1]
     new = dict(state, m=mc.wrap(layout, m_parts),
                v=vc.wrap(layout, v_parts))

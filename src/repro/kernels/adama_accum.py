@@ -85,6 +85,65 @@ def q8s_decode_rows(q, s):
     return q.astype(jnp.float32) * s
 
 
+# fp8 (e4m3) gradient WIRE codec: per-row symmetric scaling of a packed
+# gradient slab into float8_e4m3fn codes plus a (rows, 1) fp32 scale column
+# — the int8 scale-row machinery generalized to the wire. Unlike the int8
+# STATE codecs the codes here are summed by a reduce-scatter, so the scale
+# must be shared by every participant (core/dp_shardmap.py pmax-agrees it)
+# and carry `n_summands` of headroom so the sum of codes stays inside the
+# e4m3 range. Pure jnp: the same math quantizes on the host and decodes
+# inside the fused fold kernels (kernels/fused_step.py `grad_scale`).
+FP8_MAX = 448.0       # largest finite float8_e4m3fn value
+
+
+def fp8_encode_rows(g, n_summands: int = 1):
+    """(R, LANES) fp32 -> ((R, LANES) float8_e4m3fn, (R, 1) fp32 scales).
+
+    scale = rowmax(|g|) * n_summands / FP8_MAX, so each code's magnitude is
+    at most FP8_MAX / n_summands and the SUM of `n_summands` such codes
+    (what a reduce-scatter produces) cannot overflow e4m3's finite range.
+    Round-to-nearest via the dtype cast; relative error per element is the
+    e4m3 mantissa step (2^-4) of the row maximum — the error-feedback
+    residual (state["ef"]) is what recovers it across micro-batches.
+
+    Non-finite inputs PROPAGATE as NaN codes (e4m3fn has no inf): a NaN
+    element stays NaN through the divide, and an inf element turns the row
+    scale inf, making its own code inf/inf = NaN — both are caught by the
+    finite guard on the receiving side, which fp8 therefore requires.
+
+    Zero rows take scale 1.0 (codes all zero); denormal-scale rows fall
+    back to scale = rowmax exactly like q8_encode_rows (XLA flushes
+    denormal results to zero, which would decode the row to zeros)."""
+    s = fp8_scale_rows(jnp.max(jnp.abs(g), axis=-1, keepdims=True),
+                       n_summands)
+    return fp8_quantize_rows(g, s), s
+
+
+def fp8_scale_rows(rowmax, n_summands: int = 1):
+    """(R, 1) per-row |g| maxima -> the (R, 1) fp32 scale column of
+    fp8_encode_rows. Split out so the shard_map engine can pmax-agree the
+    rowmax across devices FIRST (every summand of a reduce-scatter must
+    quantize under the same scale) and then derive one shared scale.
+    Zero rows get scale 1.0; denormal-scale rows fall back to rowmax; a
+    NaN rowmax yields scale 1.0 (NaN compares false) so the NaN codes
+    themselves carry the signal to the finite guard."""
+    s = rowmax * (n_summands / FP8_MAX)
+    s = jnp.where((s == 0.0) & (rowmax > 0.0), rowmax, s)
+    return jnp.where(s > 0.0, s, 1.0)
+
+
+def fp8_quantize_rows(g, s):
+    """Quantize a slab under an ALREADY-GUARDED scale column from
+    fp8_scale_rows (round-to-nearest via the dtype cast)."""
+    return (g / s).astype(jnp.float8_e4m3fn)
+
+
+def fp8_decode_rows(q, s):
+    """Inverse of fp8_encode_rows (exact for the stored codes): codes (any
+    count of summed contributions) times the shared per-row scale."""
+    return q.astype(jnp.float32) * s
+
+
 def rowcol_decode(vr, vc):
     """Rank-1 reconstruction of the arena second moment from its marginal
     sums (Adafactor, Shazeer & Stern 2018): vr[i] = sum_j v[i, j] (row-

@@ -153,6 +153,11 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
                 info["grad_peak_budget_bytes"] = \
                     plan.grad_peak_bytes(wire_bytes)
                 info["n_grad_buckets"] = len(plan.grad_buckets())
+                if opt.grad_dtype == "fp8_e4m3":
+                    # per-bucket (rows, 1) fp32 scale columns: the fp8
+                    # wire's metadata overhead per micro-batch
+                    info["scale_col_bytes"] = sum(
+                        bk.rows * 4 for bk in plan.grad_buckets())
             else:
                 info["zero_schedule"] = "full_pack"
                 info["grad_peak_budget_bytes"] = lay.rows * LANES * wire_bytes
@@ -181,6 +186,9 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
             info["grad_wire_dtype"] = opt.grad_dtype
             info["master_param_bytes"] = optimizer_state_bytes(
                 aopt.get("p", ()))
+            # fp8 wire surface: the error-feedback residual region's bytes
+            # (0 when the wire is not fp8 or the residual is ablated)
+            info["ef_bytes"] = optimizer_state_bytes(aopt.get("ef", ()))
             # resilience surface: whether the compiled step carries the
             # fused finite guards, the loss-scaling mode riding them, and
             # the checkpoint retention a real launch of this combo would
@@ -263,6 +271,9 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
             tag += "__fullpack"
         if k == "extra_opt" and v and v.get("grad_dtype", "fp32") != "fp32":
             tag += f"__wire-{v['grad_dtype']}"
+            if v["grad_dtype"] == "fp8_e4m3" and \
+                    not v.get("error_feedback", True):
+                tag += "__noef"
         if k == "extra_opt" and v and v.get("master_params"):
             tag += "__master"
         if k == "extra_opt" and v and v.get("finite_guard"):
@@ -402,7 +413,16 @@ def main():
                     help="gradient WIRE dtype of the arena fold pipeline: "
                          "bf16 halves the packed slab and every gradient "
                          "collective (fold kernels upcast in-kernel); "
+                         "fp8_e4m3 moves 1-byte codes + per-row scale "
+                         "columns with an error-feedback residual "
+                         "(requires --finite-guard; in the shard_map "
+                         "engine also bucketed ZeRO-1 + --master-params); "
                          "requires --arena")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="ablate the fp8 error-feedback residual "
+                         "(state['ef']) — the fig2 convergence-gap "
+                         "comparison; only meaningful with --grad-dtype "
+                         "fp8_e4m3")
     ap.add_argument("--master-params", action="store_true",
                     help="fp32 master params in the arena + bf16 working "
                          "params emitted by the fused apply (AMP contract); "
@@ -414,7 +434,7 @@ def main():
                     help="'off', 'dynamic', or a positive float — loss "
                          "scaling fused into the guarded fold kernels; "
                          "implies --finite-guard and --arena, requires "
-                         "--grad-dtype bf16")
+                         "--grad-dtype bf16 or fp8_e4m3")
     ap.add_argument("--keep-last-n", type=int, default=3,
                     help="checkpoint retention recorded in the artifact "
                          "(the dryrun itself saves nothing)")
@@ -431,7 +451,8 @@ def main():
                      "grad_dtype": args.grad_dtype,
                      "master_params": args.master_params,
                      "finite_guard": guard,
-                     "loss_scale": args.loss_scale}
+                     "loss_scale": args.loss_scale,
+                     "error_feedback": not args.no_error_feedback}
     if args.zero_full_pack or args.zero_bucket_rows:
         extra_opt = dict(extra_opt or {},
                          zero_bucketed=not args.zero_full_pack,

@@ -60,12 +60,25 @@ def main():
     ap.add_argument("--grad-dtype", default="fp32", choices=list(GRAD_DTYPES),
                     help="gradient WIRE dtype of the arena fold pipeline "
                          "(bf16 halves the packed gradient slab and every "
-                         "gradient collective; fold kernels upcast "
+                         "gradient collective; fp8_e4m3 packs 1-byte codes "
+                         "+ per-row scale columns and recovers accuracy "
+                         "with an error-feedback residual, requires "
+                         "--finite-guard; fold kernels decode/upcast "
                          "in-kernel); requires --arena, not 'ga'")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="ablate the fp8 error-feedback residual "
+                         "(state['ef']) — convergence degrades to raw fp8 "
+                         "rounding; only meaningful with --grad-dtype "
+                         "fp8_e4m3")
     ap.add_argument("--master-params", action="store_true",
                     help="fp32 master params packed in the arena; the fused "
                          "apply emits bf16 working params (AMP contract); "
                          "requires --arena")
+    ap.add_argument("--work-param-cache", action="store_true",
+                    help="bf16 working-param cache in the arena "
+                         "(state['wp']): pjit engines source step params "
+                         "from it, skipping the per-step pack/unpack pair; "
+                         "requires --master-params")
     ap.add_argument("--finite-guard", action="store_true",
                     help="fused non-finite guards: each micro-batch's packed "
                          "gradient is checked before the fold commits and a "
@@ -75,7 +88,7 @@ def main():
                     help="'off', 'dynamic', or a positive float: loss "
                          "scaling fused into the fold kernels' upcast; "
                          "implies --finite-guard, requires --grad-dtype "
-                         "bf16 and a non-'ga' accumulation")
+                         "bf16 or fp8_e4m3 and a non-'ga' accumulation")
     ap.add_argument("--scaler-abort-after", type=int, default=0,
                     help="abort after N CONSECUTIVE skipped micro-batches "
                          "(0 = never abort)")
@@ -107,7 +120,9 @@ def main():
             zero_bucketed=not args.zero_full_pack,
             zero_bucket_rows=args.zero_bucket_rows,
             grad_dtype=args.grad_dtype,
+            error_feedback=not args.no_error_feedback,
             master_params=args.master_params,
+            work_param_cache=args.work_param_cache,
             finite_guard=args.finite_guard or args.loss_scale != "off",
             loss_scale=args.loss_scale,
             scaler_abort_after=args.scaler_abort_after),

@@ -201,13 +201,19 @@ class Rules:
                 spec = P()
             # only ROW-INDEXED columns (per the codec's declared column
             # list) row-shard; replicated codec columns stay P(). The fp32
-            # master-param region "p" (OptimizerConfig.master_params) is
-            # row-indexed fp32 and shards exactly like the moments.
+            # master-param region "p" (OptimizerConfig.master_params), the
+            # error-feedback residual "ef" (grad_dtype=fp8_e4m3), and the
+            # bf16 working-param cache "wp" (work_param_cache) are all
+            # row-indexed arena regions and shard exactly like the
+            # moments; any other extra key (e.g. scaler scalars) stays
+            # replicated.
             mask = row_indexed_mask(abstract_opt)
             return {k: P() if k == "step" else
                     (jax.tree.map(lambda _: spec, abstract_opt[k])
-                     if k == "p" else
-                     jax.tree.map(lambda ri: spec if ri else P(), mask[k]))
+                     if k in ("p", "ef", "wp") else
+                     jax.tree.map(lambda ri: spec if ri else P(), mask[k])
+                     if k in mask else
+                     jax.tree.map(lambda _: P(), abstract_opt[k]))
                     for k in abstract_opt}
         pspecs = self.params_pspecs(abstract_params)
         if self.profile == "dp":

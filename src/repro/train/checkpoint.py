@@ -82,9 +82,15 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        info = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef), "meta": meta}
+        if isinstance(tree, dict):
+            # top-level state regions ("m", "v", "p", "ef", "scaler", ...)
+            # recorded by NAME so a resume mismatch can say WHICH region is
+            # missing/extra instead of dumping two treedef strings
+            info["regions"] = sorted(str(k) for k in tree)
         with open(os.path.join(tmp, "structure.json"), "w") as f:
-            json.dump({"step": step, "n_leaves": len(leaves),
-                       "treedef": str(treedef), "meta": meta}, f)
+            json.dump(info, f)
             f.flush()
             os.fsync(f.fileno())
         # fsync data + directory BEFORE the rename: the rename must never
@@ -154,6 +160,27 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
                 f"{d / 'arrays.npz'}: checksum mismatch on array a{i} "
                 f"(crc32 {got:#010x} != recorded {m['crc32']:#010x}) — "
                 f"on-disk corruption, refusing to restore")
+    saved_regions = info.get("regions")
+    if saved_regions is not None and isinstance(abstract_tree, dict):
+        have = sorted(str(k) for k in abstract_tree)
+        if have != saved_regions:
+            lacks = [k for k in have if k not in saved_regions]
+            stale = [k for k in saved_regions if k not in have]
+            parts = []
+            if lacks:
+                parts.append(f"checkpoint lacks region(s) {lacks} the "
+                             f"target state carries")
+            if stale:
+                parts.append(f"checkpoint carries stale region(s) {stale} "
+                             f"the target state does not expect")
+            raise ValueError(
+                f"state-region mismatch restoring step {step}: "
+                + "; ".join(parts)
+                + f" (checkpoint regions {saved_regions}, target regions "
+                f"{have}). Regions are never silently zero-filled or "
+                f"dropped — e.g. a run with an fp8 error-feedback residual "
+                f"('ef') cannot resume from a checkpoint written without "
+                f"one; re-init or convert the checkpoint explicitly")
     leaves, treedef = _flatten(abstract_tree)
     if len(leaves) != info["n_leaves"]:
         raise ValueError(f"leaf count mismatch: tree {len(leaves)} vs "

@@ -66,7 +66,8 @@ def run_combo(arch, m_codec, v_codec, accum="adama", micro_batches=2,
         oc = OptimizerConfig(name="adama", accumulation=accum,
                              micro_batches=micro_batches, use_pallas=True,
                              arena=True, state_codec=v_codec,
-                             m_codec=m_codec, grad_dtype=grad_dtype)
+                             m_codec=m_codec, grad_dtype=grad_dtype,
+                             finite_guard=grad_dtype == "fp8_e4m3")
         step, init = make_train_step(cfg, oc)
         p, s, metrics = jax.jit(step)(params, init(params), batch)
         _RUNS[key] = (params, p, s, metrics)
@@ -144,6 +145,36 @@ def test_bf16_wire_within_declared_tolerance(arch, m_codec, v_codec):
     assert maxdiff(p_f, p_b) <= tol + 1e-7, \
         (m_codec, v_codec, maxdiff(p_f, p_b), tol)
     assert int(s_b["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["bert_large", "stablelm_1_6b"])
+@pytest.mark.parametrize("m_codec,v_codec", COMBOS)
+def test_fp8_wire_within_declared_tolerance(arch, m_codec, v_codec):
+    """fp8 wire conformance: for every registered combination, one
+    adama-engine mini-batch on the fp8_e4m3 gradient wire (per-row scale
+    columns + error-feedback residual, finite guards on) stays within the
+    combination's DECLARED fp8 drift of the fp32-wire run of the same codec
+    pair. The loss is wire-independent as ever; the update drift comes from
+    one e4m3 rounding of the scaled gradient per fold MINUS whatever the
+    residual carried into later folds — each codec declares how much that
+    can move its update (`Conformance.fp8_wire_lr`; wider than bf16_wire_lr
+    since e4m3 keeps only 3 mantissa bits)."""
+    _, p_f, _, met_f = run_combo(arch, m_codec, v_codec)
+    _, p_8, s_8, met_8 = run_combo(arch, m_codec, v_codec,
+                                   grad_dtype="fp8_e4m3")
+    assert np.isfinite(float(met_8["loss"]))
+    assert abs(float(met_f["loss"]) - float(met_8["loss"])) < 1e-6
+    mc, vc = _conf(m_codec, v_codec)
+    tol = (mc.fp8_wire_lr + vc.fp8_wire_lr) * LR
+    assert maxdiff(p_f, p_8) <= tol + 1e-7, \
+        (m_codec, v_codec, maxdiff(p_f, p_8), tol)
+    # the wire run carries the error-feedback residual, and it is finite
+    # and non-trivial after a 2-micro-batch step (the second fold consumed
+    # the first fold's error; the LAST fold's error remains)
+    assert "ef" in s_8
+    ef = np.asarray(s_8["ef"].data)
+    assert np.isfinite(ef).all() and np.abs(ef).max() > 0
+    assert int(s_8["step"]) == 1
 
 
 @pytest.mark.parametrize("m_codec,v_codec", COMBOS)

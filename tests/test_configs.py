@@ -33,7 +33,7 @@ def test_matrix_dimensions_are_exported():
     assert set(M_CODECS) == {"fp32", "int8"}
     assert set(ZERO_STAGES) == {0, 1}
     assert set(ACCUM_ENGINES) == {"ga", "adama", "adama_layerwise"}
-    assert set(GRAD_DTYPES) == {"fp32", "bf16"}
+    assert set(GRAD_DTYPES) == {"fp32", "bf16", "fp8_e4m3"}
 
 
 def test_matrix_matches_state_store_registry():
@@ -116,6 +116,53 @@ def test_bf16_wire_refusals_name_the_fix():
     assert "expected one of" in optimizer_capability(
         _mk(grad_dtype="fp16", arena=True, use_pallas=True))
     assert "arena=True" in optimizer_capability(_mk(master_params=True))
+
+
+@pytest.mark.parametrize("m_codec", M_CODECS)
+@pytest.mark.parametrize("codec", STATE_CODECS)
+@pytest.mark.parametrize("zero", ZERO_STAGES)
+@pytest.mark.parametrize("engine", ("adama", "adama_layerwise"))
+def test_full_matrix_fp8_wire(m_codec, codec, zero, engine):
+    """grad_dtype=fp8_e4m3 (+ the finite guards it requires) composes with
+    every codec pair, both zero stages, and both AdamA fold engines — the
+    fp8 decode happens on the in-kernel fp32 upcast, before any codec
+    transform sees the gradient."""
+    opt = OptimizerConfig(name="adama", accumulation=engine, arena=True,
+                          use_pallas=True, state_codec=codec,
+                          m_codec=m_codec, zero_stage=zero,
+                          grad_dtype="fp8_e4m3", finite_guard=True)
+    assert optimizer_capability(opt) is None
+
+
+def test_fp8_wire_refusals_name_the_fix():
+    # fp8 without the guards: e4m3's NaN-overflow encoding needs them
+    reason = optimizer_capability(_mk(grad_dtype="fp8_e4m3", arena=True,
+                                      use_pallas=True))
+    assert "finite_guard=True" in reason
+    # fp8 without the arena
+    assert "arena=True" in optimizer_capability(_mk(grad_dtype="fp8_e4m3"))
+    # fp8 on the ga engine: the accumulated-gradient path has no fold to
+    # decode into
+    reason = optimizer_capability(_mk(grad_dtype="fp8_e4m3",
+                                      accumulation="ga", arena=True,
+                                      use_pallas=True, finite_guard=True))
+    assert "ga" in reason
+    # the static loss-scale grammar accepts the fp8 wire
+    opt = OptimizerConfig(name="adama", accumulation="adama", arena=True,
+                          use_pallas=True, grad_dtype="fp8_e4m3",
+                          finite_guard=True, loss_scale="256")
+    assert optimizer_capability(opt) is None
+
+
+def test_work_param_cache_requires_master():
+    reason = optimizer_capability(_mk(work_param_cache=True))
+    assert "master_params=True" in reason
+    with pytest.raises(ValueError, match="master_params=True"):
+        OptimizerConfig(work_param_cache=True, arena=True, use_pallas=True)
+    opt = OptimizerConfig(name="adama", accumulation="adama", arena=True,
+                          use_pallas=True, master_params=True,
+                          work_param_cache=True)
+    assert optimizer_capability(opt) is None
 
 
 def test_arena_requires_pallas_with_guidance():

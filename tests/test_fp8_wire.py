@@ -1,0 +1,313 @@
+"""fp8_e4m3 gradient wire + error-feedback residual.
+
+The wire contract (kernels/adama_accum.py fp8_* helpers): gradients travel
+as 1-byte e4m3 codes plus a per-row fp32 scale column; the fused fold
+kernels decode on their in-kernel upcast. e4m3's 3 mantissa bits make raw
+rounding visible in the trajectory, so the engines carry a MicroAdam-style
+error-feedback residual (state["ef"], fp32 arena, UNSCALED gradient units):
+each fold quantizes `g + ef`, stores back the quantization error, and the
+next micro-batch's fold consumes it.
+
+Pinned here:
+  - codec unit contracts: round-trip error bound, summand headroom,
+    NaN/inf propagation as the overflow signal, zero/denormal scale rules;
+  - resilience: caught-NaN == forced-skip BITWISE on params, m, v, AND ef
+    (the residual is finite-guard-predicated like every other region);
+  - checkpoint: ef survives save/restore under a bucketed partition-order
+    plan, and a resume with a stale or missing residual region refuses
+    with a named-region error (never silently zero-filled or dropped);
+  - work_param_cache: the bf16 working-param cache is bitwise equivalent
+    to an uncached run started from bf16-roundtripped params.
+
+The 4-fake-device shard_map fp8 wire tests live in tests/test_distributed.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import batch_for, tiny
+from repro.configs import OptimizerConfig
+from repro.core import adama, arena, buckets
+from repro.core.accumulation import make_train_step
+from repro.kernels.adama_accum import (FP8_MAX, fp8_decode_rows,
+                                       fp8_encode_rows, fp8_quantize_rows,
+                                       fp8_scale_rows)
+from repro.models.model import init_params
+from repro.train import checkpoint as ckpt
+from repro.train.faults import parse_fault
+
+ARCH = "bert_large"
+N_MICRO = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny(ARCH)
+    params = init_params(cfg, jax.random.key(0))
+    batch = batch_for(cfg, 4, 16)
+    return cfg, params, batch
+
+
+def _opt(accum="adama", **kw):
+    return OptimizerConfig(name="adama", accumulation=accum,
+                           micro_batches=N_MICRO, use_pallas=True,
+                           arena=True, **kw)
+
+
+def _run(setup, oc, steps=2, fault=None):
+    cfg, params, batch = setup
+    step, init = make_train_step(cfg, oc, fault=parse_fault(fault))
+    p, st = params, init(params)
+    f = jax.jit(step)
+    for _ in range(steps):
+        p, st, mx = f(p, st, batch)
+    return p, st, {k: float(v) for k, v in mx.items()}
+
+
+def _leaves_eq(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# codec unit contracts
+# ---------------------------------------------------------------------------
+
+
+def test_fp8_roundtrip_error_bound():
+    """Round-to-nearest e4m3 under the per-row scale: elementwise error is
+    at most half the mantissa step (2^-4) of the element itself, plus the
+    denormal-code floor (half of scale * 2^-9) for near-zero elements."""
+    g = jax.random.normal(jax.random.key(0), (16, 1024), jnp.float32)
+    g = g * jnp.logspace(-6, 3, 16)[:, None]      # wide per-row dynamic range
+    codes, s = fp8_encode_rows(g)
+    assert codes.dtype == jnp.float8_e4m3fn and s.shape == (16, 1)
+    dec = fp8_decode_rows(codes, s)
+    err = np.abs(np.asarray(dec - g))
+    bound = np.abs(np.asarray(g)) * 2.0 ** -4 + np.asarray(s) * 2.0 ** -9
+    assert (err <= bound + 1e-30).all()
+    # the scale puts the row maximum exactly at the top of the e4m3 range
+    np.testing.assert_allclose(np.asarray(s)[:, 0],
+                               np.max(np.abs(np.asarray(g)), axis=-1)
+                               / FP8_MAX, rtol=1e-6)
+
+
+def test_fp8_summand_headroom():
+    """n_summands=M widens the scale by M so the SUM of M independently
+    quantized slabs (what a reduce-scatter produces) cannot overflow e4m3:
+    each code's magnitude stays <= FP8_MAX / M, and decoding the fp32 sum
+    of codes under the shared scale reproduces the sum of slabs."""
+    M = 4
+    ks = jax.random.split(jax.random.key(1), M)
+    slabs = [jax.random.normal(k, (8, 1024), jnp.float32) * 3.0 for k in ks]
+    rowmax = jnp.max(jnp.abs(jnp.stack(slabs)), axis=(0, -1), keepdims=False)
+    s = fp8_scale_rows(rowmax[:, None], n_summands=M)
+    codes = [fp8_quantize_rows(g, s) for g in slabs]
+    for c in codes:
+        assert float(jnp.max(jnp.abs(c.astype(jnp.float32)))) <= FP8_MAX / M
+    summed = sum(c.astype(jnp.float32) for c in codes)
+    want = np.sum([np.asarray(g) for g in slabs], axis=0)
+    got = np.asarray(fp8_decode_rows(summed, s))
+    assert np.isfinite(got).all()
+    # each summand contributes at most its own half-mantissa-step error
+    bound = np.sum([np.abs(np.asarray(g)) * 2.0 ** -4 for g in slabs],
+                   axis=0) + M * np.asarray(s) * 2.0 ** -9
+    assert (np.abs(got - want) <= bound + 1e-30).all()
+
+
+def test_fp8_nonfinite_propagates_as_nan_codes():
+    """e4m3fn has no inf — non-finite gradients must come out the encoder
+    as NaN codes (the finite guard's signal): a NaN element survives the
+    divide; an inf element drives its row scale to inf, so its own code is
+    inf/inf = NaN. The scale column itself is guarded to 1.0 on a NaN
+    rowmax so the CODES carry the signal, not the scale."""
+    g = jnp.ones((4, 1024), jnp.float32)
+    gn = g.at[1, 3].set(jnp.nan)
+    codes, s = fp8_encode_rows(gn)
+    assert bool(jnp.isnan(codes.astype(jnp.float32)[1, 3]))
+    assert float(s[1, 0]) == 1.0                  # NaN rowmax -> guarded scale
+    gi = g.at[2, 7].set(jnp.inf)
+    codes, s = fp8_encode_rows(gi)
+    assert not bool(jnp.isfinite(codes.astype(jnp.float32)[2, 7]))
+    # clean rows of the same slab decode fine
+    clean = fp8_decode_rows(codes, s)[0]
+    assert bool(jnp.isfinite(clean).all())
+
+
+def test_fp8_zero_and_denormal_scale_rules():
+    """Zero rows take scale 1.0 (codes all zero); rows whose natural scale
+    would be fp32-denormal fall back to scale = rowmax so XLA's
+    flush-to-zero cannot silently erase the row."""
+    g = jnp.zeros((2, 1024), jnp.float32)
+    tinyv = 1e-37                 # normal fp32, but rowmax/FP8_MAX denormal
+    g = g.at[1, 0].set(tinyv)
+    codes, s = fp8_encode_rows(g)
+    assert float(s[0, 0]) == 1.0
+    assert not (np.asarray(codes.astype(jnp.float32))[0] != 0).any()
+    assert float(s[1, 0]) == np.float32(tinyv)    # rowmax fallback
+    assert float(fp8_decode_rows(codes, s)[1, 0]) == np.float32(tinyv)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback residual semantics on the pjit engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("accum", ["adama", "adama_layerwise"])
+def test_fp8_caught_nan_equals_forced_skip_bitwise_incl_ef(setup, accum):
+    """The residual is predicated on the SAME guard verdict as the fold: a
+    caught NaN at micro-batch 1 of step 0 leaves params, m, v, AND ef
+    bitwise identical to a forced skip there. A residual written from a
+    poisoned slab would smuggle the NaN into the next micro-batch's
+    injection — this pins that it cannot."""
+    oc = _opt(accum, grad_dtype="fp8_e4m3", finite_guard=True)
+    pn, stn, mn = _run(setup, oc, fault="nan@micro=1,step=0")
+    ps, sts, ms = _run(setup, oc, fault="skip@micro=1,step=0")
+    assert _leaves_eq(pn, ps)
+    assert _leaves_eq(stn["m"], sts["m"]) and _leaves_eq(stn["v"], sts["v"])
+    np.testing.assert_array_equal(np.asarray(stn["ef"].data),
+                                  np.asarray(sts["ef"].data))
+    assert int(stn["step"]) == 2 == int(sts["step"])
+    assert mn["skipped_micro_batches"] == 1.0 == ms["skipped_micro_batches"]
+    # the surviving residual is finite and non-trivial (later folds ran)
+    ef = np.asarray(stn["ef"].data)
+    assert np.isfinite(ef).all() and np.abs(ef).max() > 0
+    # and the skip actually removed a micro-batch's contribution
+    pc, _, _ = _run(setup, oc)
+    assert not _leaves_eq(pn, pc)
+
+
+def test_fp8_ef_ablation_changes_trajectory(setup):
+    """error_feedback=False drops the residual region entirely and the
+    trajectory measurably departs from the EF run — the residual is doing
+    real work (benchmarks/fig2_convergence.py quantifies the gap)."""
+    oc = _opt(grad_dtype="fp8_e4m3", finite_guard=True)
+    p_ef, st_ef, _ = _run(setup, oc)
+    p_no, st_no, _ = _run(setup, dataclasses.replace(oc,
+                                                     error_feedback=False))
+    assert "ef" in st_ef and "ef" not in st_no
+    assert not _leaves_eq(p_ef, p_no)
+
+
+def test_fp8_dynamic_scaling_backs_off_and_recovers(setup):
+    """fp8 wire + dynamic loss scaling: an injected NaN backs the scale off
+    once, training continues with finite params and an intact residual."""
+    oc = dataclasses.replace(_opt(grad_dtype="fp8_e4m3", finite_guard=True),
+                             loss_scale="dynamic")
+    p, st, m = _run(setup, oc, steps=3, fault="nan@micro=1,step=0")
+    assert m["loss_scale"] == 2.0 ** 14
+    assert int(st["step"]) == 3
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(p))
+    assert bool(jnp.isfinite(st["ef"].data).all())
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: ef round-trip + named region mismatch
+# ---------------------------------------------------------------------------
+
+
+def _state_tree():
+    return {
+        "a": jax.random.normal(jax.random.key(1), (7,), jnp.float32),
+        "b": jax.random.normal(jax.random.key(2), (300, 150)).astype(
+            jnp.bfloat16),
+        "blocks": {
+            "w": jax.random.normal(jax.random.key(3), (3, 257, 9),
+                                   jnp.float32),
+        },
+    }
+
+
+def test_checkpoint_ef_roundtrip_under_bucketed_plan(tmp_path):
+    """The residual is a first-class checkpoint region: save/restore under
+    a bucketed (partition-order) plan is bitwise, including ef, and
+    unpermuting recovers the arena-order residual exactly."""
+    tree = _state_tree()
+    st = adama.init_arena(tree, error_feedback=True)
+    lay = st["ef"].layout
+    ef_data = (jnp.arange(lay.rows * 1024, dtype=jnp.float32)
+               .reshape(lay.rows, 1024) * 1e-4)
+    st = dict(st, ef=st["ef"].with_data(ef_data))
+    plan = buckets.plan_buckets(lay, n_shards=4)
+    stb = buckets.permute_state(st, plan)
+    ckpt.save(str(tmp_path), 3, stb)
+    restored = ckpt.restore(str(tmp_path), 3, jax.eval_shape(lambda: stb))
+    np.testing.assert_array_equal(np.asarray(restored["ef"].data),
+                                  np.asarray(stb["ef"].data))
+    back = buckets.unpermute_state(restored, plan)
+    np.testing.assert_array_equal(np.asarray(back["ef"].data),
+                                  np.asarray(ef_data))
+
+
+def test_checkpoint_refuses_missing_or_stale_ef_region(tmp_path):
+    """Resuming an fp8+EF run from a checkpoint written WITHOUT the
+    residual (or vice versa) refuses with an error NAMING the region —
+    silently zero-filling ef would replay already-compensated error;
+    silently dropping it would lose a pending correction."""
+    tree = _state_tree()
+    st_ef = adama.init_arena(tree, error_feedback=True)
+    st_no = adama.init_arena(tree)
+    ckpt.save(str(tmp_path / "noef"), 1, st_no)
+    with pytest.raises(ValueError, match=r"lacks region.*'ef'"):
+        ckpt.restore(str(tmp_path / "noef"), 1, jax.eval_shape(lambda: st_ef))
+    ckpt.save(str(tmp_path / "ef"), 1, st_ef)
+    with pytest.raises(ValueError, match=r"stale region.*'ef'"):
+        ckpt.restore(str(tmp_path / "ef"), 1, jax.eval_shape(lambda: st_no))
+
+
+# ---------------------------------------------------------------------------
+# bf16 working-param cache
+# ---------------------------------------------------------------------------
+
+
+def test_work_param_cache_bitwise_equivalence(setup):
+    """state["wp"] sources step params from the cache, so from step 2 on
+    the input param tree is dead. Contract: a cached run is BITWISE an
+    uncached master-param run whose initial params were round-tripped
+    through the bf16 pack once (the cache's only lossy edge is that first
+    fill — every later refresh copies the apply kernel's own bf16 output)."""
+    cfg, params, batch = setup
+    occ = _opt(master_params=True, work_param_cache=True, finite_guard=True)
+    ocu = _opt(master_params=True, finite_guard=True)
+    stepc, initc = make_train_step(cfg, occ)
+    stepu, initu = make_train_step(cfg, ocu)
+    stc, stu = initc(params), initu(params)
+    assert "wp" in stc and "wp" not in stu
+    lay = stu["m"].layout
+    p_rt = arena.unpack(
+        arena.pack(params, lay, dtype=jnp.bfloat16).astype(jnp.float32), lay)
+    fc, fu = jax.jit(stepc), jax.jit(stepu)
+    pc, pu = params, p_rt
+    for _ in range(3):
+        pc, stc, _ = fc(pc, stc, batch)
+        pu, stu, _ = fu(pu, stu, batch)
+    assert _leaves_eq(pc, pu)
+    np.testing.assert_array_equal(np.asarray(stc["m"].data),
+                                  np.asarray(stu["m"].data))
+    np.testing.assert_array_equal(np.asarray(stc["p"].data),
+                                  np.asarray(stu["p"].data))
+
+
+def test_work_param_cache_composes_with_other_engines(setup):
+    """The cache is an engine-agnostic pjit feature: ga and layerwise runs
+    with it stay finite and actually update."""
+    cfg, params, _ = setup
+    for accum in ("ga", "adama_layerwise"):
+        oc = _opt(accum, master_params=True, work_param_cache=True)
+        p, st, m = _run(setup, oc, steps=1)
+        assert np.isfinite(m["loss"])
+        assert "wp" in st and not _leaves_eq(p, params)
+
+
+def test_fp8_shard_map_engine_refuses_work_param_cache(setup):
+    """The layerwise shard_map engine (axis_names) cannot source params
+    from a replicated cache; and fp8 on that engine is a pjit-only wire —
+    both refuse loudly at build time."""
+    cfg = setup[0]
+    oc = _opt(grad_dtype="fp8_e4m3", finite_guard=True)
+    with pytest.raises(ValueError, match="fp8"):
+        make_train_step(cfg, oc, axis_names=("data",), m_devices=2)

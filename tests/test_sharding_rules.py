@@ -157,3 +157,42 @@ def test_zero1_accepts_raw_pspec_leaves():
     mv = _zero1(mesh, {"w": P()}, ap)
     assert isinstance(mv["w"], NamedSharding)
     assert mv["w"].spec == P("data", None)
+
+
+def test_opt_pspecs_covers_extra_arena_regions():
+    """Regression: the arena branch of opt_pspecs must handle EVERY state
+    key — the master-param region "p", the fp8 error-feedback residual
+    "ef", the bf16 working-param cache "wp" (all row-indexed arena regions
+    that shard like the moments), and unknown extras such as loss-scaler
+    scalars (replicated). An fp8+master+wp state used to KeyError on "ef"
+    because the comprehension only knew "step", "p", and the codec mask."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import adama
+
+    params = {"w": jnp.zeros((256, 128), jnp.float32),
+              "b": jnp.zeros((128,), jnp.float32)}
+    st = adama.init_arena(params, n_shards=16, master_params=True,
+                          error_feedback=True, work_param_cache=True)
+    st["scaler"] = {"scale": jnp.float32(65536.0),
+                    "good_steps": jnp.int32(0)}
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = Rules(get_config("stablelm_1_6b"), mesh)
+
+    specs = rules.opt_pspecs(st, params, zero1=True)
+    assert set(specs) == set(st)
+    row = P(("data",), None)
+    assert specs["step"] == P()
+    for region in ("p", "ef", "wp"):
+        leaves = jax.tree.leaves(specs[region],
+                                 is_leaf=lambda x: isinstance(x, P))
+        assert leaves and all(s == row for s in leaves), (region, leaves)
+    # moments follow the codec's row-indexed column mask (fp32: all rows)
+    for mom in ("m", "v"):
+        leaves = jax.tree.leaves(specs[mom],
+                                 is_leaf=lambda x: isinstance(x, P))
+        assert leaves and all(s == row for s in leaves), (mom, leaves)
+    # unknown extra keys (scaler scalars) stay replicated
+    sc = jax.tree.leaves(specs["scaler"],
+                         is_leaf=lambda x: isinstance(x, P))
+    assert sc and all(s == P() for s in sc)
