@@ -11,6 +11,19 @@ Schedules (4 fake devices, reduced bert_large + stablelm_1_6b):
                        monolithic psum_scatter per micro-batch
   adama_zero1_bucketed AdamA ZeRO-1, bucketed reduce-scatter stream
                        (core/buckets.py) — the default schedule
+  adama_zero1_bucketed_async
+                       the bucketed schedule with the EXPLICIT double-
+                       buffered pipeline (zero_async=True): bucket i+1's
+                       pack + reduce-scatter issued while bucket i folds,
+                       optimization-barrier-pinned to exactly two live
+                       buckets, params regathered by a ppermute ring —
+                       bitwise-identical numerics to the serial stream
+  adama_zero1_bucketed_async_2dp2tp
+                       the async row on a 2dp×2tp (2,2) mesh with BOTH
+                       axes manual-DP — the mesh-composition row; the
+                       layout/plan depend only on the dp product, so this
+                       is bitwise-equal to the flat 4dp async row
+                       (pinned by tests/test_distributed.py)
   adama_zero1_bucketed_bf16
                        the bucketed schedule on the MIXED-PRECISION wire:
                        grad_dtype=bf16 (each bucket's slab packs and
@@ -41,6 +54,12 @@ ZeRO-1 schedules and FAILS (non-zero exit) when
   * the bucketed step time regresses more than 5% vs full-pack, or
   * the bucketed schedule's largest reduce-scatter operand exceeds its
     max-bucket budget (the peak-gradient-memory claim, from the HLO), or
+  * the async double-buffered row's wall clock exceeds the serial bucketed
+    row (ASYNC_TIME_CEILING = 1.0x — overlap must not cost time; noise
+    band applies), or its scheduled LIVE reduce-scatter operand peak
+    exceeds the two-bucket budget (2x max-bucket, strict — the pipeline's
+    pinning invariant), or its `overlap_fraction` is 0 (the schedule left
+    the scheduler nothing to overlap), or
   * the bf16-wire row misses its memory/comm contract: grad reduce-scatter
     operand peak OR total WIRE collective bytes > 0.55x the fp32-wire
     bucketed row, or step time above the CPU-emulation ceiling (see
@@ -87,6 +106,13 @@ from pathlib import Path
 
 N_DEV = 4
 REGRESSION_CEILING = 1.05      # bucketed step time <= 1.05x full-pack
+# Async double-buffered pipeline gate: the explicit overlap schedule runs
+# the SAME collectives and folds as the serial bucketed stream (bitwise-
+# identical numerics — psum_scatter order untouched, barriers only add
+# ordering), so its wall clock must be <= 1.0x the serial row; the shared
+# TIME_NOISE_BAND absorbs CPU drift. Its live-bytes gate is strict: the
+# scheduled live reduce-scatter operand peak must stay within TWO buckets.
+ASYNC_TIME_CEILING = 1.0
 # mixed-precision wire gates, vs the fp32-wire bucketed row: half the wire
 # bytes must show up as <= 0.55x the grad reduce-scatter operand peak AND
 # <= 0.55x the total wire collective bytes (0.05 slack for the fp32
@@ -142,6 +168,13 @@ def _schedules(check_only: bool):
         "adama_zero1_fullpack": ("adama", dict(base, zero_stage=1,
                                                zero_bucketed=False)),
         "adama_zero1_bucketed": ("adama", dict(base, zero_stage=1)),
+        "adama_zero1_bucketed_async": ("adama", dict(base, zero_stage=1,
+                                                     zero_async=True)),
+        # same config on a (2,2) dp×tp mesh, both axes manual-DP — the
+        # bench_arch loop switches the mesh on the "_2dp2tp" suffix
+        "adama_zero1_bucketed_async_2dp2tp": ("adama",
+                                              dict(base, zero_stage=1,
+                                                   zero_async=True)),
         "adama_zero1_bucketed_bf16": ("adama", dict(base, zero_stage=1,
                                                     grad_dtype="bf16",
                                                     master_params=True)),
@@ -225,14 +258,20 @@ def bench_arch(arch: str, check_only: bool, iters: int):
     if cfg.arch_type == "audio":
         batch["frames"] = jnp.zeros((8, cfg.encoder_seq_len, cfg.d_model))
     mesh = make_mesh((N_DEV,), ("data",))
+    mesh22 = make_mesh((2, 2), ("data", "model"))
 
     out = {}
     fns = {}
-    with mesh:
-        for sched, (variant, okw) in _schedules(check_only).items():
+    for sched, (variant, okw) in _schedules(check_only).items():
+        # the *_2dp2tp rows run the same dp product on a (2,2) mesh with
+        # both axes manual-DP: layout/plan depend only on the product, so
+        # the row measures pure mesh-composition overhead (ring hops over
+        # ("data","model") vs a flat 4-ring)
+        smesh, dp = ((mesh22, ("data", "model"))
+                     if sched.endswith("_2dp2tp") else (mesh, ("data",)))
+        with smesh:
             opt = OptimizerConfig(**okw)
-            step, init = make_dp_train_step(cfg, opt, mesh, ("data",),
-                                            variant)
+            step, init = make_dp_train_step(cfg, opt, smesh, dp, variant)
             opt_state = init(params)
             lowered = jax.jit(step).lower(params, opt_state, batch)
             compiled = lowered.compile()
@@ -264,6 +303,16 @@ def bench_arch(arch: str, check_only: bool, iters: int):
                 "grad_wire_dtype": opt.grad_dtype,
                 "master_param_bytes": optimizer_state_bytes(
                     opt_state.get("p", ())),
+                # schedule-level overlap + liveness (post-opt HLO is
+                # scheduled): what fraction of collective payload the
+                # schedule lets run beside compute, and the high-water
+                # mark of simultaneously-live grad-RS operand bytes — the
+                # serial stream holds one bucket, the async pipeline is
+                # barrier-pinned to two
+                "overlap_fraction": round(hlo.get("overlap_fraction", 0.0),
+                                          4),
+                "live_peak_rs_bytes": int(
+                    hlo.get("live_peak_reduce-scatter", 0)),
             }
             if opt.zero_stage == 1 and (opt.zero_bucketed or
                                         variant == "adama_layerwise"):
@@ -274,6 +323,10 @@ def bench_arch(arch: str, check_only: bool, iters: int):
                 rec["grad_peak_budget_bytes"] = plan.grad_peak_bytes(
                     grad_wire_itemsize(opt.grad_dtype))
                 rec["n_grad_buckets"] = len(plan.grad_buckets())
+                # two-bucket LIVE budget in fp32 bytes (post-opt CPU HLO
+                # re-widens bf16 wires, so fp32 itemsize is the backend-
+                # safe bound the live gate compares against)
+                rec["grad_live_budget_bytes"] = 2 * plan.grad_peak_bytes(4)
                 if opt.grad_dtype == "fp8_e4m3":
                     # per-bucket (rows, 1) fp32 scale columns — the fp8
                     # wire's metadata overhead, pmax'd once per bucket per
@@ -282,7 +335,7 @@ def bench_arch(arch: str, check_only: bool, iters: int):
                     rec["scale_col_bytes"] = sum(
                         bk.rows * 4 for bk in plan.grad_buckets())
             out[sched] = rec
-        times = _timed_interleaved(fns, warmup=2, iters=iters)
+    times = _timed_interleaved(fns, warmup=2, iters=iters)
     for sched, us in times.items():
         out[sched]["step_us"] = round(us, 1)
         print(f"# {arch}/{sched}: {us:.0f} us/step, "
@@ -334,6 +387,35 @@ def run_checks(metrics):
                 f"{arch}: bucketed grad peak {buck['grad_rs_peak_bytes']} B "
                 f"not smaller than full-pack "
                 f"{full['grad_rs_peak_bytes']} B")
+        # async double-buffered pipeline: same numerics, so same-or-better
+        # wall clock (noise band applies), strictly bounded live bytes
+        # (two buckets), and a schedule that actually exposes overlap
+        for aname, aref in (("adama_zero1_bucketed_async", buck),
+                            ("adama_zero1_bucketed_async_2dp2tp", None)):
+            arow = scheds.get(aname)
+            if not arow:
+                continue
+            if aref:
+                _time_gate(bad, warns, arch, f"{aname} step",
+                           arow["step_us"], aref["step_us"],
+                           ASYNC_TIME_CEILING)
+            budget = arow.get("grad_peak_budget_bytes", 0)
+            if budget and arow["grad_rs_peak_bytes"] > budget:
+                bad.append(
+                    f"{arch}: {aname} grad reduce-scatter operand peak "
+                    f"{arow['grad_rs_peak_bytes']} B exceeds the "
+                    f"max-bucket budget {budget} B")
+            live_budget = arow.get("grad_live_budget_bytes", 0)
+            if live_budget and arow["live_peak_rs_bytes"] > live_budget:
+                bad.append(
+                    f"{arch}: {aname} scheduled live grad-RS operand peak "
+                    f"{arow['live_peak_rs_bytes']} B exceeds the "
+                    f"two-bucket budget {live_budget} B — the pipeline's "
+                    f"barrier pinning is not holding")
+            if arow.get("overlap_fraction", 0.0) <= 0.0:
+                bad.append(
+                    f"{arch}: {aname} overlap_fraction is 0 — the async "
+                    f"schedule left the scheduler nothing to overlap")
         # mixed-precision wire contract vs the fp32-wire bucketed row
         bf16 = scheds.get("adama_zero1_bucketed_bf16")
         if not bf16:
@@ -408,6 +490,7 @@ def main(check_only: bool = False, iters: int = 5,
     metrics["_meta"] = {"devices": N_DEV, "iters": iters,
                         "check_only": check_only,
                         "regression_ceiling": REGRESSION_CEILING,
+                        "async_time_ceiling": ASYNC_TIME_CEILING,
                         "bf16_wire_ratio": BF16_WIRE_RATIO,
                         "bf16_time_ceiling": BF16_TIME_CEILING,
                         "guard_time_ceiling": GUARD_TIME_CEILING,

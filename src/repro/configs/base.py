@@ -245,6 +245,19 @@ class OptimizerConfig:
     # rest-region bucket cap in arena rows (0 = core/buckets.py default,
     # 4096 rows = 16 MiB fp32 slab); per-layer stack buckets are uncapped.
     zero_bucket_rows: int = 0
+    # Async double-buffered bucket pipeline (core/dp_shardmap.py): issue
+    # bucket i+1's pack + reduce-scatter while bucket i's received slice is
+    # still folding, with an optimization_barrier pinning bucket i+2's pack
+    # behind bucket i's fold so EXACTLY two gradient buckets are ever live
+    # (launch/dryrun.py gates live_peak_reduce-scatter <= 2x max-bucket).
+    # The param all-gather switches to a ppermute ring (same bytes, moved
+    # as M-1 collective-permutes the scheduler can overlap with the apply
+    # epilogue). Numerics are BITWISE identical to the serial bucketed
+    # schedule — the psum_scatter per bucket and its reduction order are
+    # unchanged; only instruction-level ordering freedom moves. Requires
+    # the bucketed ZeRO-1 schedule (zero_stage=1, arena, zero_bucketed or
+    # the layerwise stream).
+    zero_async: bool = False
     # Gradient WIRE dtype of the arena fold pipeline (fp32 | bf16): the
     # dtype gradients are PACKED and COLLECTIVELY MOVED in (core/arena.py
     # pack helpers, the per-bucket/per-layer psum_scatters of
@@ -501,6 +514,22 @@ def optimizer_capability(opt: "OptimizerConfig") -> Optional[str]:
     if opt.zero_bucket_rows < 0:
         return (f"zero_bucket_rows must be >= 0 (0 = default cap), got "
                 f"{opt.zero_bucket_rows}")
+    if opt.zero_async:
+        if opt.zero_stage != 1:
+            return ("zero_async=True requires zero_stage=1: the double-"
+                    "buffered pipeline overlaps per-bucket gradient "
+                    "reduce-scatters against slice folds, which only exist "
+                    "in the ZeRO-1 row-range schedule; pass zero_stage=1")
+        if not opt.arena:
+            return ("zero_async=True requires arena=True (use_pallas=True): "
+                    "the bucket pipeline streams slices of the flat state "
+                    "arena; pass arena=True use_pallas=True")
+        if not opt.zero_bucketed and opt.accumulation != "adama_layerwise":
+            return ("zero_async=True requires the bucketed ZeRO-1 schedule "
+                    "(zero_bucketed=True, or the adama_layerwise stream): "
+                    "the full-pack schedule has a single monolithic "
+                    "psum_scatter — there is no second bucket to double-"
+                    "buffer; drop zero_bucketed=False or zero_async")
     if opt.grad_dtype not in GRAD_DTYPES:
         return (f"unknown grad_dtype {opt.grad_dtype!r}; expected one of "
                 f"{GRAD_DTYPES}")
@@ -573,6 +602,73 @@ def validate_optimizer_config(opt: "OptimizerConfig") -> None:
     reason = optimizer_capability(opt)
     if reason is not None:
         raise ValueError(reason)
+
+
+def mesh_capability(opt: "OptimizerConfig", mesh_shape: Tuple[int, ...],
+                    mesh_axes: Tuple[str, ...], *, tp_axis: Optional[str],
+                    engine: str = "shardmap") -> Optional[str]:
+    """Mesh-composition capability matrix: None when `opt` runs on a mesh of
+    `mesh_shape` x `mesh_axes` with tensor-parallel axis `tp_axis` under
+    `engine`, else an actionable refusal naming the unsupported combo.
+
+    The supported compositions:
+
+      pjit engine          : any mesh; tp_axis is a sharding-rules concern
+                             (sharding/rules.py), ZeRO-1 per-leaf or arena
+                             row sharding both compose with auto TP.
+      shardmap, tp_axis
+        absent or size 1   : all mesh axes are manual DP axes (the pure-DP
+                             profile) — every optimizer feature composes,
+                             including a MULTI-AXIS manual dp product
+                             (e.g. 2x2 'data' x 'model' both manual), which
+                             is bitwise identical to the flat dp mesh of
+                             the same size (the reduce-scatter ring order
+                             is the linearized axis product either way).
+      shardmap, tp_axis
+        size > 1           : manual-DP x auto-TP. Requires jax >= 0.6
+                             (jax.shard_map with axis_names=): the 0.4.x
+                             GSPMD partitioner cannot propagate manual
+                             subgroup shardings through the arena collect-
+                             ives ("Check failed: sharding.IsManualSubgroup"
+                             / PartitionId UNIMPLEMENTED). On older jax the
+                             refusal names the two escapes: make the tp
+                             axis manual (fold it into the dp product) or
+                             use the pjit engine. On jax >= 0.6
+                             master_params under mixed mode additionally
+                             refuses until the working-row all-gather
+                             learns a tp-subgroup layout.
+    """
+    import jax
+    if len(mesh_shape) != len(mesh_axes):
+        return (f"mesh_shape={mesh_shape} and mesh_axes={mesh_axes} "
+                f"disagree in rank; give one size per axis name")
+    if tp_axis is not None and tp_axis not in mesh_axes and mesh_axes:
+        return (f"tp_axis={tp_axis!r} is not a mesh axis "
+                f"(mesh_axes={mesh_axes}); name one of the mesh axes or "
+                f"pass tp_axis=None")
+    if engine not in ("pjit", "shardmap"):
+        return f"unknown engine {engine!r}; expected 'pjit' or 'shardmap'"
+    if engine == "pjit":
+        return None
+    sizes = dict(zip(mesh_axes, mesh_shape))
+    tp = sizes.get(tp_axis, 1) if tp_axis is not None else 1
+    if tp <= 1:
+        return None                       # pure manual-DP product: supported
+    if not hasattr(jax, "shard_map"):
+        return (f"mixed manual-DP x auto-TP shard_map (tp_axis="
+                f"{tp_axis!r} of size {tp} left auto while the dp axes are "
+                f"manual) requires jax >= 0.6: the 0.4.x GSPMD partitioner "
+                f"aborts on manual-subgroup shardings through the arena "
+                f"collectives. Either fold {tp_axis!r} into the manual dp "
+                f"product (profile='dp' — bitwise equal to the flat dp "
+                f"mesh) or use engine='pjit'")
+    if opt.master_params:
+        return (f"master_params=True under mixed manual-DP x auto-TP "
+                f"(tp_axis={tp_axis!r} size {tp}) is unsupported: the "
+                f"working-row all-gather emits rows in dp partition order "
+                f"and has no tp-subgroup layout yet; drop master_params or "
+                f"fold {tp_axis!r} into the manual dp product")
+    return None
 
 
 @dataclass(frozen=True)

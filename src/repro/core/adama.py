@@ -40,7 +40,8 @@ def init(params) -> State:
 def init_arena(params, codec: str = "fp32", m_codec: str = "fp32",
                n_shards: int = 1, master_params: bool = False,
                error_feedback: bool = False,
-               work_param_cache: bool = False) -> State:
+               work_param_cache: bool = False,
+               tp_shards: int = 1) -> State:
     """Arena-backed state: both moments are codec-encoded arena columns
     (core/state_store.py; `codec` selects v's codec, `m_codec` m's), so each
     fold/apply is ONE kernel dispatch for every registered pair. `n_shards`
@@ -67,7 +68,8 @@ def init_arena(params, codec: str = "fp32", m_codec: str = "fp32",
     with the work rows the master apply emits. Requires master_params
     (enforced by OptimizerConfig)."""
     from repro.core import state_store
-    layout = arena_mod.build_layout(params, n_shards=n_shards)
+    layout = arena_mod.build_layout(params, n_shards=n_shards,
+                                    tp_shards=tp_shards)
     state = {"m": state_store.get_codec(m_codec, "m").init(layout),
              "v": state_store.get_codec(codec, "v").init(layout),
              "step": jnp.zeros((), jnp.int32)}

@@ -182,7 +182,7 @@ def split_tree(tree):
     return [], tree
 
 
-def build_layout(tree, n_shards: int = 1) -> ArenaLayout:
+def build_layout(tree, n_shards: int = 1, tp_shards: int = 1) -> ArenaLayout:
     """Build the packed layout. `n_shards > 1` additionally pads the total
     row count so the arena splits into `n_shards` equal, kernel-block-aligned
     row ranges (core/zero.py::shard_rows) — ZeRO-1 over the arena is a
@@ -193,8 +193,20 @@ def build_layout(tree, n_shards: int = 1) -> ArenaLayout:
     (lcm of MIN_SLICE_BLOCK and n_shards*ROW_ALIGN): the slice-fold block
     never gcds below MIN_SLICE_BLOCK, and each per-layer row range splits
     into n_shards equal aligned slices — the unit the bucketed ZeRO-1
-    schedule (core/buckets.py) reduce-scatters."""
+    schedule (core/buckets.py) reduce-scatters.
+
+    `tp_shards` makes the layout mesh-aware for a 2D dp×tp mesh: every
+    dp slice must further split into `tp_shards` equal aligned sub-slices
+    (stacked regions split along the tp axis). The layout depends only on
+    the PRODUCT n_shards*tp_shards — build_layout(t, d, tp) ==
+    build_layout(t, d*tp) — which is the canonical-order property the
+    dp×tp composition relies on: a (2dp×2tp) plan addresses the same arena
+    rows as a flat 4dp plan, so manual×manual mesh folding is bitwise and
+    elastic resharding (train/checkpoint.py) round-trips through arena
+    order regardless of the mesh shape it was saved under."""
     assert n_shards >= 1, n_shards
+    assert tp_shards >= 1, tp_shards
+    n_shards = n_shards * tp_shards
     grain = region_grain(n_shards)
     stack_items, rest_tree = split_tree(tree)
     row = 0

@@ -85,14 +85,33 @@ class Bucket:
 @dataclass(frozen=True)
 class BucketPlan:
     """The static schedule: buckets partition [0, layout.rows) in arena
-    order; own_offsets partition [0, shard_rows) in the same order."""
+    order; own_offsets partition [0, shard_rows) in the same order.
+
+    `tp_shards > 1` marks a mesh-aware plan for a 2D dp×tp mesh: every
+    bucket's per-device slice additionally splits into `tp_shards` equal
+    ROW_ALIGN-aligned sub-slices (`tp_subslice`), so a tp-sharded stacked
+    region can scatter/fold per sub-slice without re-planning. Arena
+    addressing is unchanged — the plan covers the same rows as the flat
+    (n_shards*tp_shards)-way plan, which keeps dp×tp runs bitwise against
+    their flat-dp equivalent and lets elastic checkpoint resume round-trip
+    through canonical arena order."""
     layout: ArenaLayout
     n_shards: int
     buckets: Tuple[Bucket, ...]
+    tp_shards: int = 1
 
     @property
     def shard_rows(self) -> int:
         return self.layout.rows // self.n_shards
+
+    def tp_subslice(self, b: Bucket, t: int) -> Tuple[int, int]:
+        """(shard-local row offset, rows) of tp sub-slice `t` of a device's
+        slice of bucket `b` — the unit a tp-split stacked region folds."""
+        if not 0 <= t < self.tp_shards:
+            raise IndexError(f"tp sub-slice {t} out of range "
+                             f"[0, {self.tp_shards})")
+        sub = b.slice_rows // self.tp_shards
+        return b.own_offset + t * sub, sub
 
     def grad_buckets(self) -> Tuple[Bucket, ...]:
         return tuple(b for b in self.buckets if b.has_grad)
@@ -125,15 +144,21 @@ class BucketPlan:
 
 
 def plan_buckets(layout: ArenaLayout, n_shards: int, *,
-                 max_bucket_rows: Optional[int] = None) -> BucketPlan:
-    """Plan the bucket schedule for `layout` over `n_shards` devices.
+                 max_bucket_rows: Optional[int] = None,
+                 tp_shards: int = 1) -> BucketPlan:
+    """Plan the bucket schedule for `layout` over `n_shards` dp devices,
+    optionally mesh-aware for `tp_shards`-way tensor parallelism (every dp
+    slice must then split into tp_shards aligned sub-slices — the bucket
+    cut unit becomes ROW_ALIGN * n_shards * tp_shards).
 
-    Raises ValueError when the layout was not built for this shard count —
-    the fix is `build_layout(tree, n_shards=...)`, which pads every region
-    stride to the shard-divisible grain."""
+    Raises ValueError when the layout was not built for this mesh — the fix
+    is `build_layout(tree, n_shards=..., tp_shards=...)`, which pads every
+    region stride to the mesh-divisible grain."""
     from repro.core.zero import shard_rows
-    shard_rows(layout, n_shards)     # validates total-row shard alignment
-    unit = ROW_ALIGN * n_shards
+    if tp_shards < 1:
+        raise ValueError(f"tp_shards must be >= 1, got {tp_shards}")
+    shard_rows(layout, n_shards * tp_shards)  # total-row mesh alignment
+    unit = ROW_ALIGN * n_shards * tp_shards
     cap = max_bucket_rows if max_bucket_rows else DEFAULT_BUCKET_ROWS
     cap = max(unit, cap - cap % unit)
 
@@ -153,8 +178,9 @@ def plan_buckets(layout: ArenaLayout, n_shards: int, *,
         if s.layer_rows % unit or s.row % unit:
             raise ValueError(
                 f"stack {s.name!r} (layer_rows={s.layer_rows}, row={s.row}) "
-                f"is not divisible into {n_shards} aligned slices; rebuild "
-                f"the layout with build_layout(tree, n_shards={n_shards})")
+                f"is not divisible into {n_shards}x{tp_shards} aligned slices; "
+                f"rebuild the layout with build_layout(tree, "
+                f"n_shards={n_shards}, tp_shards={tp_shards})")
         for j in range(s.n_layers):
             add(s.row + j * s.layer_rows, s.layer_rows, "stack", s.name,
                 j, j + 1)
@@ -163,8 +189,9 @@ def plan_buckets(layout: ArenaLayout, n_shards: int, *,
         if rest.row % unit or rest.rows % unit:
             raise ValueError(
                 f"rest region (row={rest.row}, rows={rest.rows}) is not "
-                f"divisible into {n_shards} aligned slices; rebuild the "
-                f"layout with build_layout(tree, n_shards={n_shards})")
+                f"divisible into {n_shards}x{tp_shards} aligned slices; rebuild "
+                f"the layout with build_layout(tree, "
+                f"n_shards={n_shards}, tp_shards={tp_shards})")
         pos = rest.row
         while pos < rest.row + rest.rows:
             take = min(cap, rest.row + rest.rows - pos)
@@ -175,7 +202,7 @@ def plan_buckets(layout: ArenaLayout, n_shards: int, *,
         add(end, layout.rows - end, "pad", grad=False)
 
     assert own == layout.rows // n_shards, (own, layout.rows, n_shards)
-    return BucketPlan(layout, n_shards, tuple(buckets))
+    return BucketPlan(layout, n_shards, tuple(buckets), tp_shards)
 
 
 # ---------------------------------------------------------------------------

@@ -84,9 +84,36 @@ apply updates them in place and emits bf16 WORKING rows, and the param
 all-gather moves those bf16 rows (half the bytes). Params are never
 re-packed from the tree: the fp32 truth never leaves the arena.
 
+Async double-buffered bucket pipeline (OptimizerConfig.zero_async, bucketed
+ZeRO-1 only): instead of hoping XLA overlaps bucket i's fold with bucket
+i+1's reduce-scatter, the schedule is pinned explicitly — bucket i+1's
+pack + reduce-scatter is issued while bucket i's received slice folds, and
+a lax.optimization_barrier orders bucket i+2's pack AFTER bucket i's fold,
+so EXACTLY two gradient buckets are ever live (the serial stream holds
+one; an unpinned unroll lets the scheduler hoist every pack up front).
+launch/hlo_analysis.py measures both halves of the claim from the
+scheduled HLO: `overlap_fraction` (collective payload bytes free to
+overlap compute) and `live_peak_reduce-scatter` (the two-bucket high-water
+mark launch/dryrun.py gates). The ZeRO-1 param all-gather additionally
+moves as a ring of M-1 collective-permutes (`_ring_all_gather`) — same
+bytes and BITWISE the same rows as lax.all_gather, but decomposed into
+point-to-point hops the scheduler can overlap with the apply epilogue.
+Numerics are bitwise identical to the serial bucketed schedule: the
+per-bucket psum_scatter and its reduction order are untouched.
+
 Manual axes = the DP axes ("data", and "pod" when multi-pod); the "model"
 axis (if present in the mesh) is left to GSPMD (auto) so tensor-parallel
-sharding composes.
+sharding composes — on jax >= 0.6 (jax.shard_map). The 0.4.x GSPMD
+partitioner aborts on manual-subgroup shardings through the arena
+collectives, so mixed manual-dp x auto-tp refuses there with the escape
+named (configs/base.py::mesh_capability): fold the tp axis into the
+manual dp product — a 2dp x 2tp ("data", "model") ALL-MANUAL mesh is
+bitwise identical to the flat 4-dp mesh, because the linearized axis
+product gives the same reduce-scatter ring order — or use the pjit
+engine. The linear dp rank used for owned-row indexing and fault
+targeting is an iota INPUT sharded over the dp axes (in_spec P(dp_axes)),
+not lax.axis_index: axis_index lowers to PartitionId, which GSPMD cannot
+partition inside a manual subgroup when auto axes remain.
 """
 from __future__ import annotations
 
@@ -124,6 +151,30 @@ def _shard_map(f, mesh, *, in_specs, out_specs, manual_axes):
                      check_rep=False, auto=auto)
 
 
+def _ring_all_gather(x, axis_names, m: int, rank):
+    """All-gather of per-device row blocks as a ring of m-1 collective-
+    permutes: each step forwards the most recently received block one hop
+    down the ring, so after m-1 steps every device holds every block. The
+    assembled result is BITWISE lax.all_gather(x, axis=0, tiled=True) —
+    blocks move untouched, and the rank-roll restores device order — but
+    the transfer is decomposed into point-to-point hops (HLO
+    collective-permute) that the scheduler can overlap with compute,
+    instead of one blocking gather. `rank` is this device's linear dp
+    index (the sharded iota input; see module docstring)."""
+    if m <= 1:
+        return x
+    axis = axis_names if len(axis_names) > 1 else axis_names[0]
+    perm = [(i, (i - 1) % m) for i in range(m)]
+    blocks = [x]
+    for _ in range(m - 1):
+        blocks.append(lax.ppermute(blocks[-1], axis, perm))
+    # blocks[k] on device d is device (d + k) % m's block: rolling the
+    # stack by d puts block s at position s
+    stacked = jnp.stack(blocks)
+    out = jnp.roll(stacked, rank, axis=0)
+    return out.reshape((m * x.shape[0],) + tuple(x.shape[1:]))
+
+
 def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                        dp_axes: Tuple[str, ...] = ("data",),
                        variant: str = "adama", *, remat=False,
@@ -141,7 +192,17 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
     use_arena = opt.use_pallas and opt.arena
     zero1 = opt.zero_stage == 1
     guarded = opt.finite_guard           # config enforces arena=True
-    from repro.configs.base import grad_wire_dtype
+    from repro.configs.base import grad_wire_dtype, mesh_capability
+    auto_tp = tuple(a for a in mesh.axis_names
+                    if a not in dp_axes and mesh.shape[a] > 1)
+    tp_shards = int(math.prod(mesh.shape[a] for a in auto_tp)) if auto_tp \
+        else 1
+    reason = mesh_capability(
+        opt, tuple(mesh.shape[a] for a in mesh.axis_names),
+        tuple(mesh.axis_names), tp_axis=auto_tp[0] if auto_tp else None,
+        engine="shardmap")
+    if reason is not None:
+        raise ValueError(reason)
     from repro.core.accumulation import is_fp8_wire, use_error_feedback
     wire = grad_wire_dtype(opt.grad_dtype)
     fp8 = is_fp8_wire(opt)
@@ -203,8 +264,13 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             f"moments, while the row-range ZeRO-1 schedule reduce-scatters "
             f"fp32 gradients instead")
 
-    def local_step(params, opt_state, batch):
+    def local_step(params, opt_state, batch, ranks):
         micro = _split_micro(batch, n)
+        # linear dp rank of this shard: ranks is the global iota over the
+        # dp product, sharded P(dp_axes), so the local block is (1,) and
+        # its single element IS the rank (see module docstring for why
+        # lax.axis_index cannot be used here)
+        dev = ranks[0]
 
         if variant == "ga":
             def body(carry, mb):
@@ -244,7 +310,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             lay = opt_state["m"].layout
             rows_own = lay.rows // m_dev
             bucketed = opt.zero_bucketed or variant == "adama_layerwise"
-            plan = (zero1_bucket_plan(lay, m_dev, opt.zero_bucket_rows)
+            plan = (zero1_bucket_plan(lay, m_dev, opt.zero_bucket_rows,
+                                      tp_shards=tp_shards)
                     if bucketed else None)
             scale = 1.0 / (n * m_dev)
             if guarded:
@@ -252,9 +319,6 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                 from repro.train import scaler as scaler_mod
                 dyn = scaler_mod.is_dynamic(opt)
                 gi = opt.scaler_growth_interval
-                dev = jnp.int32(0)
-                for a in dp_axes:
-                    dev = dev * lax.psum(1, a) + lax.axis_index(a)
 
                 def fold_micro_g(st, i, mb, good):
                     # step counter not yet advanced: decay shifts to the
@@ -283,7 +347,9 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                         return layerwise_loss_and_fold(
                             cfg, params, mb, st, beta1=b1, beta2=b2,
                             scale=seed, use_pallas=True, decay=decay,
-                            zero=ZeroStream(plan, dp_axes, rdecay),
+                            zero=ZeroStream(plan, dp_axes, rdecay,
+                                            rank=dev,
+                                            zero_async=opt.zero_async),
                             grad_dtype=wire,
                             fold_scale=jnp.float32(1.0) / sc["scale"],
                             guard=pre)
@@ -329,7 +395,19 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                     ef_scale = sc["scale"] if fp8 else None
                     slabs = []
                     okl = jnp.asarray(True)
+                    window = []     # zero_async: own slices not yet checked
                     for bk in plan.grad_buckets():
+                        if opt.zero_async and len(window) >= 2:
+                            # double-buffered issue: bucket j's pack (and
+                            # fp8 encode) may start once bucket j-2's
+                            # reduce-scatter has landed — the finiteness
+                            # check consumes its result and the barrier
+                            # orders the next pack after it, so at most
+                            # two buckets (one in flight, one encoding)
+                            # are ever live
+                            okl = jnp.logical_and(
+                                okl, jnp.isfinite(window.pop(0)).all())
+                            okl, g = lax.optimization_barrier((okl, g))
                         if fp8:
                             slab = buckets_mod.pack_bucket(
                                 g, lay, bk, dtype=jnp.float32)
@@ -352,6 +430,12 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                                                    scatter_dimension=0,
                                                    tiled=True)
                             slabs.append((own, None, None, None))
+                        if opt.zero_async:
+                            window.append(own)
+                        else:
+                            okl = jnp.logical_and(okl,
+                                                  jnp.isfinite(own).all())
+                    for own in window:      # drain the two-slot window
                         okl = jnp.logical_and(okl,
                                               jnp.isfinite(own).all())
                     ok = lax.psum(1.0 - okl.astype(jnp.float32),
@@ -403,7 +487,9 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                         return layerwise_loss_and_fold(
                             cfg, params, mb, st, beta1=b1, beta2=b2,
                             scale=scale, use_pallas=True, decay=decay,
-                            zero=ZeroStream(plan, dp_axes, rdecay),
+                            zero=ZeroStream(plan, dp_axes, rdecay,
+                                            rank=dev,
+                                            zero_async=opt.zero_async),
                             grad_dtype=wire)
                     l, g = jax.value_and_grad(lambda p: loss(p, mb))(params)
                     if plan is None:
@@ -415,15 +501,40 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                             decay=decay, replicated_decay=rdecay,
                             grad_dtype=wire)
                     st = state_store.begin_micro_state(st, rdecay)
-                    for b in plan.grad_buckets():
-                        slab = buckets_mod.pack_bucket(g, lay, b, dtype=wire)
-                        own = lax.psum_scatter(slab, dp_axes,
-                                               scatter_dimension=0,
-                                               tiled=True)
-                        st = state_store.fold_slice_state(
-                            st, own, b.own_offset, beta1=b1, beta2=b2,
-                            block=b.fold_block, scale=scale, decay=decay,
+                    bks = list(plan.grad_buckets())
+
+                    def issue(bk):
+                        slab = buckets_mod.pack_bucket(g, lay, bk,
+                                                       dtype=wire)
+                        return lax.psum_scatter(slab, dp_axes,
+                                                scatter_dimension=0,
+                                                tiled=True)
+
+                    def fold(st, bk, own):
+                        return state_store.fold_slice_state(
+                            st, own, bk.own_offset, beta1=b1, beta2=b2,
+                            block=bk.fold_block, scale=scale, decay=decay,
                             grad_dtype=wire)
+
+                    if opt.zero_async and len(bks) > 1:
+                        # double-buffered pipeline: bucket j's pack +
+                        # reduce-scatter is issued while bucket j-1's
+                        # received slice folds; the barrier pins bucket
+                        # j+1's pack AFTER bucket j-1's fold, so exactly
+                        # two gradient buckets are ever live. Bitwise
+                        # identical to the serial loop below — same
+                        # psum_scatters, same folds, only scheduling
+                        # freedom changes.
+                        pending = issue(bks[0])
+                        for bk_prev, bk in zip(bks, bks[1:]):
+                            own = issue(bk)
+                            st = fold(st, bk_prev, pending)
+                            st, g = lax.optimization_barrier((st, g))
+                            pending = own
+                        st = fold(st, bks[-1], pending)
+                    else:
+                        for bk in bks:
+                            st = fold(st, bk, issue(bk))
                     return l, st
 
                 def body(carry, xs):
@@ -448,15 +559,21 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                 # gather bytes, and params are never re-packed
                 p_own, state = state_store.apply_master_state(state, **kw)
             else:
-                idx = jnp.int32(0)
-                for a in dp_axes:
-                    idx = idx * lax.psum(1, a) + lax.axis_index(a)
+                idx = dev
                 p_arena = arena_mod.pack(params, lay)
                 p_own = (lax.dynamic_slice_in_dim(p_arena, idx * rows_own,
                                                   rows_own, axis=0)
                          if plan is None else
                          buckets_mod.gather_owned_rows(p_arena, plan, idx))
                 p_own = state_store.apply_state(p_own, state, **kw)
+            def gather_rows(x):
+                # zero_async: ring of M-1 collective-permutes — bitwise
+                # the same rows as all_gather, decomposed into hops the
+                # scheduler can overlap with the apply epilogue
+                if opt.zero_async:
+                    return _ring_all_gather(x, dp_axes, m_dev, dev)
+                return lax.all_gather(x, dp_axes, axis=0, tiled=True)
+
             if fp8:
                 # quantized param all-gather: encode the owned working
                 # rows (no summation — headroom 1), move 1-byte codes plus
@@ -467,11 +584,10 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                                                        fp8_encode_rows)
                 codes, s_col = fp8_encode_rows(p_own.astype(jnp.float32))
                 p_full = fp8_decode_rows(
-                    lax.all_gather(codes, dp_axes, axis=0, tiled=True),
-                    lax.all_gather(s_col, dp_axes, axis=0, tiled=True),
+                    gather_rows(codes), gather_rows(s_col),
                 ).astype(p_own.dtype)
             else:
-                p_full = lax.all_gather(p_own, dp_axes, axis=0, tiled=True)
+                p_full = gather_rows(p_own)
             if plan is not None:        # partition order -> arena order
                 p_full = buckets_mod.unpermute_rows(p_full, plan)
             params = arena_mod.unpack(p_full, lay)
@@ -494,9 +610,6 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
             dyn = scaler_mod.is_dynamic(opt)
             gi = opt.scaler_growth_interval
             lay = opt_state["m"].layout
-            dev = jnp.int32(0)
-            for a in dp_axes:
-                dev = dev * lax.psum(1, a) + lax.axis_index(a)
 
             def body(carry, xs):
                 st, lsum, good = carry
@@ -605,9 +718,10 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                  if zero1 and variant in ("adama", "adama_layerwise")
                  else rep)
         f = _shard_map(local_step, mesh,
-                       in_specs=(rep, ospec, bspec),
+                       in_specs=(rep, ospec, bspec, P(dp_axes)),
                        out_specs=(rep, ospec, rep), manual_axes=dp_axes)
-        return f(params, opt_state, batch)
+        return f(params, opt_state, batch,
+                 jnp.arange(m_dev, dtype=jnp.int32))
 
     def init(params):
         if variant == "ga":
@@ -619,7 +733,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                                   m_codec=opt.m_codec,
                                   n_shards=m_dev if zero1 else 1,
                                   master_params=opt.master_params,
-                                  error_feedback=use_ef)
+                                  error_feedback=use_ef,
+                                  tp_shards=tp_shards if zero1 else 1)
             if opt.master_params and zero1 and \
                     (opt.zero_bucketed or variant == "adama_layerwise"):
                 # the bucketed schedule's resident row order is the
@@ -628,7 +743,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,
                 # — pre-permute it so each shard's rows are its owned
                 # slices in bucket order
                 plan = zero1_bucket_plan(st["m"].layout, m_dev,
-                                         opt.zero_bucket_rows)
+                                         opt.zero_bucket_rows,
+                                         tp_shards=tp_shards)
                 st["p"] = st["p"].with_data(
                     buckets_mod.permute_rows(st["p"].data, plan))
             if opt.finite_guard:

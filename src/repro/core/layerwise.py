@@ -66,10 +66,20 @@ class ZeroStream:
     bucket plan (core/buckets.py), the DP axis names to reduce-scatter
     over, and the replicated-column decay pair (dv pre-divided by the DP
     size so per-shard rowcol column partials psum to the exact global
-    statistic — see core/dp_shardmap.py)."""
+    statistic — see core/dp_shardmap.py). `rank` is the linear dp index as
+    a traced scalar (the sharded-iota input dp_shardmap feeds its
+    local_step) — preferred over lax.axis_index, which lowers to a
+    PartitionId op GSPMD cannot partition under mixed manual/auto meshes.
+    `zero_async` double-buffers the REST-region bucket stream (the stack
+    layers already overlap each reduce-scatter with the next layer's VJP
+    by construction): bucket i+1's pack + reduce-scatter is issued while
+    bucket i's slice folds, barrier-pinned to exactly two live buckets —
+    bitwise identical to the serial stream."""
     plan: Any
     axis_names: Tuple[str, ...]
     replicated_decay: Optional[Tuple] = None
+    rank: Any = None
+    zero_async: bool = False
 
 
 def _fold_tree(m, v, g, beta1, beta2, use_pallas):
@@ -103,6 +113,14 @@ def _lin_index(axis_names):
     for a in axis_names:
         d = d * lax.psum(1, a) + lax.axis_index(a)
     return d
+
+
+def _zero_rank(zero):
+    """The stream's linear dp rank: the pre-sharded iota (zero.rank) when
+    the driver provides it — mandatory under mixed manual/auto meshes,
+    where lax.axis_index's PartitionId cannot be partitioned — else the
+    axis_index fallback for standalone use."""
+    return zero.rank if zero.rank is not None else _lin_index(zero.axis_names)
 
 
 def _fp8_wire_slab(slab, axis_names, ef_c, ef_scale, own_offset, own_rows,
@@ -428,7 +446,7 @@ def _fold_layer(m_c, v_c, dlp, j, spec, lay, beta1, beta2, use_pallas, decay,
         if zero is not None:
             base, lslice, block = zero.plan.stack_slice(spec.name)
             off = base + j * lslice
-            row0 = _lin_index(zero.axis_names) * lslice
+            row0 = _zero_rank(zero) * lslice
             rows = lslice
         else:
             off = spec.row + j * spec.layer_rows
@@ -513,7 +531,7 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
                     continue
                 slab = arena_mod.pack_rest_rows(d_rest, lay, b.start,
                                                 b.stop, dtype=jnp.float32)
-                row0 = _lin_index(zero.axis_names) * b.slice_rows
+                row0 = _zero_rank(zero) * b.slice_rows
                 codes, s_own, slab = _fp8_wire_slab(
                     slab, zero.axis_names, ef_c, ef_scale, b.own_offset,
                     b.slice_rows, row0)
@@ -548,13 +566,15 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
         return ((m_acc, v_acc, ef_c, ok) if ef_c is not None
                 else (m_acc, v_acc, ok))
     if zero is not None:
-        for b in zero.plan.grad_buckets():
-            if b.kind != "rest":
-                continue
+        rbks = [b for b in zero.plan.grad_buckets() if b.kind == "rest"]
+
+        def issue(b):
             slab = arena_mod.pack_rest_rows(d_rest, lay, b.start, b.stop,
                                             dtype=grad_dtype)
-            own = lax.psum_scatter(slab, zero.axis_names,
-                                   scatter_dimension=0, tiled=True)
+            return lax.psum_scatter(slab, zero.axis_names,
+                                    scatter_dimension=0, tiled=True)
+
+        def fold(m_acc, v_acc, ok, b, own):
             if ok is not None:
                 ok = jnp.logical_and(ok,
                                      _agree(jnp.isfinite(own).all(), zero))
@@ -568,6 +588,29 @@ def _fold_rest(m_acc, v_acc, d_rest, lay, beta1, beta2, decay, codec,
                     codec[0], codec[1], m_acc, v_acc, own, b.own_offset,
                     beta1=beta1, beta2=beta2, block=b.fold_block,
                     scale=fold_scale, decay=decay, grad_dtype=grad_dtype)
+            return m_acc, v_acc, ok
+
+        if zero.zero_async and len(rbks) > 1:
+            # double-buffered rest stream (see ZeroStream docstring):
+            # bucket j's reduce-scatter in flight while bucket j-1's
+            # slice folds; the barrier pins bucket j+1's pack behind
+            # bucket j-1's fold — exactly two rest buckets live, and
+            # bitwise the serial stream (same scatters, same folds)
+            pending = issue(rbks[0])
+            for b_prev, b in zip(rbks, rbks[1:]):
+                own = issue(b)
+                m_acc, v_acc, ok = fold(m_acc, v_acc, ok, b_prev, pending)
+                if ok is not None:
+                    m_acc, v_acc, ok, d_rest = lax.optimization_barrier(
+                        (m_acc, v_acc, ok, d_rest))
+                else:
+                    m_acc, v_acc, d_rest = lax.optimization_barrier(
+                        (m_acc, v_acc, d_rest))
+                pending = own
+            m_acc, v_acc, ok = fold(m_acc, v_acc, ok, rbks[-1], pending)
+        else:
+            for b in rbks:
+                m_acc, v_acc, ok = fold(m_acc, v_acc, ok, b, issue(b))
         return (m_acc, v_acc, ok) if guard_ok is not None \
             else (m_acc, v_acc)
     g2 = arena_mod.pack_rest(d_rest, lay, dtype=grad_dtype)

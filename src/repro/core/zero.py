@@ -112,16 +112,19 @@ def shard_rows(layout, n_shards: int) -> Tuple[RowShard, ...]:
     return tuple(RowShard(k, k * per, per) for k in range(n_shards))
 
 
-def zero1_bucket_plan(layout, n_shards: int, max_bucket_rows: int = 0):
+def zero1_bucket_plan(layout, n_shards: int, max_bucket_rows: int = 0,
+                      tp_shards: int = 1):
     """Bucket schedule over a row-range-sharded arena (the shard_map DP
     engine's default ZeRO-1 form): per-layer buckets for the stacked
     regions, size-capped buckets for the rest region. `max_bucket_rows=0`
-    uses core/buckets.py's default cap. Raises ValueError (same contract as
-    shard_rows) when the layout was not built with
-    build_layout(tree, n_shards=...)."""
+    uses core/buckets.py's default cap. `tp_shards > 1` plans mesh-aware
+    for a dp×tp mesh (buckets cut so every dp slice splits along tp too).
+    Raises ValueError (same contract as shard_rows) when the layout was
+    not built with build_layout(tree, n_shards=..., tp_shards=...)."""
     from repro.core.buckets import plan_buckets
     return plan_buckets(layout, n_shards,
-                        max_bucket_rows=max_bucket_rows or None)
+                        max_bucket_rows=max_bucket_rows or None,
+                        tp_shards=tp_shards)
 
 
 def zero1_arena_pspec(layout, mesh, axes: Tuple[str, ...]) -> P:

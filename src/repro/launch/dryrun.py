@@ -148,11 +148,20 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
             # the bucketed stream, regardless of zero_bucketed
             if opt.zero_bucketed or variant == "adama_layerwise":
                 plan = zero1_bucket_plan(lay, dp_size, opt.zero_bucket_rows)
-                info["zero_schedule"] = "bucketed"
+                info["zero_schedule"] = ("async_double_buffered"
+                                         if opt.zero_async else "bucketed")
                 # budget in WIRE bytes: grad_dtype=bf16 halves the slab
                 info["grad_peak_budget_bytes"] = \
                     plan.grad_peak_bytes(wire_bytes)
                 info["n_grad_buckets"] = len(plan.grad_buckets())
+                # LIVE budget: at most TWO buckets of gradient slab may be
+                # in flight at once — one folding, one reduce-scattering
+                # (the double-buffered pipeline's invariant; the serial
+                # stream holds one, an unpinned unroll would let XLA hoist
+                # every pack and blow straight past this). Post-opt CPU HLO
+                # re-widens bf16 wires to f32, so the budget uses fp32
+                # itemsize as the backend-safe upper bound.
+                info["grad_live_budget_bytes"] = 2 * plan.grad_peak_bytes(4)
                 if opt.grad_dtype == "fp8_e4m3":
                     # per-bucket (rows, 1) fp32 scale columns: the fp8
                     # wire's metadata overhead per micro-batch
@@ -162,6 +171,11 @@ def build_lowered(arch: str, shape_name: str, mesh, *, engine="pjit",
                 info["zero_schedule"] = "full_pack"
                 info["grad_peak_budget_bytes"] = lay.rows * LANES * wire_bytes
         if info is not None:
+            # the mesh the program was built against, so roofline/compare
+            # tooling can separate flat-dp artifacts from dp×tp ones
+            info["mesh_shape"] = [int(mesh.shape[a])
+                                  for a in mesh.axis_names]
+            info["mesh_axes"] = list(mesh.axis_names)
             # measured optimizer-state footprint (the Table-3 row): global
             # bytes of the abstract state the engine allocates, and the
             # per-device share computed from the ACTUAL sharding specs —
@@ -269,6 +283,8 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
                 tag += f"__m-{v['m_codec']}"
         if k == "extra_opt" and v and not v.get("zero_bucketed", True):
             tag += "__fullpack"
+        if k == "extra_opt" and v and v.get("zero_async"):
+            tag += "__async"
         if k == "extra_opt" and v and v.get("grad_dtype", "fp32") != "fp32":
             tag += f"__wire-{v['grad_dtype']}"
             if v["grad_dtype"] == "fp8_e4m3" and \
@@ -328,14 +344,33 @@ def run_one(arch, shape_name, multi_pod, outdir, **kw):
     rs_peak = hlo_wire.get("maxop_reduce-scatter", 0.0) or \
         hlo.get("maxop_reduce-scatter", 0.0)
     info["grad_rs_peak_bytes"] = rs_peak
+    # schedule-level overlap metric (post-opt HLO is scheduled): fraction
+    # of collective payload bytes the schedule lets run concurrently with
+    # compute — the async pipeline's raison d'être (step_bench gates it >0)
+    info["overlap_fraction"] = round(hlo.get("overlap_fraction", 0.0), 4)
+    info["grad_rs_live_peak_bytes"] = hlo.get("live_peak_reduce-scatter", 0.0)
+    bucketed_run = info.get("zero_schedule") in ("bucketed",
+                                                 "async_double_buffered")
     budget = info.get("grad_peak_budget_bytes")
-    if info.get("zero_schedule") == "bucketed" and budget is not None \
+    if bucketed_run and budget is not None \
             and info.get("grad_peak_strict") and rs_peak > budget:
         rec = {"tag": tag, "status": "GRAD_PEAK_FAIL",
                "error": (f"bucketed ZeRO-1 reduce-scatter operand peak "
                          f"{rs_peak:.0f} B exceeds the max-bucket budget "
                          f"{budget} B — the schedule is packing more than "
                          f"one bucket at a time")}
+        _write(outdir, tag, rec)
+        return rec
+    live_budget = info.get("grad_live_budget_bytes")
+    live_peak = info["grad_rs_live_peak_bytes"]
+    if bucketed_run and live_budget is not None \
+            and info.get("grad_peak_strict") and live_peak > live_budget:
+        rec = {"tag": tag, "status": "GRAD_PEAK_FAIL",
+               "error": (f"scheduled live reduce-scatter operand peak "
+                         f"{live_peak:.0f} B exceeds the two-bucket budget "
+                         f"{live_budget} B — more than two gradient "
+                         f"buckets are in flight at once (the pipeline's "
+                         f"barrier pinning is not holding)")}
         _write(outdir, tag, rec)
         return rec
     n_dev = 512 if multi_pod else 256
@@ -409,6 +444,12 @@ def main():
     ap.add_argument("--zero-bucket-rows", type=int, default=0,
                     help="rest-region bucket cap in arena rows for the "
                          "bucketed ZeRO-1 schedule (0 = default)")
+    ap.add_argument("--zero-async", action="store_true",
+                    help="explicit double-buffered bucket pipeline: bucket "
+                         "i+1's pack+reduce-scatter issued while bucket i "
+                         "folds, barrier-pinned to two live buckets "
+                         "(bitwise-identical numerics; requires the "
+                         "bucketed ZeRO-1 schedule)")
     ap.add_argument("--grad-dtype", default="fp32", choices=list(GRAD_DTYPES),
                     help="gradient WIRE dtype of the arena fold pipeline: "
                          "bf16 halves the packed slab and every gradient "
@@ -457,6 +498,12 @@ def main():
         extra_opt = dict(extra_opt or {},
                          zero_bucketed=not args.zero_full_pack,
                          zero_bucket_rows=args.zero_bucket_rows)
+    if args.zero_async:
+        # zero_async is only defined over the bucketed ZeRO-1 schedule, so
+        # the flag implies zero_stage=1 + arena (config validation refuses
+        # the combo otherwise)
+        extra_opt = dict(extra_opt or {}, arena=True, zero_async=True,
+                         zero_stage=1)
     kw = dict(engine=args.engine, accum=args.accum,
               micro_batches=args.micro_batches, fsdp=not args.no_fsdp,
               remat=not args.no_remat, zero1=args.zero1,

@@ -60,7 +60,44 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
                "bitcast", "after-all", "partition-id", "replica-id", "iota"}
+# Ops that represent real work for overlap purposes: a collective only
+# "overlaps compute" if one of these can run while it is in flight.
+# Post-fusion HLO hides almost all elementwise work inside `fusion` ops,
+# so this small set covers the compute the scheduler actually moves.
+_COMPUTE_OPS = {"fusion", "dot", "convolution", "custom-call", "reduce",
+                "scatter", "sort", "while", "conditional", "call"}
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _coll_kind(op: str):
+    """Collective kind for an op name, folding the async `-start` spelling
+    onto its sync kind; `-done` halves return None (counting both would
+    double-count the pair)."""
+    if op.endswith("-done"):
+        return None
+    base = op[:-6] if op.endswith("-start") else op
+    return base if base in _COLLECTIVES else None
+
+
+def _payload_dims(rtype: str, op: str):
+    """(dtype, dims) of a collective's transferred payload. Sync ops: the
+    whole result. Async `-start` ops: the result is an (operand, result,
+    context...) tuple — the payload is the LAST data element, but
+    collective-permute-start appends u32[] context scalars AFTER it, so
+    trailing integer scalars must be stripped first (taking shapes[-1]
+    blindly attributes 4 bytes to a megabyte permute)."""
+    shapes = _shape_dims(rtype)
+    if op.endswith("-start") and len(shapes) > 1:
+        payload = list(shapes)
+        while (len(payload) > 1 and not payload[-1][1]
+               and payload[-1][0] in ("u32", "s32", "u64", "s64")):
+            payload.pop()
+        return [payload[-1]]
+    return shapes
+
+
+def _payload_bytes(rtype: str, op: str) -> int:
+    return sum(_dims_bytes(dt, dims) for dt, dims in _payload_dims(rtype, op))
 
 
 def _operand_names(line: str):
@@ -118,6 +155,12 @@ def _group_size(line: str) -> int:
 
 
 def _ring_factor(kind: str, n: int) -> float:
+    # collective-permute carries source_target_pairs, NOT replica_groups, so
+    # _group_size reads n=1 for it — but each device moves the full payload
+    # once regardless of pairing, so the factor is 1 unconditionally (the
+    # n<=1 guard below would silently zero every ppermute's wire bytes).
+    if kind == "collective-permute":
+        return 1.0
     if n <= 1:
         return 0.0
     if kind == "all-reduce":
@@ -196,17 +239,10 @@ class HloAnalysis:
             stack.add(comp)
             table = self.symbols[comp]
             for var, rtype, op, operands, line in self.ops[comp]:
-                kind = op[:-6] if op.endswith("-start") else op
-                if kind in _COLLECTIVES:
+                kind = _coll_kind(op)
+                if kind is not None:
                     n = _group_size(line)
-                    shapes = _shape_dims(rtype)
-                    if op.endswith("-start") and len(shapes) > 1:
-                        # async start: result type is the (operand, result)
-                        # pair — the collective's payload is the LAST
-                        # element, not the whole tuple
-                        b = _dims_bytes(*shapes[-1])
-                    else:
-                        b = _shape_bytes(rtype)
+                    b = _payload_bytes(rtype, op)
                     res[f"coll_{kind}"] += mult * b * _ring_factor(kind, n)
                     res[f"coll_{kind}_raw"] += mult * b
                     # peak LIVE operand bytes of any single collective of
@@ -253,7 +289,100 @@ class HloAnalysis:
         res["coll_total"] = sum(v for k, v in res.items()
                                 if k.startswith("coll_") and
                                 not k.endswith("_raw") and k != "coll_total")
+        self._overlap_and_liveness(res)
         return dict(res)
+
+    # ------------------------------------------------------------------
+    def _overlap_and_liveness(self, res: Dict[str, float]) -> None:
+        """Two schedule-level metrics over every computation (post-opt HLO
+        is scheduled: instruction text order IS the schedule order).
+
+        `overlap_fraction` — fraction of collective payload bytes that
+        overlap compute. Two tiers, per collective:
+
+          * async `-start`/`-done` pairs (TPU/GPU backends): REAL overlap —
+            at least one _COMPUTE_OPS instruction is scheduled strictly
+            between the start and its matching done.
+          * sync collectives (XLA CPU emits no async pairs): overlap
+            CAPACITY by dependency slack — at least one _COMPUTE_OPS
+            instruction in the same computation is neither an ancestor nor
+            a descendant of the collective, i.e. the program left the
+            scheduler free to run it concurrently. A sync backend executes
+            the collective atomically regardless, so on CPU this reads as
+            "what the schedule permits", which is what the double-buffered
+            pipeline is shaped to maximize.
+
+        `live_peak_<kind>` — high-water mark of SIMULTANEOUSLY LIVE
+        collective operand bytes per kind, from the schedule: each operand
+        of a kind-k collective is live from its defining instruction to
+        the collective (to the `-done` for async pairs); sweep the sum.
+        For reduce-scatter under the bucketed ZeRO-1 schedule this counts
+        how many gradient buckets the schedule keeps in flight at once —
+        the serial stream holds one, the double-buffered pipeline exactly
+        two, and an unpinned unroll lets XLA hoist every pack up front
+        (launch/dryrun.py gates it at two buckets)."""
+        total = 0.0
+        overlapped = 0.0
+        live_peaks: Dict[str, float] = defaultdict(float)
+        for comp, ops in self.ops.items():
+            table = self.symbols[comp]
+            pos = {entry[0]: i for i, entry in enumerate(ops)}
+            users: Dict[str, list] = defaultdict(list)
+            for i, (_, _, _, operands, _) in enumerate(ops):
+                for o in operands:
+                    users[o].append(i)
+
+            def reach(i, up: bool):
+                seen = set()
+                work = [i]
+                while work:
+                    j = work.pop()
+                    nxt = ([pos[o] for o in ops[j][3] if o in pos] if up
+                           else users.get(ops[j][0], []))
+                    for k in nxt:
+                        if k not in seen:
+                            seen.add(k)
+                            work.append(k)
+                return seen
+
+            events: Dict[str, Dict[int, float]] = defaultdict(
+                lambda: defaultdict(float))
+            for i, (var, rtype, op, operands, line) in enumerate(ops):
+                kind = _coll_kind(op)
+                if kind is None:
+                    continue
+                b = float(_payload_bytes(rtype, op))
+                total += b
+                if op.endswith("-start"):
+                    done = next((j for j in users.get(var, [])
+                                 if ops[j][2].endswith("-done")), i)
+                    if any(ops[j][2] in _COMPUTE_OPS
+                           for j in range(i + 1, done)):
+                        overlapped += b
+                    end = done
+                else:
+                    anc = reach(i, up=True)
+                    desc = reach(i, up=False)
+                    if any(entry[2] in _COMPUTE_OPS and j not in anc
+                           and j not in desc
+                           for j, entry in enumerate(ops)):
+                        overlapped += b
+                    end = i
+                ev = events[kind]
+                for o in set(operands):
+                    ob = float(_shape_bytes(table.get(o, "")))
+                    if not ob:
+                        continue
+                    ev[pos.get(o, 0)] += ob
+                    ev[end + 1] -= ob
+            for kind, ev in events.items():
+                live = 0.0
+                for t in sorted(ev):
+                    live += ev[t]
+                    key = f"live_peak_{kind}"
+                    live_peaks[key] = max(live_peaks[key], live)
+        res["overlap_fraction"] = overlapped / total if total else 0.0
+        res.update(live_peaks)
 
 
 def analyze_hlo(text: str) -> Dict[str, float]:

@@ -57,6 +57,13 @@ def main():
     ap.add_argument("--zero-bucket-rows", type=int, default=0,
                     help="rest-region bucket cap in arena rows for the "
                          "bucketed ZeRO-1 schedule (0 = default cap)")
+    ap.add_argument("--zero-async", action="store_true",
+                    help="async double-buffered bucket pipeline: bucket "
+                         "i+1's pack + reduce-scatter issued while bucket "
+                         "i folds, pinned to two live buckets (consulted "
+                         "by the shard_map DP engine like --zero-full-pack;"
+                         " inert in this pjit loop); requires --zero-stage "
+                         "1 --arena and the bucketed schedule")
     ap.add_argument("--grad-dtype", default="fp32", choices=list(GRAD_DTYPES),
                     help="gradient WIRE dtype of the arena fold pipeline "
                          "(bf16 halves the packed gradient slab and every "
@@ -119,6 +126,7 @@ def main():
             zero_stage=args.zero_stage,
             zero_bucketed=not args.zero_full_pack,
             zero_bucket_rows=args.zero_bucket_rows,
+            zero_async=args.zero_async,
             grad_dtype=args.grad_dtype,
             error_feedback=not args.no_error_feedback,
             master_params=args.master_params,

@@ -12,31 +12,48 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 _MESH = contextvars.ContextVar("repro_mesh", default=None)
 _DP = contextvars.ContextVar("repro_dp_axes", default=())
 _MANUAL = contextvars.ContextVar("repro_manual_axes", default=())
+_TP = contextvars.ContextVar("repro_tp_axis", default=None)
 
 
 @contextlib.contextmanager
 def use_mesh(mesh, dp_axes: Tuple[str, ...],
-             manual_axes: Tuple[str, ...] = ()):
+             manual_axes: Tuple[str, ...] = (),
+             tp_axis: Optional[str] = None):
     """Install mesh + dp axes for `maybe_shard`. `manual_axes`: axes a
     surrounding shard_map holds MANUAL — with_sharding_constraint inside
     the manual region may not reference them (jax raises "Axis ... is also
     found in manual_axes"), so maybe_shard silently drops them from every
     constraint it emits. Under the pure-DP shard_map profile every mesh
     axis is manual and the constraints degrade to no-ops, which is correct:
-    the values they would pin are already device-local."""
+    the values they would pin are already device-local.
+
+    `tp_axis` composes the logical axes onto a 2D dp×tp mesh: the "tp"
+    sentinel in maybe_shard specs resolves to it. In the MIXED manual-dp ×
+    auto-tp regime (shard_map manual over dp_axes only), the manual filter
+    above drops exactly the dp axes from each constraint and KEEPS the tp
+    entries — the surviving constraint is what GSPMD needs to keep the
+    auto-TP param sharding pinned inside the manual region. With no tp_axis
+    installed the "tp" sentinel degrades to None (replicated), keeping
+    model code mesh-agnostic."""
     t1 = _MESH.set(mesh)
     t2 = _DP.set(tuple(dp_axes))
     t3 = _MANUAL.set(tuple(manual_axes))
+    t4 = _TP.set(tp_axis)
     try:
         yield
     finally:
         _MESH.reset(t1)
         _DP.reset(t2)
         _MANUAL.reset(t3)
+        _TP.reset(t4)
 
 
 def dp_axes() -> Tuple[str, ...]:
     return _DP.get()
+
+
+def tp_axis() -> Optional[str]:
+    return _TP.get()
 
 
 def shard_attention_operand(x):
@@ -60,11 +77,14 @@ def shard_attention_operand(x):
 
 def maybe_shard(x, *spec_entries):
     """Constrain `x` to P(*spec_entries) if a mesh is installed. Entries may
-    include the sentinel "dp" which expands to the installed dp axes."""
+    include the sentinels "dp" (expands to the installed dp axes) and "tp"
+    (expands to the installed tp axis, or None when the mesh has no tensor
+    axis — logical-axis specs compose onto any mesh shape)."""
     mesh = _MESH.get()
     if mesh is None:
         return x
-    entries = tuple(_DP.get() if e == "dp" else e for e in spec_entries)
+    entries = tuple(_DP.get() if e == "dp" else
+                    _TP.get() if e == "tp" else e for e in spec_entries)
     entries = tuple(None if e == () else e for e in entries)
     # an axis may appear only once in a PartitionSpec: when the dp group
     # already covers "model" (pure-DP profile) drop later duplicates

@@ -37,6 +37,16 @@ class Rules:
     models whose p+m+v fit one chip: it trades the per-layer TP activation
     all-reduces (O(L*N*B*S*D)) for one grad/state all-reduce per step
     (O(P)) — a 10-20x collective cut on <10B models (EXPERIMENTS.md §Perf).
+
+    profile="dp_tp": the MIXED manual-dp × auto-tp composition — the
+    shard_map ZeRO-1 engine holds the dp axes manual (row-sharded states,
+    bucketed reduce-scatters) while GSPMD auto-shards params/activations
+    over `tp_axis` only. FSDP is disabled (the manual schedule owns the dp
+    dimension of the state; double-sharding d_model over dp would fight
+    it), `dp_axes()` excludes the tp axis, and batch shards over dp only.
+    Gated by configs/base.py::mesh_capability — on jax < 0.6 the mixed
+    regime is refused and the escape is folding tp into the manual dp
+    product (profile="dp" on the same 2D mesh, bitwise-equal to flat dp).
     """
 
     def __init__(self, cfg: ModelConfig, mesh, *, tp_axis="model",
@@ -48,6 +58,8 @@ class Rules:
         if profile == "dp":
             tp_axis = None      # params FSDP over "data" (if fsdp=True),
                                 # batch over every axis, states ZeRO-1
+        if profile == "dp_tp":
+            fsdp = False        # dp rows belong to the manual schedule
         self.tp = tp_axis if (tp_axis and tp_axis in mesh.shape) else None
         self.fsdp = fsdp_axis if (fsdp and fsdp_axis in mesh.shape) else None
         tp_size = mesh.shape.get(self.tp, 1) if self.tp else 1
@@ -194,7 +206,7 @@ class Rules:
         from repro.core.state_store import is_arena_backed, row_indexed_mask
         if is_arena_backed(abstract_opt.get("m")):
             from repro.core.zero import zero1_arena_pspec
-            if zero1 or self.profile == "dp":
+            if zero1 or self.profile in ("dp", "dp_tp"):
                 spec = zero1_arena_pspec(abstract_opt["m"].layout, self.mesh,
                                          self.dp_axes() or ("data",))
             else:
@@ -216,7 +228,7 @@ class Rules:
                      jax.tree.map(lambda _: P(), abstract_opt[k]))
                     for k in abstract_opt}
         pspecs = self.params_pspecs(abstract_params)
-        if self.profile == "dp":
+        if self.profile in ("dp", "dp_tp"):
             zero1 = True
 
         def mirror(sub):
@@ -248,6 +260,9 @@ class Rules:
         if self.profile == "dp":
             return tuple(a for a in ("pod", "data", "model")
                          if a in self.mesh.shape)
+        if self.profile == "dp_tp":
+            return tuple(a for a in ("pod", "data", "model")
+                         if a in self.mesh.shape and a != self.tp)
         return tuple(a for a in ("pod", "data") if a in self.mesh.shape)
 
     def batch_pspecs(self, abstract_batch):

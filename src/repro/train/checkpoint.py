@@ -123,8 +123,35 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(steps[-1].name.split("_")[1]) if steps else None
 
 
+def _adapt_rows(arr: np.ndarray, ref, i: int) -> np.ndarray:
+    """Elastic-restore row negotiation for one leaf: the canonical arena
+    layouts of two shard counts differ only in zero tail-padding rows, so
+    a leading-dim-only mismatch pads up with zeros or truncates down after
+    proving the dropped tail IS zeros. Anything else is a real layout
+    difference and raises."""
+    if arr.ndim != len(ref.shape) or arr.ndim < 1 or \
+            tuple(arr.shape[1:]) != tuple(ref.shape[1:]):
+        raise ValueError(
+            f"elastic restore: leaf {i} differs beyond the row dim "
+            f"({arr.shape} vs {tuple(ref.shape)}) — not a shard-count "
+            f"padding difference; the layouts disagree in content")
+    need = int(ref.shape[0])
+    have = int(arr.shape[0])
+    if need > have:
+        pad = np.zeros((need - have,) + arr.shape[1:], arr.dtype)
+        return np.concatenate([arr, pad], axis=0)
+    tail = arr[need:]
+    if np.any(tail.view(np.uint8) if tail.dtype == jnp.bfloat16 else tail):
+        raise ValueError(
+            f"elastic restore: leaf {i} would drop {have - need} non-zero "
+            f"tail rows ({arr.shape} -> {tuple(ref.shape)}) — the saved "
+            f"layout's extra rows carry real state, not padding; refusing "
+            f"a lossy reshard")
+    return arr[:need]
+
+
 def restore(ckpt_dir: str, step: int, abstract_tree: Any,
-            bucket_plan=None) -> Any:
+            bucket_plan=None, elastic: bool = False) -> Any:
     """Restore onto an abstract tree (structure/shapes/dtypes validated).
 
     The recorded `str(treedef)` is compared against the target tree's: for
@@ -135,7 +162,22 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
 
     `bucket_plan`: the restored tree is headed INTO a bucketed ZeRO-1 run —
     the canonical (arena-order) checkpoint is re-permuted to the schedule's
-    partition-order residency after reading (`buckets.permute_state`)."""
+    partition-order residency after reading (`buckets.permute_state`).
+
+    `elastic=True`: accept a checkpoint saved under a DIFFERENT shard
+    count / bucket plan. The on-disk format is always canonical arena
+    order, so resharding is purely a row-count negotiation: two layouts of
+    the same param tree differ only in the zero tail padding
+    `build_layout(tree, n_shards=...)` appends, so a row-indexed leaf
+    whose trailing dims match is zero-PADDED up to the target row count,
+    or TRUNCATED down after verifying the dropped tail is all zeros (a
+    non-zero tail means the layouts differ in content, not padding — that
+    stays a hard error). The treedef equality check is relaxed to leaf
+    count + per-leaf adapted shapes (region names are still matched
+    exactly); everything else — checksums, dtypes — validates as usual.
+    Combined with `bucket_plan` this resumes e.g. a 4-shard bucketed run
+    as 2-shard: read canonical rows, adapt the tail, re-permute under the
+    NEW plan — bitwise for every non-padding row."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     try:
         with open(d / "structure.json") as f:
@@ -185,13 +227,15 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
     if len(leaves) != info["n_leaves"]:
         raise ValueError(f"leaf count mismatch: tree {len(leaves)} vs "
                          f"checkpoint {info['n_leaves']}")
-    if info.get("treedef") not in (None, str(treedef)):
+    if not elastic and info.get("treedef") not in (None, str(treedef)):
         raise ValueError(
             f"tree structure mismatch restoring step {step}:\n"
             f"  checkpoint: {info['treedef']}\n"
             f"  target:     {treedef}\n"
             f"(same leaf count but different structure/aux — e.g. a "
-            f"different state codec or arena layout)")
+            f"different state codec or arena layout; a row-count-only "
+            f"mismatch from a different ZeRO shard count can resume with "
+            f"restore(..., elastic=True))")
     out = []
     for i, ref in enumerate(leaves):
         arr = data[f"a{i}"]
@@ -199,8 +243,11 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
         if dt == "bfloat16":
             arr = arr.view(jnp.bfloat16)
         if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"shape mismatch at leaf {i}: "
-                             f"{arr.shape} vs {ref.shape}")
+            if elastic:
+                arr = _adapt_rows(arr, ref, i)
+            else:
+                raise ValueError(f"shape mismatch at leaf {i}: "
+                                 f"{arr.shape} vs {ref.shape}")
         out.append(jnp.asarray(arr))
     tree = jax.tree.unflatten(treedef, out)
     if bucket_plan is not None:

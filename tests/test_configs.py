@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs.base import (ACCUM_ENGINES, GRAD_DTYPES, M_CODECS,
                                 STATE_CODECS, ZERO_STAGES, OptimizerConfig,
-                                optimizer_capability,
+                                mesh_capability, optimizer_capability,
                                 validate_optimizer_config)
 
 
@@ -219,3 +219,137 @@ def test_validate_raises_exactly_when_capability_says_so():
     bad = _mk(state_codec="int8", arena=False)
     with pytest.raises(ValueError):
         validate_optimizer_config(bad)
+
+
+# ---------------------------------------------------------------------------
+# zero_async: the double-buffered bucket pipeline's capability row
+# ---------------------------------------------------------------------------
+
+def test_zero_async_requires_zero1():
+    reason = optimizer_capability(_mk(zero_async=True, arena=True,
+                                      use_pallas=True))
+    assert "zero_stage=1" in reason
+
+
+def test_zero_async_requires_arena():
+    reason = optimizer_capability(_mk(zero_async=True, zero_stage=1))
+    assert "arena=True" in reason
+
+
+def test_zero_async_requires_a_bucketed_schedule():
+    reason = optimizer_capability(_mk(name="adama", accumulation="adama",
+                                      zero_async=True, zero_stage=1,
+                                      arena=True, use_pallas=True,
+                                      zero_bucketed=False))
+    assert "bucketed" in reason
+    # the layerwise stream IS a bucketed schedule (one bucket per layer):
+    # zero_bucketed=False composes with it
+    opt = _mk(name="adama", accumulation="adama_layerwise", zero_async=True,
+              zero_stage=1, arena=True, use_pallas=True, zero_bucketed=False)
+    assert optimizer_capability(opt) is None
+
+
+@pytest.mark.parametrize("m_codec", M_CODECS)
+@pytest.mark.parametrize("codec", STATE_CODECS)
+@pytest.mark.parametrize("engine", ("adama", "adama_layerwise"))
+@pytest.mark.parametrize("gdt", GRAD_DTYPES)
+def test_full_matrix_zero_async(m_codec, codec, engine, gdt):
+    """zero_async composes with every codec pair, both AdamA fold engines,
+    and every gradient wire dtype over bucketed ZeRO-1 — the pipeline
+    reorders WHEN each bucket's reduce-scatter is issued, never WHAT flows
+    through it, so it is orthogonal to codecs and wire dtypes."""
+    opt = OptimizerConfig(
+        name="adama", accumulation=engine, arena=True, use_pallas=True,
+        state_codec=codec, m_codec=m_codec, zero_stage=1, zero_async=True,
+        grad_dtype=gdt,
+        finite_guard=(gdt == "fp8_e4m3"))
+    assert optimizer_capability(opt) is None
+
+
+def test_matrix_exhaustive_with_zero_async_never_crashes():
+    """The exhaustive totality sweep, zero_async dimension included."""
+    for codec, zero, engine, arena, gdt, azync, bucketed in \
+            itertools.product(STATE_CODECS, ZERO_STAGES, ACCUM_ENGINES,
+                              (False, True), GRAD_DTYPES, (False, True),
+                              (False, True)):
+        reason = optimizer_capability(_mk(
+            name="adama", accumulation=engine, state_codec=codec,
+            zero_stage=zero, arena=arena, use_pallas=arena, grad_dtype=gdt,
+            zero_async=azync, zero_bucketed=bucketed))
+        assert reason is None or isinstance(reason, str)
+
+
+# ---------------------------------------------------------------------------
+# mesh_capability: the dp x tp mesh-composition matrix
+# ---------------------------------------------------------------------------
+
+def _good_opt(**kw):
+    return _mk(name="adama", accumulation=kw.pop("accumulation", "adama"),
+               arena=True, use_pallas=True, zero_stage=1, **kw)
+
+
+def test_mesh_flat_dp_always_composes():
+    assert mesh_capability(_good_opt(), (4,), ("data",),
+                           tp_axis=None) is None
+
+
+def test_mesh_multiaxis_manual_dp_product_composes():
+    """A 2x2 'data' x 'model' mesh with BOTH axes manual dp is the pure-DP
+    profile — supported everywhere, bitwise equal to flat 4dp."""
+    assert mesh_capability(_good_opt(), (2, 2), ("data", "model"),
+                           tp_axis=None) is None
+
+
+def test_mesh_tp_size_one_degrades_to_pure_dp():
+    assert mesh_capability(_good_opt(), (4, 1), ("data", "model"),
+                           tp_axis="model") is None
+
+
+def test_mesh_pjit_engine_accepts_any_tp():
+    assert mesh_capability(_good_opt(), (2, 2), ("data", "model"),
+                           tp_axis="model", engine="pjit") is None
+
+
+def test_mesh_mixed_auto_tp_gated_on_jax_version():
+    import jax
+    reason = mesh_capability(_good_opt(), (2, 2), ("data", "model"),
+                             tp_axis="model", engine="shardmap")
+    if not hasattr(jax, "shard_map"):
+        # jax < 0.6: refusal must name BOTH escapes
+        assert "jax >= 0.6" in reason
+        assert "manual dp product" in reason and "pjit" in reason
+    else:
+        assert reason is None
+
+
+def test_mesh_mixed_auto_tp_refuses_master_params_on_any_jax():
+    import jax
+    if not hasattr(jax, "shard_map"):
+        pytest.skip("jax < 0.6: mixed mode refuses earlier, on the version")
+    reason = mesh_capability(_good_opt(master_params=True), (2, 2),
+                             ("data", "model"), tp_axis="model")
+    assert "master_params" in reason
+
+
+def test_mesh_malformed_inputs_name_the_problem():
+    assert "disagree in rank" in mesh_capability(
+        _good_opt(), (2, 2), ("data",), tp_axis=None)
+    assert "not a mesh axis" in mesh_capability(
+        _good_opt(), (4,), ("data",), tp_axis="model")
+    assert "unknown engine" in mesh_capability(
+        _good_opt(), (4,), ("data",), tp_axis=None, engine="xmap")
+
+
+def test_mesh_matrix_exhaustive_never_crashes():
+    """mesh_capability is total over tp_axis x engine x codec x grad_dtype
+    x master_params on both 1D and 2D meshes: None or str, never raises."""
+    meshes = (((4,), ("data",)), ((2, 2), ("data", "model")),
+              ((1, 4), ("data", "model")))
+    for (shape, axes), tp, engine, codec, gdt, master in itertools.product(
+            meshes, (None, "model", "data"), ("pjit", "shardmap"),
+            STATE_CODECS, GRAD_DTYPES, (False, True)):
+        reason = mesh_capability(
+            _good_opt(state_codec=codec, grad_dtype=gdt,
+                      master_params=master),
+            shape, axes, tp_axis=tp, engine=engine)
+        assert reason is None or isinstance(reason, str)

@@ -206,3 +206,129 @@ ENTRY %main (p0: f32[64,8]) -> f32[16,8] {
     # (operand, result) tuple, and the -done op adds nothing
     assert res["coll_reduce-scatter_raw"] == 16 * 8 * 4
     assert res["coll_reduce-scatter"] == 16 * 8 * 4 * 3  # ring (n-1)=3
+
+
+def test_collective_permute_counted_without_replica_groups():
+    """collective-permute carries `source_target_pairs`, NOT
+    `replica_groups` — a group-size-driven ring factor reads n=1 there and
+    silently zeroes every ppermute's wire bytes (exactly the collective the
+    async pipeline's ring all-gather emits). Each device moves the full
+    payload once regardless of pairing: factor 1."""
+    txt = """
+ENTRY %main (p0: f32[16,8]) -> f32[16,8] {
+  %p0 = f32[16,8] parameter(0)
+  ROOT %cp = f32[16,8] collective-permute(%p0), source_target_pairs={{0,3},{1,0},{2,1},{3,2}}
+}
+"""
+    res = analyze_hlo(txt)
+    assert res["coll_collective-permute"] == 16 * 8 * 4
+    assert res["coll_collective-permute_raw"] == 16 * 8 * 4
+    assert res["maxop_collective-permute"] == 16 * 8 * 4
+
+
+def test_collective_permute_start_strips_context_scalars():
+    """collective-permute-start's result tuple appends u32[] context
+    scalars AFTER the payload ((operand, result, u32[], u32[]) on TPU) — a
+    blind `shapes[-1]` would attribute 4 bytes to a megabyte permute. The
+    trailing integer scalars must be stripped and the LAST data shape
+    taken; the -done half adds nothing."""
+    txt = """
+ENTRY %main (p0: f32[16,8]) -> f32[16,8] {
+  %p0 = f32[16,8] parameter(0)
+  %cps = (f32[16,8], f32[16,8], u32[], u32[]) collective-permute-start(%p0), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  ROOT %cpd = f32[16,8] collective-permute-done(%cps)
+}
+"""
+    res = analyze_hlo(txt)
+    assert res["coll_collective-permute"] == 16 * 8 * 4
+    assert res["maxop_collective-permute"] == 16 * 8 * 4
+
+
+def test_overlap_fraction_async_pairs():
+    """Async tier: a -start/-done pair counts as overlapped iff a compute
+    op (fusion/dot/...) is scheduled strictly between them — post-opt HLO
+    is scheduled, so text order IS the schedule."""
+    head = """
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64,8]) -> f32[16,8] {
+  %p0 = f32[64,8] parameter(0)
+  %rs = (f32[64,8], f32[16,8]) reduce-scatter-start(%p0), replica_groups=[1,4]<=[4], to_apply=%add
+"""
+    overlapped = head + """  %f = f32[64,8] fusion(%p0), kind=kLoop, calls=%fused_mul
+  ROOT %d = f32[16,8] reduce-scatter-done(%rs)
+}
+"""
+    serial = head + """  ROOT %d = f32[16,8] reduce-scatter-done(%rs)
+}
+"""
+    assert analyze_hlo(overlapped)["overlap_fraction"] == 1.0
+    assert analyze_hlo(serial)["overlap_fraction"] == 0.0
+
+
+def test_overlap_fraction_sync_dependency_slack():
+    """Sync tier (XLA CPU emits no -start/-done): a collective counts as
+    overlap CAPACITY when some compute op is neither its ancestor nor its
+    descendant — the program left the scheduler free to run them
+    concurrently. A compute op that CONSUMES the collective's result is a
+    descendant and must not count."""
+    head = """
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64,8]) -> f32[16,8] {
+  %p0 = f32[64,8] parameter(0)
+"""
+    free = head + """  %f = f32[64,8] fusion(%p0), kind=kLoop, calls=%fused_mul
+  %rs = f32[16,8] reduce-scatter(%p0), replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %t = (f32[16,8], f32[64,8]) tuple(%rs, %f)
+}
+"""
+    chained = head + """  %rs = f32[16,8] reduce-scatter(%p0), replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %f = f32[16,8] fusion(%rs), kind=kLoop, calls=%fused_mul
+}
+"""
+    assert analyze_hlo(free)["overlap_fraction"] == 1.0
+    assert analyze_hlo(chained)["overlap_fraction"] == 0.0
+
+
+def test_live_peak_counts_simultaneously_live_operands():
+    """`live_peak_<kind>`: high-water mark of concurrently-live collective
+    operand bytes from the schedule (operand live from its def to its
+    collective). The serial bucket stream holds ONE slab; the double-
+    buffered pipeline holds TWO; an unpinned unroll would hold all of them
+    — this is the metric dryrun's two-bucket gate reads."""
+    head = """
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[32,8]) -> (f32[8,8], f32[8,8]) {
+  %p0 = f32[32,8] parameter(0)
+"""
+    slab = 32 * 8 * 4
+    serial = head + """  %a = f32[32,8] negate(%p0)
+  %rs0 = f32[8,8] reduce-scatter(%a), replica_groups=[1,4]<=[4], to_apply=%add
+  %b = f32[32,8] negate(%p0)
+  %rs1 = f32[8,8] reduce-scatter(%b), replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %t = (f32[8,8], f32[8,8]) tuple(%rs0, %rs1)
+}
+"""
+    double = head + """  %a = f32[32,8] negate(%p0)
+  %b = f32[32,8] negate(%p0)
+  %rs0 = f32[8,8] reduce-scatter(%a), replica_groups=[1,4]<=[4], to_apply=%add
+  %rs1 = f32[8,8] reduce-scatter(%b), replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %t = (f32[8,8], f32[8,8]) tuple(%rs0, %rs1)
+}
+"""
+    assert analyze_hlo(serial)["live_peak_reduce-scatter"] == slab
+    assert analyze_hlo(double)["live_peak_reduce-scatter"] == 2 * slab
