@@ -160,19 +160,30 @@ def _ring_all_gather(x, axis_names, m: int, rank):
     the transfer is decomposed into point-to-point hops (HLO
     collective-permute) that the scheduler can overlap with compute,
     instead of one blocking gather. `rank` is this device's linear dp
-    index (the sharded iota input; see module docstring)."""
+    index (the sharded iota input; see module docstring).
+
+    Each received block is scattered straight into its slot of the
+    preallocated result, so the transient footprint stays at the gathered
+    array plus ONE in-flight block — a stack + roll-by-`rank` would hold
+    the full stack twice (roll of a traced shift lowers to concat +
+    dynamic-slice), defeating the memory bound the bucketed schedule
+    exists to keep."""
     if m <= 1:
         return x
     axis = axis_names if len(axis_names) > 1 else axis_names[0]
     perm = [(i, (i - 1) % m) for i in range(m)]
-    blocks = [x]
-    for _ in range(m - 1):
-        blocks.append(lax.ppermute(blocks[-1], axis, perm))
-    # blocks[k] on device d is device (d + k) % m's block: rolling the
-    # stack by d puts block s at position s
-    stacked = jnp.stack(blocks)
-    out = jnp.roll(stacked, rank, axis=0)
-    return out.reshape((m * x.shape[0],) + tuple(x.shape[1:]))
+    rows = x.shape[0]
+    tail0 = (0,) * (x.ndim - 1)
+    out = jnp.zeros((m * rows,) + tuple(x.shape[1:]), x.dtype)
+    blk = x
+    for k in range(m):
+        if k:
+            blk = lax.ppermute(blk, axis, perm)
+        # after k hops this device holds device (rank + k) % m's block,
+        # which belongs at block slot (rank + k) % m of the gathered result
+        out = lax.dynamic_update_slice(out, blk,
+                                       ((rank + k) % m * rows,) + tail0)
+    return out
 
 
 def make_dp_train_step(cfg: ModelConfig, opt: OptimizerConfig, mesh,

@@ -172,6 +172,33 @@ def _ring_factor(kind: str, n: int) -> float:
     return 1.0
 
 
+def _reach_masks(ops, pos, users):
+    """Transitive def-use reachability over one computation as bitsets:
+    up[i] / down[i] have bit j set iff instruction j is an ancestor /
+    descendant of i. HLO text lists defs before uses, so one forward pass
+    accumulates ancestors and one backward pass descendants — O(edges)
+    bitset ORs for the whole computation, where a per-collective BFS made
+    analyze() effectively quadratic on large scheduled modules with many
+    collectives."""
+    n = len(ops)
+    up = [0] * n
+    for j in range(n):
+        m = 0
+        for o in ops[j][3]:
+            k = pos.get(o)
+            if k is not None and k < j:
+                m |= (1 << k) | up[k]
+        up[j] = m
+    down = [0] * n
+    for j in range(n - 1, -1, -1):
+        m = 0
+        for k in users.get(ops[j][0], ()):
+            if k > j:
+                m |= (1 << k) | down[k]
+        down[j] = m
+    return up, down
+
+
 class HloAnalysis:
     def __init__(self, text: str):
         self.comps: Dict[str, List[str]] = {}
@@ -331,19 +358,13 @@ class HloAnalysis:
             for i, (_, _, _, operands, _) in enumerate(ops):
                 for o in operands:
                     users[o].append(i)
-
-            def reach(i, up: bool):
-                seen = set()
-                work = [i]
-                while work:
-                    j = work.pop()
-                    nxt = ([pos[o] for o in ops[j][3] if o in pos] if up
-                           else users.get(ops[j][0], []))
-                    for k in nxt:
-                        if k not in seen:
-                            seen.add(k)
-                            work.append(k)
-                return seen
+            compute_mask = 0
+            for i, entry in enumerate(ops):
+                if entry[2] in _COMPUTE_OPS:
+                    compute_mask |= 1 << i
+            # transitive reachability bitsets, built lazily (only sync
+            # collectives consult them) and ONCE per computation
+            up = down = None
 
             events: Dict[str, Dict[int, float]] = defaultdict(
                 lambda: defaultdict(float))
@@ -361,11 +382,10 @@ class HloAnalysis:
                         overlapped += b
                     end = done
                 else:
-                    anc = reach(i, up=True)
-                    desc = reach(i, up=False)
-                    if any(entry[2] in _COMPUTE_OPS and j not in anc
-                           and j not in desc
-                           for j, entry in enumerate(ops)):
+                    if up is None:
+                        up, down = _reach_masks(ops, pos, users)
+                    # a compute op that is neither ancestor nor descendant
+                    if compute_mask & ~(up[i] | down[i]):
                         overlapped += b
                     end = i
                 ev = events[kind]

@@ -56,6 +56,50 @@ def _fsync_path(path):
         os.close(fd)
 
 
+def _arena_region_table(tree):
+    """Per-leaf interior-layout fingerprints, aligned with the flat leaf
+    order: each Arena-backed leaf gets its layout's region boundaries
+    (stack name / row / layer count / per-layer stride, plus the rest
+    region's row span); every other leaf gets None. An Arena flattens to
+    exactly one data leaf, so flattening with Arenas-as-leaves walks the
+    same positions as the plain flatten. Saved into structure.json so an
+    elastic restore can PROVE two shard counts' layouts differ only in
+    tail padding (region_grain changes with the shard product, shifting
+    interior rows — a row-count check alone cannot see that)."""
+    from repro.core.arena import Arena
+    nodes = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, Arena))[0]
+    table = []
+    for node in nodes:
+        if isinstance(node, Arena):
+            lay = node.layout
+            table.append({
+                "stacks": [[s.name, s.row, s.n_layers, s.layer_rows]
+                           for s in lay.stacks],
+                "rest": [lay.rest.row, lay.rest.rows],
+            })
+        else:
+            table.append(None)
+    return table
+
+
+def _region_mismatch(sv, tgt) -> str:
+    """First human-readable difference between two region fingerprints."""
+    if len(sv["stacks"]) != len(tgt["stacks"]):
+        saved = [s[0] for s in sv["stacks"]]
+        want = [s[0] for s in tgt["stacks"]]
+        return f"stacked regions {saved} vs target {want}"
+    for a, b in zip(sv["stacks"], tgt["stacks"]):
+        if a != b:
+            return (f"stack {a[0]!r} saved (row={a[1]}, layers={a[2]}, "
+                    f"layer_rows={a[3]}) vs target ({b[0]!r}, row={b[1]}, "
+                    f"layers={b[2]}, layer_rows={b[3]})")
+    if sv["rest"] != tgt["rest"]:
+        return (f"rest region saved (row={sv['rest'][0]}, "
+                f"rows={sv['rest'][1]}) vs target (row={tgt['rest'][0]}, "
+                f"rows={tgt['rest'][1]})")
+    return "region boundaries differ"
+
+
 def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
          bucket_plan=None) -> str:
     """Atomically save `tree` under <ckpt_dir>/step_<n>/. `bucket_plan`
@@ -84,6 +128,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         info = {"step": step, "n_leaves": len(leaves),
                 "treedef": str(treedef), "meta": meta}
+        regions_tbl = _arena_region_table(tree)
+        if any(r is not None for r in regions_tbl):
+            info["arena_regions"] = regions_tbl
         if isinstance(tree, dict):
             # top-level state regions ("m", "v", "p", "ef", "scaler", ...)
             # recorded by NAME so a resume mismatch can say WHICH region is
@@ -124,11 +171,12 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def _adapt_rows(arr: np.ndarray, ref, i: int) -> np.ndarray:
-    """Elastic-restore row negotiation for one leaf: the canonical arena
-    layouts of two shard counts differ only in zero tail-padding rows, so
-    a leading-dim-only mismatch pads up with zeros or truncates down after
-    proving the dropped tail IS zeros. Anything else is a real layout
-    difference and raises."""
+    """Elastic-restore row negotiation for one leaf: once the caller has
+    verified the saved and target layouts share every interior region
+    boundary (restore()'s arena_regions check), the canonical layouts can
+    differ only in zero tail-padding rows, so a leading-dim-only mismatch
+    pads up with zeros or truncates down after proving the dropped tail IS
+    zeros. Anything else is a real layout difference and raises."""
     if arr.ndim != len(ref.shape) or arr.ndim < 1 or \
             tuple(arr.shape[1:]) != tuple(ref.shape[1:]):
         raise ValueError(
@@ -166,18 +214,28 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
 
     `elastic=True`: accept a checkpoint saved under a DIFFERENT shard
     count / bucket plan. The on-disk format is always canonical arena
-    order, so resharding is purely a row-count negotiation: two layouts of
-    the same param tree differ only in the zero tail padding
-    `build_layout(tree, n_shards=...)` appends, so a row-indexed leaf
+    order, so resharding is purely a row-count negotiation — PROVIDED the
+    two layouts agree on every interior region boundary. That is verified,
+    not assumed: save() records each Arena leaf's region table (stack
+    name / row / layer count / per-layer stride, rest row span) in
+    structure.json, and restore compares it against the target layout's
+    before any row adaptation. Matching boundaries mean the layouts can
+    differ only in the zero tail padding `build_layout(tree, n_shards=...)`
+    appends (its per-shard divisibility rounding), so a row-indexed leaf
     whose trailing dims match is zero-PADDED up to the target row count,
     or TRUNCATED down after verifying the dropped tail is all zeros (a
     non-zero tail means the layouts differ in content, not padding — that
-    stays a hard error). The treedef equality check is relaxed to leaf
-    count + per-leaf adapted shapes (region names are still matched
-    exactly); everything else — checksums, dtypes — validates as usual.
-    Combined with `bucket_plan` this resumes e.g. a 4-shard bucketed run
-    as 2-shard: read canonical rows, adapt the tail, re-permute under the
-    NEW plan — bitwise for every non-padding row."""
+    stays a hard error). Boundary mismatches — e.g. `region_grain` jumping
+    64 -> 128 when the shard product crosses 8, which shifts every interior
+    layer's rows — refuse loudly, as does an Arena leaf adaptation against
+    a checkpoint written before region tables were recorded. The treedef
+    equality check is relaxed to leaf count + per-leaf adapted shapes +
+    the region checks above (top-level state-region names and arena stack
+    names/boundaries are still matched exactly); everything else —
+    checksums, dtypes — validates as usual. Combined with `bucket_plan`
+    this resumes e.g. a 4-shard bucketed run as 2-shard: read canonical
+    rows, adapt the tail, re-permute under the NEW plan — bitwise for
+    every non-padding row."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     try:
         with open(d / "structure.json") as f:
@@ -236,6 +294,28 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
             f"different state codec or arena layout; a row-count-only "
             f"mismatch from a different ZeRO shard count can resume with "
             f"restore(..., elastic=True))")
+    saved_tbl = target_tbl = None
+    if elastic:
+        # interior-layout proof for Arena leaves: row adaptation is only
+        # tail padding when every region boundary matches; a saved table
+        # that disagrees (region_grain changed with the shard product) or
+        # is absent (pre-region-table checkpoint) must refuse BEFORE any
+        # rows are padded/truncated
+        saved_tbl = info.get("arena_regions")
+        target_tbl = _arena_region_table(abstract_tree)
+        if saved_tbl is not None:
+            for i, (sv, tgt) in enumerate(zip(saved_tbl, target_tbl)):
+                if sv is not None and tgt is not None and sv != tgt:
+                    raise ValueError(
+                        f"elastic restore: leaf {i} arena layouts disagree "
+                        f"on interior region boundaries "
+                        f"({_region_mismatch(sv, tgt)}) — not a tail-"
+                        f"padding difference, so row adaptation would "
+                        f"misalign state. This happens when region_grain "
+                        f"differs between the saved and target shard "
+                        f"products (e.g. the grain lifts 64 -> 128 past 8 "
+                        f"shards); resume on a mesh with the same grain or "
+                        f"convert the checkpoint explicitly")
     out = []
     for i, ref in enumerate(leaves):
         arr = data[f"a{i}"]
@@ -244,6 +324,15 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
             arr = arr.view(jnp.bfloat16)
         if tuple(arr.shape) != tuple(ref.shape):
             if elastic:
+                if target_tbl[i] is not None and saved_tbl is None:
+                    raise ValueError(
+                        f"elastic restore: checkpoint step {step} predates "
+                        f"arena region-boundary metadata, so leaf {i}'s "
+                        f"interior layout cannot be proven to match the "
+                        f"target — refusing a blind row adaptation. "
+                        f"Re-save the checkpoint with this version (or "
+                        f"restore non-elastically onto the original shard "
+                        f"count first)")
                 arr = _adapt_rows(arr, ref, i)
             else:
                 raise ValueError(f"shape mismatch at leaf {i}: "

@@ -43,6 +43,79 @@ def test_checkpoint_shape_validation(tmp_path):
         ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: bad))
 
 
+def _arena_vals():
+    return {"blocks": {"w": jnp.arange(4 * 96 * 33, dtype=jnp.float32)
+                       .reshape(4, 96, 33)},
+            "head": jnp.arange(1000, dtype=jnp.float32)}
+
+
+def _arena_state(vals, n_shards):
+    from repro.core import arena as arena_mod
+    lay = arena_mod.build_layout(vals, n_shards=n_shards)
+    return {"m": arena_mod.Arena(arena_mod.pack(vals, lay), lay),
+            "step": jnp.asarray(3, jnp.int32)}, lay
+
+
+def test_elastic_restore_equal_grain_roundtrip(tmp_path):
+    """Same region_grain (4 vs 2 shards): layouts share every interior
+    region boundary, so elastic restore is a pure tail negotiation and the
+    restored arena equals a direct pack under the target layout."""
+    from repro.core import arena as arena_mod
+    vals = _arena_vals()
+    assert arena_mod.region_grain(4) == arena_mod.region_grain(2)
+    s4, lay4 = _arena_state(vals, 4)
+    _, lay2 = _arena_state(vals, 2)
+    assert lay4.rows != lay2.rows          # adaptation actually exercised
+    ckpt.save(str(tmp_path), 1, s4)
+    abstract2 = jax.eval_shape(
+        lambda: {"m": arena_mod.Arena.zeros(lay2),
+                 "step": jnp.asarray(0, jnp.int32)})
+    s2 = ckpt.restore(str(tmp_path), 1, abstract2, elastic=True)
+    np.testing.assert_array_equal(np.asarray(s2["m"].data),
+                                  np.asarray(arena_mod.pack(vals, lay2)))
+    assert int(s2["step"]) == 3
+
+
+def test_elastic_restore_refuses_region_grain_mismatch(tmp_path):
+    """Different region_grain (8 vs 16 shards: the grain lifts 64 -> 128
+    past a shard product of 8): interior layer strides shift, so this is
+    NOT a tail-padding difference — elastic restore must refuse instead of
+    silently misaligning state, even though every trailing dim matches."""
+    from repro.core import arena as arena_mod
+    vals = _arena_vals()
+    assert arena_mod.region_grain(8) != arena_mod.region_grain(16)
+    s8, lay8 = _arena_state(vals, 8)
+    _, lay16 = _arena_state(vals, 16)
+    assert lay8.stacks[0].layer_rows != lay16.stacks[0].layer_rows
+    ckpt.save(str(tmp_path), 1, s8)
+    abstract16 = jax.eval_shape(
+        lambda: {"m": arena_mod.Arena.zeros(lay16),
+                 "step": jnp.asarray(0, jnp.int32)})
+    with pytest.raises(ValueError, match="interior region boundaries"):
+        ckpt.restore(str(tmp_path), 1, abstract16, elastic=True)
+
+
+def test_elastic_refuses_pre_region_table_checkpoint(tmp_path):
+    """A checkpoint written without the arena_regions table cannot prove
+    its interior layout matches the target: adapting an Arena leaf's rows
+    blind must refuse with the re-save escape named."""
+    import json
+    from repro.core import arena as arena_mod
+    vals = _arena_vals()
+    s4, _ = _arena_state(vals, 4)
+    _, lay2 = _arena_state(vals, 2)
+    ckpt.save(str(tmp_path), 1, s4)
+    sj = tmp_path / "step_00000001" / "structure.json"
+    info = json.loads(sj.read_text())
+    assert info.pop("arena_regions") is not None
+    sj.write_text(json.dumps(info))
+    abstract2 = jax.eval_shape(
+        lambda: {"m": arena_mod.Arena.zeros(lay2),
+                 "step": jnp.asarray(0, jnp.int32)})
+    with pytest.raises(ValueError, match="predates arena region"):
+        ckpt.restore(str(tmp_path), 1, abstract2, elastic=True)
+
+
 def test_data_deterministic_and_shaped():
     cfg = get_config("stablelm_1_6b").reduced()
     shape = InputShape("t", 64, 8, "train")
