@@ -1,0 +1,404 @@
+"""Paged KV arena: the serving-side analogue of the optimizer-state arena.
+
+The optimizer arena (core/arena.py) packs every state leaf into ONE
+contiguous buffer addressed through a STATIC layout table, so live bytes
+track what the schedule actually holds instead of what the worst case
+could hold. This module applies the same discipline to decode caches: all
+token-indexed cache tensors (k/v, MLA latent, dense-prefix variants) live
+in one contiguous per-layer buffer of fixed-size TOKEN BLOCKS, and each
+request addresses its tokens through a per-request BLOCK TABLE. Live cache
+bytes are then O(active tokens), block-rounded — not O(batch x max_len):
+a finished request's blocks return to the free list immediately and the
+next admission reuses them, which is the decode-side counterpart of AdamA
+releasing each micro-batch's gradient right after the fold.
+
+Two families of cache state, mirroring models/decode.py's cache dicts:
+
+  token-indexed  (PagedSpec)  one entry per cached token, paged:
+                              buffer (layers, n_blocks, block, *inner);
+                              request r's ring slot t lives at
+                              (block_table[r, t // block], t % block)
+  per-request    (StateSpec)  O(1) per request, slot-indexed (NOT paged):
+                              buffer (lead, max_reqs, *inner) — RWKV's wkv
+                              matrix + token-shift rows, Mamba conv/ssm
+                              state, whisper's precomputed cross k/v, and
+                              `cache_pos` (max_reqs, capacity)
+
+This module is deliberately GENERIC: it never imports model code. The
+cache-semantics registry (which keys are token-indexed, which are
+per-request state) lives with the cache owner, models/decode.py, and is
+passed in to `build_paged_layout` — exactly how core/arena.py takes an
+arbitrary pytree. Unknown keys refuse loudly instead of guessing an axis
+(the bug class the old serve.py re-home loop had).
+
+Slot/block 0 are RESERVED TRASH: padded lanes of a fixed-width decode step
+point at slot 0 with an all-zero block table, so their writes land in
+block 0 / state row 0 and never alias a live request. Gathers through
+unallocated (zero) table entries read whatever block 0 holds; every such
+slot is masked by `cache_pos` (INT32_MAX = empty) before the softmax, and
+masked finite garbage contributes exp(-inf) = 0 terms at the same
+positions a zeroed contiguous cache would — bitwise-identical attention
+(pinned by benchmarks/serve_bench.py's parity gate).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT_MAX = np.iinfo(np.int32).max
+
+# Default tokens per block. Small enough that a short request wastes at
+# most block-1 slots per family, large enough that the block table stays
+# tiny. Serving-shape sweeps can override per layout.
+BLOCK_TOKENS = 16
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass(frozen=True)
+class PagedSpec:
+    """One token-indexed cache tensor: contiguous cache (layers, B, cap,
+    *inner) <-> paged buffer (layers, n_blocks, block, *inner)."""
+    key: str
+    layers: int                  # leading layer count (L, or dense-prefix Lp)
+    inner: Tuple[int, ...]       # per-token trailing shape, e.g. (KV, hd)
+    dtype: Any
+
+    @property
+    def token_bytes(self) -> int:
+        return self.layers * int(np.prod(self.inner, dtype=np.int64) if
+                                 self.inner else 1) * np.dtype(self.dtype).itemsize
+
+
+@dataclass(frozen=True)
+class StateSpec:
+    """One per-request state tensor: contiguous (lead, B, *inner) <->
+    slot-indexed buffer (lead, max_reqs, *inner). `lead == 0` marks a
+    request-major tensor (cache_pos: (B, cap) <-> (max_reqs, cap))."""
+    key: str
+    lead: int                    # 0 = request axis first (cache_pos)
+    inner: Tuple[int, ...]
+    dtype: Any
+    fill: float = 0.0            # init value (cache_pos uses INT_MAX)
+
+    @property
+    def request_bytes(self) -> int:
+        n = int(np.prod(self.inner, dtype=np.int64) if self.inner else 1)
+        return max(1, self.lead) * n * np.dtype(self.dtype).itemsize
+
+
+@dataclass(frozen=True)
+class PagedLayout:
+    """Static layout table of the paged arena — hashable aux data, like
+    core/arena.py's ArenaLayout. `capacity` (= blocks_per_req * block) is
+    the per-request ring size every token-indexed tensor is addressed
+    modulo; the contiguous reference cache of the same capacity is the
+    bitwise-parity target."""
+    block: int
+    n_blocks: int                # total blocks incl. the reserved trash block
+    max_reqs: int                # request slots incl. the reserved trash slot
+    blocks_per_req: int
+    specs: Tuple[PagedSpec, ...]
+    states: Tuple[StateSpec, ...]
+
+    @property
+    def capacity(self) -> int:
+        return self.blocks_per_req * self.block
+
+    @property
+    def token_bytes(self) -> int:
+        """Cache bytes per token across every token-indexed tensor."""
+        return sum(s.token_bytes for s in self.specs)
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block * self.token_bytes
+
+    @property
+    def state_bytes_per_request(self) -> int:
+        return sum(s.request_bytes for s in self.states)
+
+    def spec(self, key: str):
+        for s in self.specs + self.states:
+            if s.key == key:
+                return s
+        raise KeyError(key)
+
+
+def build_paged_layout(cache_spec: Dict[str, Any], token_keys, state_keys,
+                       *, max_reqs: int, capacity: int,
+                       block: int = BLOCK_TOKENS,
+                       n_blocks: Optional[int] = None,
+                       state_fill: Optional[Dict[str, float]] = None
+                       ) -> PagedLayout:
+    """Build the static layout from an ABSTRACT contiguous cache dict with
+    batch 1 (e.g. `jax.eval_shape(decode.init_cache, cfg, 1, seq_len)`):
+    every key in `token_keys` pages along its token axis (axis 2 of
+    (L, 1, Sc, ...)), every key in `state_keys` is per-request state (axis
+    1 of (lead, 1, ...)), and `cache_pos` becomes the (max_reqs, capacity)
+    slot table. A key in NEITHER registry raises — cache semantics live
+    with the cache owner (models/decode.py), and guessing an axis for an
+    unknown key is how caches get silently mis-homed (the bug class the
+    old serve.py rank-guessing re-home loop had).
+
+    `capacity` must be a multiple of `block` (the ring is addressed in
+    whole blocks). `n_blocks` defaults to the worst case (every slot fully
+    resident) — callers that want the O(active tokens) budget pass the
+    block count they intend to back; +1 for the reserved trash block is
+    added here either way, and a trash request slot is likewise added to
+    `max_reqs`."""
+    if capacity % block:
+        raise ValueError(f"capacity {capacity} is not a multiple of the "
+                         f"token block {block}")
+    blocks_per_req = capacity // block
+    max_reqs = max_reqs + 1                       # + reserved trash slot 0
+    if n_blocks is None:
+        n_blocks = (max_reqs - 1) * blocks_per_req
+    n_blocks = n_blocks + 1                       # + reserved trash block 0
+    fills = state_fill or {}
+    specs: List[PagedSpec] = []
+    states: List[StateSpec] = []
+    for key, ref in cache_spec.items():
+        shape, dtype = tuple(ref.shape), ref.dtype
+        if key == "cache_pos":
+            if shape != (1, capacity):
+                raise ValueError(
+                    f"cache_pos shape {shape} != (1, {capacity}); build "
+                    f"the abstract cache at batch 1 and the layout's "
+                    f"capacity")
+            states.append(StateSpec(key, 0, (capacity,), dtype,
+                                    fills.get(key, float(INT_MAX))))
+        elif key in token_keys:
+            if len(shape) < 3 or shape[1] != 1 or shape[2] != capacity:
+                raise ValueError(
+                    f"token-indexed cache key {key!r} has shape {shape}; "
+                    f"expected (layers, 1, {capacity}, ...)")
+            specs.append(PagedSpec(key, shape[0], shape[3:], dtype))
+        elif key in state_keys:
+            if len(shape) < 2 or shape[1] != 1:
+                raise ValueError(
+                    f"per-request cache key {key!r} has shape {shape}; "
+                    f"expected (lead, 1, ...)")
+            states.append(StateSpec(key, shape[0], shape[2:], dtype,
+                                    fills.get(key, 0.0)))
+        else:
+            raise KeyError(
+                f"cache key {key!r} (shape {shape}) is in neither the "
+                f"token-indexed nor the per-request registry — register "
+                f"it (models/decode.py CACHE_TOKEN_KEYS / "
+                f"CACHE_STATE_KEYS) instead of letting a paged layout "
+                f"mis-home it")
+    return PagedLayout(block, n_blocks, max_reqs, blocks_per_req,
+                       tuple(specs), tuple(states))
+
+
+def init_paged(layout: PagedLayout) -> Dict[str, jnp.ndarray]:
+    """Zero-initialized paged buffers (cache_pos filled with INT32_MAX)."""
+    bufs: Dict[str, jnp.ndarray] = {}
+    for s in layout.specs:
+        bufs[s.key] = jnp.zeros((s.layers, layout.n_blocks, layout.block)
+                                + s.inner, s.dtype)
+    for s in layout.states:
+        if s.lead == 0:
+            shape = (layout.max_reqs,) + s.inner
+        else:
+            shape = (s.lead, layout.max_reqs) + s.inner
+        if s.fill:
+            bufs[s.key] = jnp.full(shape, s.fill, s.dtype)
+        else:
+            bufs[s.key] = jnp.zeros(shape, s.dtype)
+    return bufs
+
+
+def paged_bytes(layout: PagedLayout) -> int:
+    """Total allocated bytes of the paged buffers (the fixed pool)."""
+    tok = layout.n_blocks * layout.block_bytes
+    st = layout.max_reqs * layout.state_bytes_per_request
+    return tok + st
+
+
+# ---------------------------------------------------------------------------
+# Gather / scatter: paged <-> contiguous
+# ---------------------------------------------------------------------------
+
+
+def gather_cache(layout: PagedLayout, bufs: Dict[str, jnp.ndarray],
+                 slots: jnp.ndarray, block_tables: jnp.ndarray
+                 ) -> Dict[str, jnp.ndarray]:
+    """Materialize the CONTIGUOUS cache dict for a decode batch: for each
+    token-indexed tensor, gather the batch's blocks by table —
+    (L, n_blocks, blk, *i)[:, bt] -> (L, B, bpr, blk, *i) -> (L, B, cap, *i)
+    — and for per-request state, gather rows by slot. The result is
+    bitwise-identical (up to masked empty slots, see module docstring) to
+    the contiguous cache models/decode.py::serve_step expects, so the
+    paged step IS the contiguous step on a gathered view."""
+    b = slots.shape[0]
+    cache: Dict[str, jnp.ndarray] = {}
+    for s in layout.specs:
+        g = bufs[s.key][:, block_tables]          # (L, B, bpr, blk, *inner)
+        cache[s.key] = g.reshape((s.layers, b, layout.capacity) + s.inner)
+    for s in layout.states:
+        if s.lead == 0:
+            cache[s.key] = bufs[s.key][slots]
+        else:
+            cache[s.key] = bufs[s.key][:, slots]
+    return cache
+
+
+def scatter_token(layout: PagedLayout, bufs: Dict[str, jnp.ndarray],
+                  new_cache: Dict[str, jnp.ndarray], slots: jnp.ndarray,
+                  block_tables: jnp.ndarray, pos: jnp.ndarray,
+                  skip: Sequence[str] = ("ck", "cv")) -> Dict[str, jnp.ndarray]:
+    """Write ONE decoded token's updates back into the paged buffers:
+    each token-indexed tensor changed only at ring slot `pos % capacity`,
+    so only that (block, offset) is scattered — O(1) tokens of write
+    bandwidth per step, not O(capacity); per-request state rows are
+    scattered whole (they ARE the O(1) state). Keys in `skip` are
+    admission-time constants (whisper cross k/v) and are not re-written.
+    Trash lanes (slot 0 / zero block tables) write block 0 / row 0 only."""
+    b = slots.shape[0]
+    bi = jnp.arange(b)
+    slot_idx = pos % layout.capacity
+    blk = block_tables[bi, slot_idx // layout.block]      # (B,)
+    off = slot_idx % layout.block
+    out = dict(bufs)
+    for s in layout.specs:
+        if s.key in skip:
+            continue
+        vals = new_cache[s.key][:, bi, slot_idx]          # (L, B, *inner)
+        out[s.key] = out[s.key].at[:, blk, off].set(vals)
+    for s in layout.states:
+        if s.key in skip:
+            continue
+        if s.lead == 0:
+            out[s.key] = out[s.key].at[slots].set(new_cache[s.key])
+        else:
+            out[s.key] = out[s.key].at[:, slots].set(new_cache[s.key])
+    return out
+
+
+def scatter_request(layout: PagedLayout, bufs: Dict[str, jnp.ndarray],
+                    cache: Dict[str, jnp.ndarray], slot: int,
+                    block_table: np.ndarray) -> Dict[str, jnp.ndarray]:
+    """Home ONE request's whole contiguous cache (B=1 leading batch axis)
+    into its blocks/slot — the admission path for caches produced by a
+    one-shot prefill. Scatters every table entry, so the caller must have
+    backed the full capacity (or accept writes through zero entries into
+    the trash block — harmless but lossy for slots that later allocate)."""
+    out = dict(bufs)
+    bt = jnp.asarray(block_table, jnp.int32)              # (bpr,)
+    for s in layout.specs:
+        v = cache[s.key][:, 0]                            # (L, cap, *inner)
+        v = v.reshape((s.layers, layout.blocks_per_req, layout.block)
+                      + s.inner)
+        out[s.key] = out[s.key].at[:, bt].set(v)
+    for s in layout.states:
+        if s.lead == 0:
+            out[s.key] = out[s.key].at[slot].set(cache[s.key][0])
+        else:
+            out[s.key] = out[s.key].at[:, slot].set(cache[s.key][:, 0])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator: free lists for blocks and request slots
+# ---------------------------------------------------------------------------
+
+
+class OutOfBlocksError(RuntimeError):
+    """The paged arena has no free block/slot for an allocation. The
+    scheduler treats this as back-pressure (defer admission), not a crash."""
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over a PagedLayout: request slots and
+    token blocks, with lazy per-token block backing and immediate reuse on
+    release — the piece that makes live cache bytes O(active tokens).
+
+    Block tables are kept as a host numpy array (max_reqs, blocks_per_req)
+    int32; the scheduler ships the active rows to the device each step
+    (tiny). Entry 0 / slot 0 are the reserved trash targets and are never
+    handed out. `live_bytes`/`peak_bytes` count token-block bytes actually
+    allocated — the number benchmarks/serve_bench.py gates against the
+    active-token budget."""
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._free_blocks = deque(range(1, layout.n_blocks))
+        self._free_slots = deque(range(1, layout.max_reqs))
+        self.block_tables = np.zeros((layout.max_reqs, layout.blocks_per_req),
+                                     np.int32)
+        self._owned: Dict[int, List[int]] = {}
+        self.live_blocks = 0
+        self.peak_blocks = 0
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def live_bytes(self) -> int:
+        return self.live_blocks * self.layout.block_bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.peak_blocks * self.layout.block_bytes
+
+    def alloc_slot(self) -> int:
+        if not self._free_slots:
+            raise OutOfBlocksError("no free request slot")
+        slot = self._free_slots.popleft()
+        self._owned[slot] = []
+        return slot
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        """Blocks needed to back the first `n_tokens` ring slots (capped at
+        the full ring — a ring past capacity reuses its own blocks)."""
+        return min(_cdiv(max(n_tokens, 0), self.layout.block),
+                   self.layout.blocks_per_req)
+
+    def ensure_tokens(self, slot: int, n_tokens: int) -> bool:
+        """Back ring slots [0, min(n_tokens, capacity)) of `slot` with
+        blocks, allocating lazily. Returns True if new blocks were taken.
+        Raises OutOfBlocksError (allocating nothing) when the pool cannot
+        cover the request — admission back-pressure, never a torn table.
+        Layouts with no token-indexed tensors (rwkv: O(1) recurrent state
+        only) back nothing: live token bytes stay 0 by construction."""
+        if not self.layout.specs:
+            return False
+        owned = self._owned[slot]
+        need = self.blocks_for_tokens(n_tokens) - len(owned)
+        if need <= 0:
+            return False
+        if need > len(self._free_blocks):
+            raise OutOfBlocksError(
+                f"need {need} blocks for slot {slot} "
+                f"({n_tokens} tokens), only {len(self._free_blocks)} free")
+        for _ in range(need):
+            b = self._free_blocks.popleft()
+            self.block_tables[slot, len(owned)] = b
+            owned.append(b)
+        self.live_blocks += need
+        self.peak_blocks = max(self.peak_blocks, self.live_blocks)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return a finished request's blocks and slot to the free lists —
+        the immediate-recycling path. The table row is zeroed (trash), so
+        stale gathers through it read the trash block, masked."""
+        blocks = self._owned.pop(slot)
+        self._free_blocks.extend(blocks)
+        self.live_blocks -= len(blocks)
+        self.block_tables[slot, :] = 0
+        self._free_slots.append(slot)

@@ -22,11 +22,24 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core import kv_arena
 from repro.models import modules as md
 from repro.models.model import (_cdt, apply_block, embed_tokens,
                                 main_stack_kind, n_main_layers)
 
 INT_MAX = jnp.iinfo(jnp.int32).max
+
+# Cache-semantics registries — the single source of truth consumed by
+# grow_cache and core/kv_arena.py. TOKEN keys hold one entry per cached
+# token on axis 2 of (layers, B, Sc, ...) and are paged/re-homed by ring
+# position; STATE keys are O(1) per request (recurrent state, admission-time
+# constants) and travel with the request slot. A cache key in NEITHER set
+# refuses loudly everywhere — the old serve.py re-home loop guessed by rank
+# and would silently mis-home any future key.
+CACHE_TOKEN_KEYS = frozenset(
+    ("k", "v", "latent", "k_rope", "k_p", "v_p", "latent_p", "k_rope_p"))
+CACHE_STATE_KEYS = frozenset(
+    ("wkv", "shift_a", "shift_c", "conv", "ssm", "ck", "cv"))
 
 
 def cache_len(cfg: ModelConfig, seq_len: int) -> int:
@@ -41,8 +54,16 @@ def cache_len(cfg: ModelConfig, seq_len: int) -> int:
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    return init_cache_capacity(cfg, batch, cache_len(cfg, seq_len))
+
+
+def init_cache_capacity(cfg: ModelConfig, batch: int, sc: int
+                        ) -> Dict[str, Any]:
+    """Contiguous cache with an EXPLICIT ring capacity `sc`. A capacity
+    larger than cache_len is legal (paged layouts block-align it): extra
+    ring slots stay INT32_MAX-empty until written, and for swa the window
+    mask hides ring entries older than the window either way."""
     l = n_main_layers(cfg)
-    sc = cache_len(cfg, seq_len)
     kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     dt = _cdt(cfg)
     c: Dict[str, Any] = {
@@ -85,6 +106,53 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
 
 def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+
+
+def grow_cache(cfg: ModelConfig, cache: Dict[str, Any], new_len: int
+               ) -> Dict[str, Any]:
+    """Re-home a cache into a larger ring (capacity cache_len(cfg, new_len)),
+    e.g. prefill at prompt length -> decode at prompt+gen length. Every
+    token-indexed tensor entry moves to its new ring slot `pos % sc_new`
+    (looked up from cache_pos, so swa rings that already wrapped re-home
+    correctly); per-request state passes through unchanged; unregistered
+    keys raise instead of being guessed at. Shrinking is refused — ring
+    slots would collide."""
+    sc_new = cache_len(cfg, new_len)
+    cp = cache.get("cache_pos")
+    if cp is None:
+        # rwkv: O(1) recurrent state only, nothing token-indexed to re-home
+        for key in cache:
+            if key not in CACHE_STATE_KEYS:
+                raise KeyError(
+                    f"cache key {key!r} is not in CACHE_STATE_KEYS and the "
+                    f"cache has no cache_pos to re-home it by")
+        return dict(cache)
+    b, sc_old = cp.shape
+    if sc_new < sc_old:
+        raise ValueError(
+            f"grow_cache cannot shrink the ring ({sc_old} -> {sc_new}): "
+            f"distinct cached positions would collide")
+    if sc_new == sc_old:
+        return dict(cache)
+    valid = cp != INT_MAX
+    # empty slots scatter out of range and are dropped
+    slot = jnp.where(valid, cp % sc_new, sc_new)
+    bi = jnp.arange(b)[:, None]
+    out: Dict[str, Any] = {}
+    for key, v in cache.items():
+        if key == "cache_pos":
+            ncp = jnp.full((b, sc_new), INT_MAX, jnp.int32)
+            out[key] = ncp.at[bi, slot].set(cp, mode="drop")
+        elif key in CACHE_TOKEN_KEYS:
+            nv = jnp.zeros(v.shape[:2] + (sc_new,) + v.shape[3:], v.dtype)
+            out[key] = nv.at[:, bi, slot].set(v, mode="drop")
+        elif key in CACHE_STATE_KEYS:
+            out[key] = v
+        else:
+            raise KeyError(
+                f"cache key {key!r} is in neither CACHE_TOKEN_KEYS nor "
+                f"CACHE_STATE_KEYS — register it before growing")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +368,63 @@ def serve_step(cfg: ModelConfig, params, cache, token, pos):
 
 
 # ---------------------------------------------------------------------------
+# Paged serving: block-table caches over core/kv_arena.py
+# ---------------------------------------------------------------------------
+
+
+def paged_layout(cfg: ModelConfig, *, max_reqs: int, max_len: int,
+                 block: int = kv_arena.BLOCK_TOKENS,
+                 n_blocks: int = None) -> kv_arena.PagedLayout:
+    """Static paged layout for this config: per-request ring capacity is
+    cache_len(cfg, max_len) rounded up to whole blocks (legal — see
+    init_cache_capacity), token/state classification comes from the
+    registries above. The bitwise-parity reference for this layout is the
+    contiguous cache built by `init_cache_capacity(cfg, b, layout.capacity)`
+    — same ring size, same masking."""
+    sc = cache_len(cfg, max_len)
+    capacity = -(-sc // block) * block
+    spec = jax.eval_shape(lambda: init_cache_capacity(cfg, 1, capacity))
+    return kv_arena.build_paged_layout(
+        spec, CACHE_TOKEN_KEYS, CACHE_STATE_KEYS,
+        max_reqs=max_reqs, capacity=capacity, block=block, n_blocks=n_blocks)
+
+
+def serve_step_paged(cfg: ModelConfig, layout: kv_arena.PagedLayout,
+                     params, bufs, slots, block_tables, token, pos):
+    """serve_step on a gathered view of the paged arena: gather the batch's
+    contiguous cache by block table, run the SAME serve_step math, scatter
+    the one new token (plus per-request state) back. slots (B,) int32,
+    block_tables (B, blocks_per_req) int32, token (B,1), pos (B,). Padded
+    lanes use slot 0 / zero tables (the reserved trash targets). Callers
+    jit this with `bufs` donated so steady-state decode is allocation-free."""
+    cache = kv_arena.gather_cache(layout, bufs, slots, block_tables)
+    logits, new_cache = serve_step(cfg, params, cache, token, pos)
+    bufs = kv_arena.scatter_token(layout, bufs, new_cache, slots,
+                                  block_tables, pos)
+    return logits, bufs
+
+
+def serve_prefill_chunk(cfg: ModelConfig, layout: kv_arena.PagedLayout,
+                        params, bufs, slots, block_tables, tokens, pos0):
+    """Chunked prefill for ONE request: scan `serve_step_paged` over a
+    static-width chunk of prompt tokens — tokens (1, C) int32 at absolute
+    positions pos0..pos0+C-1, slots (1,), block_tables (1, bpr). One
+    dispatch per chunk, bitwise-identical to feeding the tokens through the
+    decode step one by one (it IS that, scanned), which is what makes
+    chunk-size choice a pure scheduling knob. Returns (last logits, bufs)."""
+    c = tokens.shape[1]
+
+    def body(carry, i):
+        tok = lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)      # (1, 1)
+        logits, carry = serve_step_paged(cfg, layout, params, carry, slots,
+                                         block_tables, tok, pos0 + i)
+        return carry, logits
+
+    bufs, logits = lax.scan(body, bufs, jnp.arange(c, dtype=jnp.int32))
+    return logits[-1], bufs
+
+
+# ---------------------------------------------------------------------------
 # Prefill: full-sequence forward that also emits the cache
 # ---------------------------------------------------------------------------
 
@@ -390,6 +515,16 @@ def prefill(cfg: ModelConfig, params, batch):
 
     if "cache_pos" in cache:
         cp = positions[:, -sc:]
+        if s != sc:
+            # wrapped ring: token tensors must live at slot pos % sc, same
+            # as cache_pos, or serve_step's mask pairs k/v with the wrong
+            # positions (only coincidentally right when s % sc == 0)
+            slots = cp % sc
+            bi = jnp.arange(b)[:, None]
+            for key in cache:
+                if key in CACHE_TOKEN_KEYS:
+                    v = cache[key]
+                    cache[key] = jnp.zeros_like(v).at[:, bi, slots].set(v)
         cache["cache_pos"] = _ring_align(cp, s, sc)
     x = md.apply_norm(cfg, params, x, "final_norm_")
     logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)

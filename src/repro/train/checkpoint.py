@@ -43,6 +43,14 @@ class CheckpointCorruptError(RuntimeError):
     file and the check that failed."""
 
 
+class MissingMasterRegionError(RuntimeError):
+    """Working-param export was asked of a checkpoint whose optimizer state
+    carries no fp32 master region ("p"). Exporting the (possibly stale or
+    bf16-degraded) model params instead would silently serve the wrong
+    weights, so this refuses by name; train with master_params=True or load
+    tree["params"] explicitly if that is really what you want."""
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
@@ -343,3 +351,38 @@ def restore(ckpt_dir: str, step: int, abstract_tree: Any,
         from repro.core.buckets import permute_state
         tree = permute_state(tree, bucket_plan)
     return tree
+
+
+def export_working_params(ckpt_dir: str, step: Optional[int],
+                          abstract_tree: Any, *, elastic: bool = False
+                          ) -> Any:
+    """Checkpoint -> serving params, via the ARENA path: restore the
+    {"params", "opt"} training tree and emit the bf16 working params
+    straight from the master arena — `state["wp"]` when the run cached
+    working params (one unpack, exactly what the train step consumed), else
+    the apply-kernel emission `master.astype(bf16)` unpacked through the
+    same layout. Either way the result is bitwise what the training loop
+    was stepping with, with zero repack of the param tree.
+
+    `step=None` exports the latest step. A checkpoint whose optimizer
+    state has no master region raises MissingMasterRegionError (see its
+    docstring); `elastic=True` passes through to restore() for checkpoints
+    saved under a different shard count."""
+    from repro.core import arena as arena_mod
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    tree = restore(ckpt_dir, step, abstract_tree, elastic=elastic)
+    opt = tree.get("opt") if isinstance(tree, dict) else None
+    if not isinstance(opt, dict) or "p" not in opt:
+        regions = sorted(opt) if isinstance(opt, dict) else type(opt).__name__
+        raise MissingMasterRegionError(
+            f"checkpoint {ckpt_dir} step {step}: optimizer state has no "
+            f"master-param region 'p' (regions: {regions}); working-param "
+            f"export requires a master_params=True run")
+    if "wp" in opt:
+        wp = opt["wp"]
+        return arena_mod.unpack(wp.data, wp.layout)
+    master = opt["p"]
+    return arena_mod.unpack(master.data.astype(jnp.bfloat16), master.layout)

@@ -31,15 +31,7 @@ def _run_parity(cfg, batch_extra=None):
     offset = cfg.n_patch_tokens if cfg.arch_type == "vlm" else 0
     total = S + offset
     pos = jnp.full((B,), total - 1, jnp.int32)
-    cache2 = dec.init_cache(cfg, B, total)
-    for k in cache:
-        src = cache[k]
-        if k == "cache_pos":
-            cache2[k] = cache2[k].at[:, :src.shape[1]].set(src)
-        elif src.shape == cache2[k].shape:
-            cache2[k] = src
-        else:
-            cache2[k] = cache2[k].at[:, :, :src.shape[2]].set(src)
+    cache2 = dec.grow_cache(cfg, cache, total)
     logits_d, _ = dec.serve_step(cfg, params, cache2, tokens[:, -1:], pos)
     return float(jnp.max(jnp.abs(logits_d - ref)))
 
@@ -76,11 +68,7 @@ def test_multi_token_greedy_decode_consistency():
                                 cfg.vocab_size)
     full, _ = forward(cfg, params, {"tokens": tokens, "labels": tokens})
     _, cache = dec.prefill(cfg, params, {"tokens": tokens[:, :S]})
-    # grow into capacity S+T
-    cache2 = dec.init_cache(cfg, B, S + T)
-    for k in cache:
-        cache2[k] = cache[k] if cache[k].shape == cache2[k].shape else \
-            cache2[k].at[:, :, :S].set(cache[k])
+    cache2 = dec.grow_cache(cfg, cache, S + T)
     for t in range(T):
         pos = jnp.full((B,), S + t, jnp.int32)
         logits, cache2 = dec.serve_step(cfg, params, cache2,
@@ -97,3 +85,113 @@ def test_swa_ring_cache_bounded():
     cfg2 = tiny("rwkv6_7b")
     c2 = dec.init_cache(cfg2, 1, 500_000)
     assert "k" not in c2 and c2["wkv"].shape[1] == 1   # O(1) state
+
+
+def test_grow_cache_families():
+    """grow_cache re-homes every registered family and refuses the rest."""
+    for arch in ["stablelm_1_6b", "minicpm3_4b", "hymba_1_5b", "rwkv6_7b"]:
+        cfg = tiny(arch)
+        params = init_params(cfg, jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (1, 6), 0,
+                                    cfg.vocab_size)
+        _, cache = dec.prefill(cfg, params, {"tokens": tokens})
+        grown = dec.grow_cache(cfg, cache, 20)
+        for k, v in cache.items():
+            g = grown[k]
+            if k == "cache_pos":
+                assert jnp.array_equal(g[:, :v.shape[1]], v)
+                assert jnp.all(g[:, v.shape[1]:] == dec.INT_MAX)
+            elif k in dec.CACHE_TOKEN_KEYS:
+                assert jnp.array_equal(g[:, :, :v.shape[2]], v)
+            else:
+                assert jnp.array_equal(g, v)   # per-request state untouched
+    cfg = tiny("stablelm_1_6b")
+    cache = dec.init_cache(cfg, 1, 8)
+    with pytest.raises(ValueError, match="shrink"):
+        dec.grow_cache(cfg, cache, 4)
+    bad = dict(cache, mystery=jnp.zeros((2, 1, 8, 3)))
+    with pytest.raises(KeyError, match="neither"):
+        dec.grow_cache(cfg, bad, 20)
+
+
+def test_grow_cache_swa_rehomes_wrapped_ring():
+    """A wrapped swa ring re-homes by position, not by slot index, and
+    decode across the prefill->grow boundary still matches the forward."""
+    cfg = tiny("mistral_nemo_12b", window=8)
+    params = init_params(cfg, jax.random.key(0))
+    B, S, T = 1, 12, 6      # prefill past the window: ring has wrapped
+    tokens = jax.random.randint(jax.random.key(1), (B, S + T), 0,
+                                cfg.vocab_size)
+    full, _ = forward(cfg, params, {"tokens": tokens, "labels": tokens})
+    _, cache = dec.prefill(cfg, params, {"tokens": tokens[:, :S]})
+    assert cache["cache_pos"].shape[1] == 8   # window-sized ring
+    cache2 = dec.grow_cache(cfg, cache, S + T)   # window caps it: no-op size
+    for t in range(T):
+        pos = jnp.full((B,), S + t, jnp.int32)
+        logits, cache2 = dec.serve_step(cfg, params, cache2,
+                                        tokens[:, S + t:S + t + 1], pos)
+        err = float(jnp.max(jnp.abs(logits - full[:, S + t])))
+        assert err < 2e-3, f"step {t} (ring wrap at pos {S + t}): {err}"
+
+
+def test_grow_cache_swa_partial_ring():
+    """Growing an swa cache that has NOT yet wrapped (prompt < window)
+    relocates entries into the window-sized ring by position."""
+    cfg = tiny("mistral_nemo_12b", window=8)
+    params = init_params(cfg, jax.random.key(0))
+    B, S, T = 1, 5, 6       # 5 < window; ring wraps during decode
+    tokens = jax.random.randint(jax.random.key(1), (B, S + T), 0,
+                                cfg.vocab_size)
+    full, _ = forward(cfg, params, {"tokens": tokens, "labels": tokens})
+    _, cache = dec.prefill(cfg, params, {"tokens": tokens[:, :S]})
+    assert cache["cache_pos"].shape[1] == 5
+    cache2 = dec.grow_cache(cfg, cache, S + T)
+    assert cache2["cache_pos"].shape[1] == 8
+    for t in range(T):
+        pos = jnp.full((B,), S + t, jnp.int32)
+        logits, cache2 = dec.serve_step(cfg, params, cache2,
+                                        tokens[:, S + t:S + t + 1], pos)
+        err = float(jnp.max(jnp.abs(logits - full[:, S + t])))
+        assert err < 2e-3, f"step {t}: {err}"
+
+
+def test_cache_pos_int_max_masks_garbage_slots():
+    """Empty ring slots (cache_pos == INT32_MAX) must contribute NOTHING:
+    serve_step on a cache whose unoccupied slots hold garbage is bitwise
+    equal to the same cache with zeros there — masking, not luck. Covers
+    the prefill->decode boundary and a released-then-reused slot."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 1, 6
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                cfg.vocab_size)
+    _, cache = dec.prefill(cfg, params, {"tokens": tokens[:, :S]})
+    cache = dec.grow_cache(cfg, cache, 12)   # slots S..11 empty
+    pos = jnp.full((B,), S, jnp.int32)
+
+    def poison(c, slots):
+        out = dict(c)
+        for k in ("k", "v"):
+            v = c[k]
+            out[k] = v.at[:, :, slots].set(
+                jnp.asarray(1e9, v.dtype))
+        return out
+
+    ref, _ = dec.serve_step(cfg, params, cache, tokens[:, S:S + 1], pos)
+    dirty = poison(cache, list(range(S, 12)))
+    got, _ = dec.serve_step(cfg, params, dirty, tokens[:, S:S + 1], pos)
+    assert jnp.array_equal(ref, got), \
+        "garbage in INT32_MAX-masked slots changed the logits"
+
+    # slot reuse: mark occupied slots 2..3 released (INT_MAX) and poison
+    # them — the masked step must equal the same cache with zeros there
+    rel = dict(cache)
+    rel["cache_pos"] = cache["cache_pos"].at[:, 2:4].set(dec.INT_MAX)
+    zeroed = dict(rel)
+    for k in ("k", "v"):
+        zeroed[k] = rel[k].at[:, :, 2:4].set(0)
+    ref2, _ = dec.serve_step(cfg, params, zeroed, tokens[:, S:S + 1], pos)
+    got2, _ = dec.serve_step(cfg, params, poison(rel, [2, 3]),
+                             tokens[:, S:S + 1], pos)
+    assert jnp.array_equal(ref2, got2), \
+        "released slots were not masked out after reuse"

@@ -1,0 +1,221 @@
+"""Paged KV arena (core/kv_arena.py): layout classification per cache
+family, free-list allocator accounting, gather/scatter round trips, and
+trash-block isolation — the invariants the paged serve path stands on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core import kv_arena
+from repro.models import decode as dec
+
+
+def _layout(cfg, *, max_reqs=2, max_len=12, block=4, n_blocks=None):
+    return dec.paged_layout(cfg, max_reqs=max_reqs, max_len=max_len,
+                            block=block, n_blocks=n_blocks)
+
+
+def _random_cache(cfg, capacity, n_valid, key=0):
+    """Contiguous B=1 cache with random payloads and the first `n_valid`
+    ring slots marked (positions 0..n_valid-1)."""
+    cache = dec.init_cache_capacity(cfg, 1, capacity)
+    k = jax.random.key(key)
+    out = {}
+    for name, v in cache.items():
+        k, sub = jax.random.split(k)
+        if name == "cache_pos":
+            cp = jnp.full(v.shape, dec.INT_MAX, jnp.int32)
+            out[name] = cp.at[:, :n_valid].set(
+                jnp.arange(n_valid, dtype=jnp.int32)[None])
+        else:
+            out[name] = jax.random.normal(sub, v.shape).astype(v.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layout classification
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,tokens,states", [
+    ("stablelm_1_6b", {"k", "v"}, {"cache_pos"}),
+    ("mistral_nemo_12b", {"k", "v"}, {"cache_pos"}),
+    ("minicpm3_4b", {"latent", "k_rope"}, {"cache_pos"}),
+    ("rwkv6_7b", set(), {"wkv", "shift_a", "shift_c"}),
+    ("hymba_1_5b", {"k", "v"}, {"conv", "ssm", "cache_pos"}),
+    ("whisper_base", {"k", "v"}, {"ck", "cv", "cache_pos"}),
+])
+def test_layout_families(arch, tokens, states):
+    lay = _layout(tiny(arch))
+    assert {s.key for s in lay.specs} == tokens
+    assert {s.key for s in lay.states} == states
+    assert lay.capacity % lay.block == 0
+    # rwkv is the O(1)-state family: no token blocks to back at all
+    if arch == "rwkv6_7b":
+        assert lay.token_bytes == 0
+    else:
+        assert lay.token_bytes > 0
+    cp = [s for s in lay.states if s.key == "cache_pos"]
+    if cp:
+        assert cp[0].lead == 0 and cp[0].fill == float(dec.INT_MAX)
+
+
+def test_unknown_key_refuses():
+    cfg = tiny("stablelm_1_6b")
+    lay = _layout(cfg)
+    spec = jax.eval_shape(lambda: dec.init_cache_capacity(cfg, 1,
+                                                          lay.capacity))
+    spec["mystery"] = jax.ShapeDtypeStruct((2, 1, lay.capacity, 3),
+                                           jnp.float32)
+    with pytest.raises(KeyError, match="neither"):
+        kv_arena.build_paged_layout(spec, dec.CACHE_TOKEN_KEYS,
+                                    dec.CACHE_STATE_KEYS,
+                                    max_reqs=2, capacity=lay.capacity,
+                                    block=lay.block)
+
+
+def test_capacity_must_be_block_multiple():
+    cfg = tiny("stablelm_1_6b")
+    spec = jax.eval_shape(lambda: dec.init_cache_capacity(cfg, 1, 10))
+    with pytest.raises(ValueError, match="multiple"):
+        kv_arena.build_paged_layout(spec, dec.CACHE_TOKEN_KEYS,
+                                    dec.CACHE_STATE_KEYS,
+                                    max_reqs=2, capacity=10, block=4)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_accounting_and_reuse():
+    lay = _layout(tiny("stablelm_1_6b"), max_reqs=2, max_len=16, block=4)
+    al = kv_arena.BlockAllocator(lay)
+    assert al.free_slots == 2 and al.free_blocks == lay.n_blocks - 1
+    s1 = al.alloc_slot()
+    assert s1 >= 1, "slot 0 is the reserved trash slot"
+    assert al.ensure_tokens(s1, 5)            # 2 blocks of 4
+    assert al.live_blocks == 2 and al.live_bytes == 2 * lay.block_bytes
+    assert not al.ensure_tokens(s1, 6)        # already covered
+    assert al.ensure_tokens(s1, 9)            # third block
+    assert np.all(al.block_tables[s1, :3] >= 1), "trash block 0 handed out"
+    # past capacity the ring reuses its own blocks
+    assert al.blocks_for_tokens(10 ** 6) == lay.blocks_per_req
+    peak = al.peak_blocks
+    al.release(s1)
+    assert al.live_blocks == 0 and al.peak_blocks == peak
+    assert np.all(al.block_tables[s1] == 0), "released table row not zeroed"
+    s2 = al.alloc_slot()
+    al.ensure_tokens(s2, 4)
+    assert al.block_tables[s2, 0] >= 1        # freed blocks come back
+
+
+def test_allocator_out_of_blocks_mutates_nothing():
+    lay = _layout(tiny("stablelm_1_6b"), max_reqs=2, max_len=16, block=4,
+                  n_blocks=2)
+    al = kv_arena.BlockAllocator(lay)
+    s = al.alloc_slot()
+    al.ensure_tokens(s, 4)
+    free = al.free_blocks
+    table = al.block_tables.copy()
+    with pytest.raises(kv_arena.OutOfBlocksError):
+        al.ensure_tokens(s, 16)               # needs 3 more, 1 free
+    assert al.free_blocks == free, "failed ensure leaked blocks"
+    assert np.array_equal(al.block_tables, table), "torn block table"
+    with pytest.raises(kv_arena.OutOfBlocksError):
+        for _ in range(8):
+            al.alloc_slot()
+
+
+def test_allocator_rwkv_backs_nothing():
+    lay = _layout(tiny("rwkv6_7b"))
+    al = kv_arena.BlockAllocator(lay)
+    s = al.alloc_slot()
+    assert not al.ensure_tokens(s, 10 ** 6)
+    assert al.live_bytes == 0 and al.peak_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "minicpm3_4b",
+                                  "hymba_1_5b", "rwkv6_7b", "whisper_base"])
+def test_scatter_request_gather_roundtrip(arch):
+    cfg = tiny(arch)
+    lay = _layout(cfg)
+    al = kv_arena.BlockAllocator(lay)
+    bufs = kv_arena.init_paged(lay)
+    slot = al.alloc_slot()
+    al.ensure_tokens(slot, lay.capacity)
+    cache = _random_cache(cfg, lay.capacity, n_valid=5)
+    bufs = kv_arena.scatter_request(lay, bufs, cache, slot,
+                                    al.block_tables[slot])
+    got = kv_arena.gather_cache(lay, bufs, jnp.asarray([slot], jnp.int32),
+                                jnp.asarray(al.block_tables[[slot]]))
+    for key in cache:
+        assert np.array_equal(np.asarray(got[key]), np.asarray(cache[key])), \
+            f"{arch}:{key} did not round-trip bitwise"
+
+
+def test_scatter_token_places_one_ring_slot():
+    cfg = tiny("stablelm_1_6b")
+    lay = _layout(cfg)
+    al = kv_arena.BlockAllocator(lay)
+    bufs = kv_arena.init_paged(lay)
+    slot = al.alloc_slot()
+    al.ensure_tokens(slot, lay.capacity)
+    cache = _random_cache(cfg, lay.capacity, n_valid=5)
+    bufs = kv_arena.scatter_request(lay, bufs, cache, slot,
+                                    al.block_tables[slot])
+    # write position 5 (ring slot 5) through the token scatter
+    new = _random_cache(cfg, lay.capacity, n_valid=6, key=7)
+    slots = jnp.asarray([slot], jnp.int32)
+    bt = jnp.asarray(al.block_tables[[slot]])
+    bufs = kv_arena.scatter_token(lay, bufs, new, slots, bt,
+                                  jnp.asarray([5], jnp.int32))
+    got = kv_arena.gather_cache(lay, bufs, slots, bt)
+    for key in ("k", "v"):
+        want = np.array(cache[key])
+        want[:, :, 5] = np.asarray(new[key])[:, :, 5]
+        assert np.array_equal(np.asarray(got[key]), want), \
+            f"{key}: token scatter touched more than ring slot 5"
+    assert np.array_equal(np.asarray(got["cache_pos"]),
+                          np.asarray(new["cache_pos"]))
+
+
+def test_trash_lane_isolation():
+    """Padded lanes (slot 0, zero block table) must never perturb a live
+    request — their writes land in the reserved trash block/slot."""
+    cfg = tiny("stablelm_1_6b")
+    lay = _layout(cfg)
+    al = kv_arena.BlockAllocator(lay)
+    bufs = kv_arena.init_paged(lay)
+    slot = al.alloc_slot()
+    al.ensure_tokens(slot, lay.capacity)
+    cache = _random_cache(cfg, lay.capacity, n_valid=5)
+    bufs = kv_arena.scatter_request(lay, bufs, cache, slot,
+                                    al.block_tables[slot])
+    # a trash-lane token write at every ring position
+    junk = _random_cache(cfg, lay.capacity, n_valid=lay.capacity, key=9)
+    zero_bt = jnp.zeros((1, lay.blocks_per_req), jnp.int32)
+    tslot = jnp.zeros((1,), jnp.int32)
+    for pos in range(lay.capacity):
+        bufs = kv_arena.scatter_token(lay, bufs, junk, tslot, zero_bt,
+                                      jnp.asarray([pos], jnp.int32))
+    got = kv_arena.gather_cache(lay, bufs, jnp.asarray([slot], jnp.int32),
+                                jnp.asarray(al.block_tables[[slot]]))
+    for key in cache:
+        assert np.array_equal(np.asarray(got[key]), np.asarray(cache[key])), \
+            f"{key}: trash-lane writes leaked into a live request"
+
+
+def test_paged_bytes_matches_layout():
+    lay = _layout(tiny("stablelm_1_6b"))
+    bufs = kv_arena.init_paged(lay)
+    total = sum(np.asarray(v).nbytes for v in bufs.values())
+    assert kv_arena.paged_bytes(lay) == total

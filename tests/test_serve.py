@@ -1,0 +1,217 @@
+"""Continuous-batching decode server (launch/serve.py): paged serve_step
+bitwise parity vs the contiguous cache, server-vs-static greedy equality,
+slot recycling, wedge detection, and the checkpoint->serve export path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core import adama, kv_arena
+from repro.launch.serve import DecodeServer, Request, run_static
+from repro.models import decode as dec
+from repro.models.model import init_params
+from repro.train import checkpoint as ckpt
+
+
+def _prompts(cfg, n, p, key=1):
+    return np.asarray(jax.random.randint(jax.random.key(key), (n, p), 0,
+                                         cfg.vocab_size), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# paged step parity (bitwise)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "mistral_nemo_12b"])
+def test_paged_step_bitwise_equals_contiguous(arch):
+    """Chunked-prefill + paged decode must be BITWISE equal to the same
+    sequence run through the contiguous cache — two requests live on
+    interleaved blocks so the gather is actually exercised."""
+    cfg = tiny(arch)
+    params = init_params(cfg, jax.random.key(0))
+    P, T = 7, 5
+    layout = dec.paged_layout(cfg, max_reqs=2, max_len=P + T, block=4)
+    bufs = kv_arena.init_paged(layout)
+    al = kv_arena.BlockAllocator(layout)
+    toks = _prompts(cfg, 2, P + T)
+    slots = [al.alloc_slot(), al.alloc_slot()]
+    for s in slots:     # alternating alloc order interleaves their blocks
+        al.ensure_tokens(s, layout.capacity)
+
+    for r, slot in enumerate(slots):
+        # contiguous reference at the SAME capacity as the paged ring
+        ref_cache = dec.init_cache_capacity(cfg, 1, layout.capacity)
+        srow = jnp.asarray([slot], jnp.int32)
+        btrow = jnp.asarray(al.block_tables[[slot]])
+        for t in range(P + T - 1):
+            tok = jnp.asarray(toks[r:r + 1, t:t + 1])
+            pos = jnp.full((1,), t, jnp.int32)
+            ref, ref_cache = dec.serve_step(cfg, params, ref_cache, tok, pos)
+            got, bufs = dec.serve_step_paged(cfg, layout, params, bufs,
+                                             srow, btrow, tok, pos)
+            assert np.array_equal(np.asarray(ref), np.asarray(got)), \
+                f"{arch} req {r} step {t}: paged logits diverge bitwise"
+
+
+def test_prefill_chunk_bitwise_equals_steps():
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    P = 6
+    layout = dec.paged_layout(cfg, max_reqs=1, max_len=P + 2, block=4)
+    al = kv_arena.BlockAllocator(layout)
+    slot = al.alloc_slot()
+    al.ensure_tokens(slot, layout.capacity)
+    toks = jnp.asarray(_prompts(cfg, 1, P))
+    srow = jnp.asarray([slot], jnp.int32)
+    btrow = jnp.asarray(al.block_tables[[slot]])
+
+    bufs_a = kv_arena.init_paged(layout)
+    last = None
+    for t in range(P):
+        last, bufs_a = dec.serve_step_paged(
+            cfg, layout, params, bufs_a, srow, btrow, toks[:, t:t + 1],
+            jnp.full((1,), t, jnp.int32))
+    bufs_b = kv_arena.init_paged(layout)
+    chunk_last, bufs_b = dec.serve_prefill_chunk(
+        cfg, layout, params, bufs_b, srow, btrow, toks,
+        jnp.zeros((1,), jnp.int32))
+    assert np.array_equal(np.asarray(last), np.asarray(chunk_last))
+    for k in bufs_a:
+        assert np.array_equal(np.asarray(bufs_a[k]), np.asarray(bufs_b[k])), \
+            f"{k}: chunked prefill left different cache bytes"
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "rwkv6_7b"])
+def test_server_matches_static_greedy(arch):
+    cfg = tiny(arch)
+    params = init_params(cfg, jax.random.key(0))
+    B, P, G = 3, 9, 6
+    prompts = _prompts(cfg, B, P)
+    tokens, _ = run_static(cfg, params, {"tokens": jnp.asarray(prompts)},
+                           P, G)
+    srv = DecodeServer(cfg, params, max_len=P + G, width=B, block=8, chunk=4)
+    for i in range(B):
+        srv.submit(Request(i, prompts[i], G))
+    done = srv.run()
+    for i, r in enumerate(done):
+        assert r.out == tokens[i][:G].tolist(), \
+            f"{arch} req {i}: server diverged from static greedy"
+    assert srv.alloc.live_blocks == 0 and srv.alloc.free_slots == B
+    assert srv.budget_violations == 0
+
+
+def test_server_recycles_slots():
+    """More requests than slots: every request still matches its solo
+    static run, and the pool fully drains."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    N, P, G = 7, 5, 4
+    prompts = _prompts(cfg, N, P, key=2)
+    srv = DecodeServer(cfg, params, max_len=P + G, width=2, block=4, chunk=4)
+    for i in range(N):
+        srv.submit(Request(i, prompts[i], G))
+    done = srv.run()
+    assert [r.rid for r in done] == list(range(N))
+    for i in range(N):
+        t, _ = run_static(cfg, params,
+                          {"tokens": jnp.asarray(prompts[i:i + 1])}, P, G)
+        assert done[i].out == t[0][:G].tolist(), f"recycled req {i} diverged"
+    assert srv.alloc.live_blocks == 0 and srv.alloc.free_slots == 2
+    assert srv.alloc.peak_blocks <= srv.layout.n_blocks - 1
+    assert srv.budget_violations == 0
+
+
+def test_server_wedge_raises_not_hangs():
+    """A pool too small for even one request must raise OutOfBlocksError
+    (deterministic wedge detection), not loop forever."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    P, G = 9, 4
+    srv = DecodeServer(cfg, params, max_len=P + G, width=1, block=4,
+                       chunk=4, n_blocks=1)
+    srv.submit(Request(0, _prompts(cfg, 1, P)[0], G))
+    with pytest.raises(kv_arena.OutOfBlocksError, match="wedged"):
+        srv.run()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> serve export
+# ---------------------------------------------------------------------------
+
+
+def _trained_state(params, **kw):
+    """One real arena update so working params differ from init."""
+    state = adama.init_arena(params, **kw)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(3), p.shape, p.dtype),
+        params)
+    state = adama.begin_minibatch(state, 0.9, 0.999)
+    state = adama.accumulate(state, grads, 0.9, 0.999)
+    new_params, state = adama.finalize(params, state, lr=1e-2, beta1=0.9,
+                                       beta2=0.999)
+    return new_params, state
+
+
+def test_export_working_params_bitwise(tmp_path):
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    kw = dict(master_params=True, work_param_cache=True)
+    new_params, state = _trained_state(params, **kw)
+    ckpt.save(str(tmp_path), 3, {"params": new_params, "opt": state})
+
+    abstract = jax.eval_shape(
+        lambda: {"params": init_params(cfg, jax.random.key(0)),
+                 "opt": adama.init_arena(init_params(cfg, jax.random.key(0)),
+                                         **kw)})
+    exported = ckpt.export_working_params(str(tmp_path), None, abstract)
+    want = adama.working_params(state)
+    assert jax.tree.structure(exported) == jax.tree.structure(want)
+    for (ka, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(exported),
+                               jax.tree_util.tree_leaves_with_path(want)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"{jax.tree_util.keystr(ka)}: exported params differ from wp"
+
+
+def test_export_without_wp_uses_master(tmp_path):
+    """master-only checkpoints (no bf16 cache) export by casting the fp32
+    master region — the same bytes finalize would emit as working params."""
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    kw = dict(master_params=True)
+    _, state = _trained_state(params, **kw)
+    ckpt.save(str(tmp_path), 1, {"params": params, "opt": state})
+    abstract = jax.eval_shape(
+        lambda: {"params": init_params(cfg, jax.random.key(0)),
+                 "opt": adama.init_arena(init_params(cfg, jax.random.key(0)),
+                                         **kw)})
+    exported = ckpt.export_working_params(str(tmp_path), 1, abstract)
+    from repro.core import arena as arena_mod
+    master = state["p"]
+    want = arena_mod.unpack(master.data.astype(jnp.bfloat16), master.layout)
+    for a, b in zip(jax.tree.leaves(exported), jax.tree.leaves(want)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_export_refuses_without_master_region(tmp_path):
+    cfg = tiny("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))
+    _, state = _trained_state(params)   # plain arena: no "p" region
+    ckpt.save(str(tmp_path), 1, {"params": params, "opt": state})
+    abstract = jax.eval_shape(
+        lambda: {"params": init_params(cfg, jax.random.key(0)),
+                 "opt": adama.init_arena(init_params(cfg,
+                                                     jax.random.key(0)))})
+    with pytest.raises(ckpt.MissingMasterRegionError):
+        ckpt.export_working_params(str(tmp_path), 1, abstract)
+
+
+def test_export_no_checkpoint(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.export_working_params(str(tmp_path), None, {})
